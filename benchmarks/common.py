@@ -1,0 +1,63 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Every benchmark is scaled down from the paper (W-B=50+20 workers, 50-580k
+samples, 3000+ iterations) to CPU-friendly sizes (25+10 workers, 2k samples,
+600 iterations); the claims being validated are orderings between
+algorithms, which are scale-independent.  Each run reports
+``(us_per_step, final_optimality_gap, honest_variance)``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import RobustConfig, make_federated_step
+from repro.data import (covtype_like, ijcnn1_like, logreg_full_loss_and_opt,
+                        logreg_loss, partition)
+from repro.optim import get_optimizer
+
+WH, B = 25, 10          # honest / byzantine (paper: 50 / 20)
+STEPS = 600
+
+
+def build_problem(dataset: str, n: int = 2000, *, replicated: bool = False):
+    key = jax.random.PRNGKey(0)
+    if replicated:
+        # Fig. 5 setting: every worker holds the WHOLE dataset (delta^2 = 0);
+        # keep n modest so SAGA's table-refresh period (~J steps) stays
+        # within the benchmark budget.
+        n = min(n, 400)
+    data = ijcnn1_like(key, n) if dataset == "ijcnn1" else covtype_like(key, n)
+    loss = logreg_loss(0.01)
+    _, f_star = logreg_full_loss_and_opt(data, iters=4000, lr=0.5)
+    batch = {"a": data.x, "b": data.y}
+    mode = "replicated" if replicated else "iid"
+    wd = partition(batch, WH, mode=mode, seed=1)
+    return loss, batch, f_star, wd
+
+
+def run_algorithm(loss, wd, cfg: RobustConfig, lr: float, steps: int = STEPS):
+    opt = get_optimizer("sgd", lr)
+    init_fn, step_fn = make_federated_step(loss, wd, cfg, opt)
+    p = jax.tree_util.tree_leaves(wd)[0].shape[-1]
+    st = init_fn({"w": jnp.zeros((p,), jnp.float32)}, jax.random.PRNGKey(11))
+    jstep = jax.jit(step_fn)
+    st, metrics = jstep(st)  # compile
+    t0 = time.time()
+    for _ in range(steps - 1):
+        st, metrics = jstep(st)
+    jax.block_until_ready(st.params["w"])
+    us = (time.time() - t0) / (steps - 1) * 1e6
+    return st, metrics, us
+
+
+# (algorithm label, vr mode, lr key) -- the paper's three solvers.
+ALGOS = [("SGD", "sgd", 0.02), ("BSGD", "minibatch", 0.01), ("SAGA", "saga", 0.02)]
+ATTACKS = ["none", "gaussian", "sign_flip", "zero_gradient"]
+
+
+def emit(name: str, us: float, derived: float) -> None:
+    print(f"{name},{us:.1f},{derived:.6f}")

@@ -1,0 +1,23 @@
+"""Paper Fig. 3: SGD / BSGD / SAGA x {mean, geomed} x 4 attacks on
+IJCNN1-like data.  Derived metric = final optimality gap f(x)-f(x*)."""
+from repro.core import RobustConfig
+
+from benchmarks import common
+
+
+def main(dataset="ijcnn1", tag="fig3") -> None:
+    loss, batch, f_star, wd = common.build_problem(dataset)
+    for attack in common.ATTACKS:
+        for label, vr, lr in common.ALGOS:
+            for agg in ("mean", "geomed"):
+                cfg = RobustConfig(
+                    aggregator=agg, vr=vr, attack=attack,
+                    num_byzantine=0 if attack == "none" else common.B,
+                    minibatch_size=50)
+                st, metrics, us = common.run_algorithm(loss, wd, cfg, lr)
+                gap = float(loss(st.params, batch)) - f_star
+                common.emit(f"{tag}/{attack}/{label}-{agg}", us, gap)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Paper Fig. 4: same grid as Fig. 3 on COVTYPE-like data (p=54)."""
+from benchmarks import fig3_ijcnn1
+
+
+def main() -> None:
+    fig3_ijcnn1.main(dataset="covtype", tag="fig4")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Fig. 5: every honest worker holds the SAME dataset (outer variation
+delta^2 = 0).  Thm 1: Byrd-SAGA's asymptotic error vanishes; Thm 2:
+robust SGD/BSGD stay inner-variation limited."""
+from repro.core import RobustConfig
+
+from benchmarks import common
+
+
+def main() -> None:
+    loss, batch, f_star, wd = common.build_problem("ijcnn1", replicated=True)
+    for attack in common.ATTACKS:
+        for label, vr, lr in common.ALGOS:
+            cfg = RobustConfig(
+                aggregator="geomed", vr=vr, attack=attack,
+                num_byzantine=0 if attack == "none" else common.B,
+                minibatch_size=50)
+            st, metrics, us = common.run_algorithm(loss, wd, cfg, lr * 0.5,
+                                                   steps=800)
+            gap = float(loss(st.params, batch)) - f_star
+            common.emit(f"fig5/{attack}/{label}-geomed", us, gap)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Fig. 6: distributed SAGA with mean / geomed / median / Krum
+(+ our geomed_groups and trimmed_mean) under the 4 attacks."""
+from repro.core import RobustConfig
+
+from benchmarks import common
+
+AGGS = ["mean", "geomed", "median", "krum", "trimmed_mean", "geomed_groups"]
+
+
+def main() -> None:
+    loss, batch, f_star, wd = common.build_problem("ijcnn1")
+    for attack in common.ATTACKS:
+        b = 0 if attack == "none" else common.B
+        for agg in AGGS:
+            cfg = RobustConfig(aggregator=agg, vr="saga", attack=attack,
+                               num_byzantine=b, num_groups=5,
+                               trim=min(b, (common.WH + b) // 2 - 1) or 1)
+            st, metrics, us = common.run_algorithm(loss, wd, cfg, 0.02)
+            gap = float(loss(st.params, batch)) - f_star
+            common.emit(f"fig6/{attack}/SAGA-{agg}", us, gap)
+
+
+if __name__ == "__main__":
+    main()

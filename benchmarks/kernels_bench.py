@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-clock numbers characterize the *oracle-equivalence harness*, not TPU
+performance; the derived metric therefore reports the structural quantity
+that matters on TPU -- the arithmetic intensity (FLOPs per HBM byte) of the
+fused kernel vs its unfused reference, which determines the roofline
+position of the aggregation step.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    w, p = 32, 65536
+    z = jax.random.normal(key, (w, p))
+    y = jnp.mean(z, axis=0)
+
+    us = _time(ops.weiszfeld_step, z, y)
+    # Fused Weiszfeld pass: reads W*p once per sub-kernel (2 sweeps), writes p.
+    flops = 4 * w * p          # sub, mul, add (dist) + weighted sum
+    bytes_moved = (2 * w * p + 2 * p) * 4
+    print(f"kernel/weiszfeld_step/W{w}xP{p},{us:.1f},{flops/bytes_moved:.4f}")
+    us_ref = _time(jax.jit(ref.weiszfeld_step), z, y)
+    # Unfused reference: residual matrix materialized (3 extra W*p sweeps).
+    bytes_ref = (5 * w * p + 2 * p) * 4
+    print(f"kernel/weiszfeld_step_ref/W{w}xP{p},{us_ref:.1f},{flops/bytes_ref:.4f}")
+
+    j = 16
+    table = jax.random.normal(key, (j, p))
+    grad = jax.random.normal(key, (p,))
+    avg = jnp.mean(table, axis=0)
+    idx = jnp.asarray(3, jnp.int32)
+    us = _time(ops.saga_correct, grad, table, avg, idx)
+    flops = 4 * p
+    bytes_fused = 6 * p * 4          # read g, row, avg; write msg, avg, row
+    print(f"kernel/saga_correct/J{j}xP{p},{us:.1f},{flops/bytes_fused:.4f}")
+    us_ref = _time(jax.jit(lambda *a: ref.saga_correct(*a)), grad, table, avg, idx)
+    bytes_unfused = (6 * p + 2 * j * p) * 4  # + full-table scatter copy
+    print(f"kernel/saga_correct_ref/J{j}xP{p},{us_ref:.1f},{flops/bytes_unfused:.4f}")
+
+    us = _time(ops.coordinate_median, z)
+    print(f"kernel/coordinate_median/W{w}xP{p},{us:.1f},{(w*jnp.log2(w)*p)/(w*p*4+p*4):.4f}")
+
+
+if __name__ == "__main__":
+    main()

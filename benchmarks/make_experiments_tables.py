@@ -1,0 +1,89 @@
+"""Regenerate the EXPERIMENTS.md data tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables > experiments/roofline_tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+ARCH_ORDER = ["mamba2-130m", "qwen2-moe-a2.7b", "qwen2-7b", "nemotron-4-340b",
+              "whisper-tiny", "mixtral-8x22b", "jamba-v0.1-52b",
+              "mistral-large-123b", "command-r-plus-104b", "paligemma-3b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag_filter=None):
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        tag = parts[3] if len(parts) > 3 else ""
+        if (tag_filter or "") != tag:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        mesh = parts[2] if len(parts) > 2 else ("2x16x16" if r.get("multi_pod") else "16x16")
+        recs[(r["arch"], r["shape"], mesh)] = r
+    return recs
+
+
+def roofline_table(recs, mesh="16x16") -> list[str]:
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant "
+        "| GB/dev | useful-FLOP ratio | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | MISSING | | | |")
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | — | — | — | N/A ({r['skipped'][:40]}…) | | | |")
+                continue
+            ro = r["roofline"]
+            ratio = r.get("useful_flops_ratio") or 0
+            mem = r.get("memory", {}).get("total_per_device_gb", float("nan"))
+            lines.append(
+                "| {a} | {s} | {c:.2f} | {m:.2f} | {k:.2f} | **{d}** | {gb:.1f} | {ra:.2f} | {cs:.0f} |".format(
+                    a=arch, s=shape, c=ro["compute_s"] * 1e3,
+                    m=ro["memory_s"] * 1e3, k=ro["collective_s"] * 1e3,
+                    d=ro["dominant"].replace("_s", ""), gb=mem, ra=ratio,
+                    cs=r.get("compile_s", 0)))
+    return lines
+
+
+def multipod_table(recs) -> list[str]:
+    lines = ["| arch | shape | lower+compile s | GB/dev | collective GB/dev | status |",
+             "|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, "2x16x16"))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | MISSING |")
+            elif "skipped" in r:
+                lines.append(f"| {arch} | {shape} | — | — | — | N/A (skip) |")
+            else:
+                mem = r.get("memory", {}).get("total_per_device_gb", float("nan"))
+                cb = r.get("collectives", {}).get("total", 0) / 1e9
+                lines.append(
+                    f"| {arch} | {shape} | {r.get('lower_s',0)+r.get('compile_s',0):.0f} "
+                    f"| {mem:.1f} | {cb:.2f} | compiled |")
+    return lines
+
+
+def main() -> None:
+    recs = load()
+    print("### Single-pod (16x16, 256 chips) baseline roofline\n")
+    print("\n".join(roofline_table(recs)))
+    print("\n### Multi-pod (2x16x16, 512 chips) dry-run\n")
+    print("\n".join(multipod_table(recs)))
+
+
+if __name__ == "__main__":
+    main()

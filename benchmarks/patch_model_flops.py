@@ -1,0 +1,59 @@
+"""Re-derive model_flops / params / useful-FLOP ratio for existing dry-run
+JSONs (fixes an int32-overflow in early sweeps without recompiling).
+
+    PYTHONPATH=src python -m benchmarks.patch_model_flops
+"""
+import glob
+import json
+import math
+import os
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.models.api import build_model
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def model_flops(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = model.param_structs()
+    n_total = sum(math.prod(p.shape) for p in jax.tree_util.tree_leaves(params))
+    n_active = n_total
+    if cfg.num_experts:
+        pat, periods = cfg.resolve_pattern()
+        moe_blocks = sum(1 for b in pat if b.moe) * periods
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        n_active = n_total - moe_blocks * (cfg.num_experts - cfg.top_k) * per_expert
+    shape = SHAPES[shape_name]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_active * tokens, n_total, n_active
+
+
+def main() -> None:
+    cache = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if "skipped" in r:
+            continue
+        key = (r["arch"], r["shape"])
+        if key not in cache:
+            cache[key] = model_flops(*key)
+        mf, n_tot, n_act = cache[key]
+        r["model_flops_total"] = mf
+        r["params_total"] = n_tot
+        r["params_active"] = n_act
+        hw = r.get("flops_per_device", 0.0) * r.get("chips", 1)
+        r["useful_flops_ratio"] = mf / hw if hw else None
+        with open(path, "w") as f:
+            json.dump(r, f, indent=1)
+        print(f"patched {os.path.basename(path)}: N={n_tot/1e9:.2f}B "
+              f"N_act={n_act/1e9:.2f}B ratio={r['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

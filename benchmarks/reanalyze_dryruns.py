@@ -1,0 +1,38 @@
+"""Recompute roofline terms for existing dry-run JSONs from the analytic
+cost model (and reparse collectives from archived HLO when present) WITHOUT
+recompiling.
+
+    PYTHONPATH=src python -m benchmarks.reanalyze_dryruns
+"""
+import glob
+import gzip
+import json
+import os
+
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import attach_roofline
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def main() -> None:
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if "skipped" in r:
+            continue
+        hlo = path[:-5] + ".hlo.gz"
+        if os.path.exists(hlo):
+            with gzip.open(hlo, "rt") as hf:
+                r["collectives"] = hlo_analysis.collective_bytes(hf.read())
+        attach_roofline(r)
+        with open(path, "w") as f:
+            json.dump(r, f, indent=1)
+        ro = r["roofline"]
+        print(f"{os.path.basename(path)[:-5]:58s} "
+              f"c={ro['compute_s']*1e3:9.2f}ms m={ro['memory_s']*1e3:9.2f}ms "
+              f"k={ro['collective_s']*1e3:9.2f}ms dom={ro['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

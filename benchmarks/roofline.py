@@ -1,0 +1,63 @@
+"""Roofline report: reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits per-(arch x shape x mesh) the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and memory per device.
+
+Derived metric in the run.py CSV = dominant-term seconds.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r) -> str:
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | - | SKIP: {r['skipped']} "
+                "| | | | | |")
+    ro = r["roofline"]
+    mf = r.get("model_flops_total")
+    hw = r.get("flops_per_device", 0) * r.get("chips", 1)
+    ratio = (mf / hw) if (mf and hw) else 0.0
+    mem = r.get("memory", {}).get("total_per_device_gb", float("nan"))
+    return ("| {arch} | {shape} | {mesh} | {c:.3f} | {m:.3f} | {k:.3f} | "
+            "{dom} | {mem:.1f} | {ratio:.2f} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        c=ro["compute_s"] * 1e3, m=ro["memory_s"] * 1e3,
+        k=ro["collective_s"] * 1e3, dom=ro["dominant"].replace("_s", ""),
+        mem=mem, ratio=ratio)
+
+
+def table(recs) -> str:
+    head = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+            "| dominant | GB/dev | useful-FLOP ratio |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    return "\n".join([head] + [fmt_row(r) for r in recs])
+
+
+def main() -> None:
+    recs = load_records()
+    if not recs:
+        print("roofline/no-artifacts,0.0,0.0")
+        print("# run: PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes")
+        return
+    for r in recs:
+        if "skipped" in r:
+            continue
+        dom = r["roofline"][r["roofline"]["dominant"]]
+        tag = "mp" if r.get("multi_pod") else "sp"
+        print(f"roofline/{r['arch']}/{r['shape']}/{tag},{r.get('compile_s',0)*1e6:.0f},{dom:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,table1] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = optimality gap for
+the figure benchmarks, accuracy for Table I, dominant roofline seconds for
+the roofline report, arithmetic intensity for kernels).
+"""
+import argparse
+import sys
+import time
+
+ALL = ["fig3", "fig4", "fig5", "fig6", "table1", "ablation", "kernels", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help=f"comma-separated subset of {ALL}")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slower paper-figure grids (fig4, table1)")
+    args = ap.parse_args()
+    selected = args.only.split(",") if args.only else list(ALL)
+    if args.fast:
+        selected = [s for s in selected if s not in ("fig4", "table1")]
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in selected:
+        t1 = time.time()
+        if name == "fig3":
+            from benchmarks import fig3_ijcnn1
+            fig3_ijcnn1.main()
+        elif name == "fig4":
+            from benchmarks import fig4_covtype
+            fig4_covtype.main()
+        elif name == "fig5":
+            from benchmarks import fig5_zero_outer
+            fig5_zero_outer.main()
+        elif name == "fig6":
+            from benchmarks import fig6_aggregators
+            fig6_aggregators.main()
+        elif name == "table1":
+            from benchmarks import table1_nn
+            table1_nn.main()
+        elif name == "ablation":
+            from benchmarks import ablation_byzantine
+            ablation_byzantine.main()
+        elif name == "kernels":
+            from benchmarks import kernels_bench
+            kernels_bench.main()
+        elif name == "roofline":
+            from benchmarks import roofline
+            roofline.main()
+        else:
+            print(f"# unknown benchmark {name}", file=sys.stderr)
+        print(f"# {name} done in {time.time()-t1:.1f}s", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

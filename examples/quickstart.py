@@ -1,0 +1,51 @@
+"""Quickstart: Byrd-SAGA on l2-regularized logistic regression under a
+sign-flipping Byzantine attack (the paper's core experiment, Sec. V-A).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Expected: mean aggregation collapses under attack; Byrd-SAGA (geomed)
+converges to a small optimality gap; robust SGD converges to a larger one
+(Thm 1 vs Thm 2).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import RobustConfig, make_federated_step
+from repro.data import ijcnn1_like, logreg_full_loss_and_opt, logreg_loss, partition
+from repro.optim import get_optimizer
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    data = ijcnn1_like(key, n=2000)
+    loss = logreg_loss(0.01)
+    _, f_star = logreg_full_loss_and_opt(data)
+    batch = {"a": data.x, "b": data.y}
+    honest, byzantine = 25, 10
+    worker_data = partition(batch, honest, seed=1)
+    print(f"{honest} honest + {byzantine} Byzantine workers, "
+          f"J={worker_data['a'].shape[1]} samples each, sign-flip attack\n")
+
+    runs = [
+        ("Byrd-SAGA   (SAGA + geomed)", "saga", "geomed", 0.02),
+        ("robust SGD  (SGD + geomed)", "sgd", "geomed", 0.02),
+        ("plain SAGA  (SAGA + mean)", "saga", "mean", 0.02),
+    ]
+    for label, vr, agg, lr in runs:
+        cfg = RobustConfig(aggregator=agg, vr=vr, attack="sign_flip",
+                           num_byzantine=byzantine)
+        opt = get_optimizer("sgd", lr)
+        init_fn, step_fn = make_federated_step(loss, worker_data, cfg, opt)
+        st = init_fn({"w": jnp.zeros((22,), jnp.float32)}, jax.random.PRNGKey(1))
+        jstep = jax.jit(step_fn)
+        for k in range(1200):
+            st, metrics = jstep(st)
+            if (k + 1) % 400 == 0:
+                gap = float(loss(st.params, batch)) - f_star
+                print(f"  {label}  step {k+1:4d}  gap={gap:.5f}  "
+                      f"honest-var={float(metrics['honest_variance']):.2e}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

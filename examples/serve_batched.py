@@ -1,0 +1,72 @@
+"""End-to-end serving driver: the FULL mamba2-130m config (24L, d=768,
+130M params — the real assigned architecture, small enough for CPU) serving
+a batch of requests: prefill the prompts, then decode autoregressively with
+the O(1) SSM state cache.
+
+    PYTHONPATH=src python examples/serve_batched.py --batch 4 --prompt-len 64 \\
+        --decode-tokens 48
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.api import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-tokens", type=int, default=48)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-sized model instead of the full 130M")
+    args = ap.parse_args()
+
+    cfg = get_config("mamba2-130m")
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg, remat=False, q_chunk=64, kv_chunk=64)
+    print(f"initializing {cfg.name} ({'reduced' if args.reduced else 'full'})...")
+    t0 = time.time()
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"  {n/1e6:.1f}M params in {time.time()-t0:.1f}s")
+
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    t0 = time.time()
+    logits, cache = jax.jit(model.prefill)(params, {"tokens": prompts})
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+    print(f"prefill: {args.batch} x {args.prompt_len} tokens in {dt:.2f}s "
+          f"({args.batch*args.prompt_len/dt:.0f} tok/s, incl. compile)")
+
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    # SSM decode: position argument is unused by mamba (stateless in pos),
+    # cache is O(1) per request regardless of context length.
+    logits, cache = decode(params, cache, tok, jnp.asarray(args.prompt_len, jnp.int32))
+    jax.block_until_ready(logits)  # compile
+    t0 = time.time()
+    for i in range(args.decode_tokens - 1):
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+        logits, cache = decode(params, cache, tok,
+                               jnp.asarray(args.prompt_len + 1 + i, jnp.int32))
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+    total = args.batch * (args.decode_tokens - 1)
+    print(f"decode: {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s, "
+          f"{dt/(args.decode_tokens-1)*1e3:.0f} ms/step for batch {args.batch})")
+    toks = jnp.concatenate(generated, axis=1)
+    for b in range(min(args.batch, 2)):
+        print(f"  request {b}: {toks[b, :12].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""End-to-end Byzantine-robust LM training: a ~100M-parameter decoder-only
+transformer trained for a few hundred steps across W simulated workers with
+SAGA-corrected gradients + geometric-median aggregation, while B workers
+mount a sign-flip attack.
+
+    # full ~100M model (slow on CPU; use --preset small for a quick run)
+    PYTHONPATH=src python examples/train_robust_lm.py --preset 100m --steps 300
+
+    # CPU-quick variant (~8M params, ~2 min)
+    PYTHONPATH=src python examples/train_robust_lm.py --preset small --steps 200
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import RobustConfig
+from repro.core.attacks import apply_attack_stacked
+from repro.core.aggregators import get_aggregator
+from repro.core.saga import saga_correct_scatter, saga_init_zeros
+from repro.models.api import build_model
+from repro.optim import apply_updates, get_optimizer
+
+PRESETS = {
+    # ~103M params: 12L, d=768, untied 32k vocab.
+    "100m": ModelConfig(name="robust-lm-100m", family="dense", num_layers=12,
+                        d_model=768, num_heads=12, num_kv_heads=12, d_ff=2048,
+                        vocab_size=32000, param_dtype="float32",
+                        tie_embeddings=True),
+    # ~8M params for CPU-quick runs.
+    "small": ModelConfig(name="robust-lm-small", family="dense", num_layers=4,
+                         d_model=256, num_heads=4, num_kv_heads=4, d_ff=1024,
+                         vocab_size=8000, param_dtype="float32",
+                         tie_embeddings=True),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--byzantine", type=int, default=2)
+    ap.add_argument("--attack", default="sign_flip")
+    ap.add_argument("--aggregator", default="geomed")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--per-worker-batch", type=int, default=2)
+    ap.add_argument("--saga-samples", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    model = build_model(cfg, remat=False, q_chunk=args.seq, kv_chunk=args.seq,
+                        loss_chunk=128)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params | {args.workers} workers "
+          f"({args.byzantine} Byzantine, {args.attack}) | agg={args.aggregator} "
+          f"| SAGA J={args.saga_samples}")
+
+    robust = RobustConfig(aggregator=args.aggregator, vr="saga",
+                          attack=args.attack, num_byzantine=args.byzantine,
+                          weiszfeld_iters=16)
+    aggregate = robust.aggregator_fn()
+    attack_cfg = robust.attack_config()
+    opt = get_optimizer("adamw", args.lr)
+
+    # Fixed per-worker corpora (the finite-sum setting: J batches per worker).
+    key = jax.random.PRNGKey(1)
+    corpus = jax.random.randint(
+        key, (args.workers, args.saga_samples, args.per_worker_batch,
+              args.seq + 1), 0, cfg.vocab_size, jnp.int32)
+
+    def worker_loss(p, toks):
+        return model.loss(p, {"tokens": toks[..., :-1], "labels": toks[..., 1:]})
+
+    saga = saga_init_zeros(params, args.workers, args.saga_samples)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, saga, key, i):
+        k1, k2 = jax.random.split(key)
+        idx = jax.random.randint(k1, (args.workers,), 0, args.saga_samples)
+        batches = jnp.take_along_axis(
+            corpus, idx[:, None, None, None], axis=1)[:, 0]
+        losses, grads = jax.vmap(jax.value_and_grad(worker_loss),
+                                 in_axes=(None, 0))(params, batches)
+        msgs, saga = saga_correct_scatter(saga, grads, idx)
+        msgs = apply_attack_stacked(attack_cfg, msgs, k2)
+        agg = aggregate(msgs)
+        updates, opt_state = opt.update(agg, opt_state, params, i)
+        params = apply_updates(params, updates)
+        return params, opt_state, saga, jnp.mean(losses)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        params, opt_state, saga, loss = step(
+            params, opt_state, saga, jax.random.fold_in(key, 100 + i), i)
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  honest-loss={float(loss):.4f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    print("done — loss should be dropping despite the Byzantine workers.")
+
+
+if __name__ == "__main__":
+    main()

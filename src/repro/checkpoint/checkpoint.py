@@ -1,0 +1,124 @@
+"""Dependency-free pytree checkpointing (npz + JSON treedef).
+
+Saves any pytree of arrays (params, optimizer state, SAGA tables, step
+counters) to a single ``.npz`` with a JSON sidecar describing the tree
+structure, and restores it bit-exactly.  Supports atomic writes and a
+rolling ``keep`` window for periodic training checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: Pytree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":
+            # ml_dtypes (bfloat16 etc.) are void dtypes for np.savez; widen
+            # to float32 (exact for bf16/f16) and restore on load via `like`.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: Pytree) -> None:
+    """Atomically save a pytree to ``path`` (a .npz file)."""
+    flat = _flatten_with_paths(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)), suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, __treedef__=np.frombuffer(str(treedef).encode(), np.uint8),
+                 **flat)
+        # np.savez appends .npz to names without it.
+        src = tmp if tmp.endswith(".npz") else tmp + ".npz"
+        os.replace(src, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load(path: str, like: Pytree) -> Pytree:
+    """Restore into the structure of ``like`` (shapes/dtypes must match what
+    was saved; ``like`` may be a pytree of arrays or ShapeDtypeStructs)."""
+    with np.load(path) as data:
+        flat_like = _flatten_with_paths_struct(like)
+        out = {}
+        for key, proto in flat_like.items():
+            if key not in data:
+                raise KeyError(f"checkpoint {path} missing leaf {key!r}")
+            out[key] = jnp.asarray(data[key]).astype(proto.dtype)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten_with_paths_struct(like).keys())
+    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in keys])
+
+
+def _flatten_with_paths_struct(tree: Pytree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class CheckpointManager:
+    """Rolling checkpoint directory: ``step_000123.npz``, keep last N."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}.npz")
+
+    def save(self, step: int, tree: Pytree) -> str:
+        p = self._path(step)
+        save(p, tree)
+        self._gc()
+        return p
+
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(self.all_steps())
+        return steps[-1] if steps else None
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)\.npz", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def restore(self, step: int, like: Pytree) -> Pytree:
+        return load(self._path(step), like)
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            os.unlink(self._path(s))

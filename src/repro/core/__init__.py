@@ -1,0 +1,22 @@
+"""Byrd-SAGA core: robust aggregation + variance reduction + attacks."""
+from repro.core.aggregators import (
+    AGGREGATOR_NAMES,
+    geomed_agg,
+    geomed_groups_agg,
+    get_aggregator,
+    krum_agg,
+    mean_agg,
+    median_agg,
+    trimmed_mean_agg,
+)
+from repro.core.attacks import ATTACK_NAMES, AttackConfig, apply_attack
+from repro.core.geomed import geomed_objective, weiszfeld, weiszfeld_pytree, weiszfeld_sharded
+from repro.core.robust_step import (
+    FederatedState,
+    RobustConfig,
+    distributed_aggregate,
+    distributed_attack,
+    make_federated_step,
+    sharded_aggregate,
+)
+from repro.core.saga import SagaState, saga_correct, saga_correct_scatter, saga_init, saga_init_zeros

@@ -1,0 +1,142 @@
+"""Byzantine attack models (paper Sec. V + two stronger literature attacks).
+
+An attack maps the honest workers' messages (stacked pytree, leading axis
+W_h) to the full message set (leading axis W = W_h + B) by appending B
+malicious rows.  Attackers are assumed omniscient and colluding (they see
+the honest messages), which is the paper's threat model.
+
+Paper attacks (Sec. V):
+
+* ``gaussian``      -- N(mean(honest), 30 I) per coordinate.
+* ``sign_flip``     -- u * mean(honest) with u = -3.
+* ``zero_gradient`` -- -(1/B) sum(honest): makes the *mean* of all W messages
+                       exactly zero, stalling mean-aggregated training.
+
+Beyond-paper attacks (used to stress the aggregators harder):
+
+* ``alie``          -- "A Little Is Enough" (Baruch et al. 2019):
+                       mean + z * std per coordinate, staying inside the
+                       honest cloud to evade norm-based defenses.
+* ``ipm``           -- inner-product manipulation (Fall of Empires [20]):
+                       -eps * mean(honest), a negatively-aligned small
+                       perturbation.
+* ``none``          -- no Byzantine rows appended (W = W_h).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Attack = Callable[[Pytree, jax.Array], Pytree]  # (honest_stacked, key) -> full_stacked
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    name: str = "none"
+    num_byzantine: int = 0
+    # Attack-specific knobs (paper values as defaults).
+    gaussian_variance: float = 30.0
+    sign_flip_magnitude: float = -3.0
+    alie_z: float = 1.0
+    ipm_eps: float = 0.5
+
+
+def _honest_mean(honest: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0), honest)
+
+
+def _append(honest: Pytree, byz: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda h, b: jnp.concatenate([h, b.astype(h.dtype)], axis=0), honest, byz
+    )
+
+
+def _broadcast_rows(tree: Pytree, b: int) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (b,) + x.shape), tree
+    )
+
+
+def gaussian_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
+    mean = _honest_mean(honest)
+    std = jnp.sqrt(cfg.gaussian_variance)
+    leaves, treedef = jax.tree_util.tree_flatten(mean)
+    keys = jax.random.split(key, len(leaves))
+    byz = [
+        m[None] + std * jax.random.normal(k, (cfg.num_byzantine,) + m.shape, jnp.float32).astype(m.dtype)
+        for m, k in zip(leaves, keys)
+    ]
+    return _append(honest, jax.tree_util.tree_unflatten(treedef, byz))
+
+
+def sign_flip_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
+    del key
+    mean = _honest_mean(honest)
+    byz = jax.tree_util.tree_map(lambda m: cfg.sign_flip_magnitude * m, mean)
+    return _append(honest, _broadcast_rows(byz, cfg.num_byzantine))
+
+
+def zero_gradient_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
+    del key
+    # m_byz = -(1/B) * sum_honest  =>  sum over all W messages == 0.
+    byz = jax.tree_util.tree_map(
+        lambda z: -jnp.sum(z, axis=0) / cfg.num_byzantine, honest
+    )
+    return _append(honest, _broadcast_rows(byz, cfg.num_byzantine))
+
+
+def alie_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
+    del key
+
+    def stats(z):
+        return jnp.mean(z, axis=0) + cfg.alie_z * jnp.std(z, axis=0)
+
+    byz = jax.tree_util.tree_map(stats, honest)
+    return _append(honest, _broadcast_rows(byz, cfg.num_byzantine))
+
+
+def ipm_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
+    del key
+    byz = jax.tree_util.tree_map(lambda m: -cfg.ipm_eps * m, _honest_mean(honest))
+    return _append(honest, _broadcast_rows(byz, cfg.num_byzantine))
+
+
+_ATTACKS = {
+    "gaussian": gaussian_attack,
+    "sign_flip": sign_flip_attack,
+    "zero_gradient": zero_gradient_attack,
+    "alie": alie_attack,
+    "ipm": ipm_attack,
+}
+
+ATTACK_NAMES = ("none",) + tuple(_ATTACKS)
+
+
+def apply_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
+    """Return the full W-message set seen by the master."""
+    if cfg.name == "none" or cfg.num_byzantine == 0:
+        return honest
+    if cfg.name not in _ATTACKS:
+        raise ValueError(f"unknown attack {cfg.name!r}")
+    return _ATTACKS[cfg.name](cfg, honest, key)
+
+
+def apply_attack_stacked(cfg: AttackConfig, msgs: Pytree, key: jax.Array) -> Pytree:
+    """Variant for the distributed data-parallel path: ``msgs`` holds ALL W
+    workers' messages stacked (leading axis W); the first B rows are
+    *replaced* by the attack (their honest compute is discarded), leaving
+    W - B honest rows.  Pure jnp -- usable under jit with the worker axis
+    sharded across the mesh."""
+    if cfg.name == "none" or cfg.num_byzantine == 0:
+        return msgs
+    b = cfg.num_byzantine
+    honest = jax.tree_util.tree_map(lambda z: z[b:], msgs)
+    full = apply_attack(cfg, honest, key)  # honest rows then B byz rows
+    # Reorder: byzantine rows first (mask-replacement layout).
+    return jax.tree_util.tree_map(
+        lambda z: jnp.concatenate([z[-b:], z[:-b]], axis=0), full)

@@ -1,0 +1,366 @@
+"""Composable Byzantine-robust training steps (paper Alg. 1 and baselines).
+
+Two execution paths share the same math:
+
+* :func:`make_federated_step` -- single-host simulation of the full
+  federation: W_h honest workers are vmapped, B Byzantine messages are
+  injected by an attack model, the master aggregates with a pluggable rule
+  and applies the update.  This is the path used to reproduce every figure/
+  table of the paper exactly (CPU-scale, finite-sum losses).
+
+* :func:`distributed_aggregate` / :func:`sharded_aggregate` -- the
+  aggregation step for the multi-device path, called inside ``shard_map``
+  where each index of the mesh worker axes is one worker.  ``gather`` mode is
+  the paper-faithful master (all_gather + replicated Weiszfeld); ``sharded``
+  mode is the beyond-paper distributed Weiszfeld (all_to_all coordinate
+  resharding, psum'd norms -- see DESIGN.md Sec. 2).
+
+Variance-reduction modes: ``sgd`` (one sample), ``minibatch`` (mean of a
+random minibatch), ``saga`` (corrected gradients + table, Alg. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators as agg_lib
+from repro.core import attacks as attack_lib
+from repro.core import saga as saga_lib
+from repro.core.geomed import weiszfeld_pytree
+from repro.optim import optimizers as optim_lib
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustConfig:
+    """Everything that defines the robust training loop of the paper."""
+
+    aggregator: str = "geomed"        # mean | median | geomed | geomed_groups | trimmed_mean | krum
+    vr: str = "saga"                  # sgd | minibatch | saga
+    attack: str = "none"
+    num_byzantine: int = 0
+    minibatch_size: int = 50          # paper's BSGD batch size
+    weiszfeld_iters: int = 64
+    weiszfeld_tol: float = 1e-6
+    num_groups: int = 4               # for geomed_groups
+    trim: int = 1                     # for trimmed_mean
+    clip_radius: float = 1.0          # for centered_clip
+    comm: str = "gather"              # gather | sharded (distributed path only)
+    # Attack knobs (paper defaults).
+    gaussian_variance: float = 30.0
+    sign_flip_magnitude: float = -3.0
+    alie_z: float = 1.0
+    ipm_eps: float = 0.5
+
+    def attack_config(self) -> attack_lib.AttackConfig:
+        return attack_lib.AttackConfig(
+            name=self.attack,
+            num_byzantine=self.num_byzantine,
+            gaussian_variance=self.gaussian_variance,
+            sign_flip_magnitude=self.sign_flip_magnitude,
+            alie_z=self.alie_z,
+            ipm_eps=self.ipm_eps,
+        )
+
+    def aggregator_fn(self) -> agg_lib.Aggregator:
+        return agg_lib.get_aggregator(
+            self.aggregator,
+            max_iters=self.weiszfeld_iters,
+            tol=self.weiszfeld_tol,
+            num_groups=self.num_groups,
+            trim=self.trim,
+            num_byzantine=self.num_byzantine,
+            clip_radius=self.clip_radius,
+        )
+
+
+class FederatedState(NamedTuple):
+    params: Pytree
+    opt_state: Pytree
+    saga: Optional[saga_lib.SagaState]
+    step: jnp.ndarray
+    key: jax.Array
+
+
+def make_federated_step(
+    loss_fn: Callable[[Pytree, Pytree], jnp.ndarray],
+    worker_data: Pytree,
+    cfg: RobustConfig,
+    optimizer: optim_lib.Optimizer,
+):
+    """Build ``(init_fn, step_fn, metrics_keys)`` for the simulated federation.
+
+    ``loss_fn(params, batch)``: mean loss over a batch whose leaves have a
+    leading sample axis. ``worker_data``: leaves shaped (W_h, J, ...).
+    """
+    wh = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
+    j = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
+    grad_fn = jax.grad(loss_fn)
+    attack_cfg = cfg.attack_config()
+    aggregate = cfg.aggregator_fn()
+
+    def sample_batch(data_w, idx):
+        """Select samples ``idx`` (vector) of one worker -> batch pytree."""
+        return jax.tree_util.tree_map(lambda d: d[idx], data_w)
+
+    def per_worker_grad(params, data_w, idx):
+        return grad_fn(params, sample_batch(data_w, idx))
+
+    def init_fn(params, key) -> FederatedState:
+        opt_state = optimizer.init(params)
+        saga_state = None
+        if cfg.vr == "saga":
+            # Alg. 1 init: table[j] = f'_{w,j}(x^0) for all j.
+            def worker_tab(data_w):
+                return jax.vmap(
+                    lambda jj: grad_fn(params, sample_batch(data_w, jj[None]))
+                )(jnp.arange(j))
+            per_sample = jax.vmap(worker_tab)(worker_data)  # (W, J, ...)
+            saga_state = saga_lib.saga_init(per_sample)
+        return FederatedState(params, opt_state, saga_state,
+                              jnp.zeros((), jnp.int32), key)
+
+    def step_fn(state: FederatedState):
+        key, k_idx, k_attack = jax.random.split(state.key, 3)
+        params = state.params
+
+        if cfg.vr == "minibatch":
+            idx = jax.random.randint(k_idx, (wh, cfg.minibatch_size), 0, j)
+            honest = jax.vmap(functools.partial(per_worker_grad, params))(worker_data, idx)
+            saga_state = state.saga
+        else:
+            idx = jax.random.randint(k_idx, (wh,), 0, j)
+            honest = jax.vmap(
+                lambda d, i: per_worker_grad(params, d, i[None])
+            )(worker_data, idx)
+            if cfg.vr == "saga":
+                honest, saga_state = saga_lib.saga_correct_scatter(state.saga, honest, idx)
+            else:
+                saga_state = state.saga
+
+        # Honest-message variance (reported in the paper's figures, bottom rows).
+        hm = agg_lib.mean_agg(honest)
+        var = sum(
+            jnp.sum((z.astype(jnp.float32) - m.astype(jnp.float32)[None]) ** 2)
+            for z, m in zip(jax.tree_util.tree_leaves(honest), jax.tree_util.tree_leaves(hm))
+        ) / wh
+
+        msgs = attack_lib.apply_attack(attack_cfg, honest, k_attack)
+        agg = aggregate(msgs)
+        updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
+        params = optim_lib.apply_updates(params, updates)
+        new_state = FederatedState(params, opt_state, saga_state, state.step + 1, key)
+        metrics = {"honest_variance": var}
+        return new_state, metrics
+
+    return init_fn, step_fn
+
+
+# ---------------------------------------------------------------------------
+# Distributed aggregation (inside shard_map).  One worker per index of the
+# mesh worker axes; each worker's gradient leaves are local shards over the
+# model axes.
+# ---------------------------------------------------------------------------
+
+def _flatten_concat(tree: Pytree) -> tuple[jnp.ndarray, Callable[[jnp.ndarray], Pytree]]:
+    """Ravel a pytree into one fp32 vector + inverse (restoring dtypes)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(functools.reduce(lambda a, b: a * b, s, 1)) for s in shapes]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves]) if leaves else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(vec: jnp.ndarray) -> Pytree:
+        out, off = [], 0
+        for s, d, n in zip(shapes, dtypes, sizes):
+            out.append(vec[off : off + n].reshape(s).astype(d))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+def distributed_aggregate(
+    grads: Pytree,
+    cfg: RobustConfig,
+    *,
+    worker_axes: tuple[str, ...] = ("data",),
+    model_axes: tuple[str, ...] = ("model",),
+) -> Pytree:
+    """Paper-faithful ``gather`` master: all_gather every worker's (model-
+    sharded) gradient over the worker axes, then run the robust rule
+    redundantly on every device.  Collective volume: W * p_shard bytes
+    gathered per device -- the cost the Sec-Perf hillclimb attacks."""
+    axes = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    stacked = jax.tree_util.tree_map(
+        lambda g: jax.lax.all_gather(g, axes, axis=0, tiled=False), grads
+    )
+    # Multi-axis all_gather yields (W_total, ...) with axes collapsed.
+    stacked = jax.tree_util.tree_map(
+        lambda z: z.reshape((-1,) + z.shape[len(worker_axes):]) if len(worker_axes) > 1 else z,
+        stacked,
+    )
+    name = cfg.aggregator
+    if name == "mean":
+        return agg_lib.mean_agg(stacked)
+    if name == "median":
+        return agg_lib.median_agg(stacked)
+    if name == "trimmed_mean":
+        return agg_lib.trimmed_mean_agg(stacked, trim=cfg.trim)
+    if name in ("geomed", "geomed_groups"):
+        if name == "geomed_groups":
+            stacked = jax.tree_util.tree_map(
+                functools.partial(agg_lib.group_means, num_groups=cfg.num_groups),
+                stacked)
+        return weiszfeld_pytree(
+            stacked, max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+            axis_names=model_axes, sync_axes=worker_axes,
+        )
+    if name == "geomed_blockwise":
+        # Per-leaf norms: each parameter block aggregates independently
+        # (ZeRO-compatible; weaker per-block guarantee -- see aggregators).
+        return jax.tree_util.tree_map(
+            lambda z: weiszfeld_pytree(
+                z, max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+                axis_names=model_axes, sync_axes=worker_axes),
+            stacked)
+    if name == "krum":
+        return _distributed_krum(stacked, cfg, model_axes)
+    raise ValueError(f"unsupported distributed aggregator {name!r}")
+
+
+def _distributed_krum(stacked: Pytree, cfg: RobustConfig,
+                      model_axes: tuple[str, ...]) -> Pytree:
+    leaves = [z.reshape(z.shape[0], -1).astype(jnp.float32)
+              for z in jax.tree_util.tree_leaves(stacked)]
+    flat = jnp.concatenate(leaves, axis=-1)
+    sq = jnp.sum(flat ** 2, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)
+    for ax in model_axes:
+        d2 = jax.lax.psum(d2, ax)
+    w = d2.shape[0]
+    d2 = jnp.maximum(d2, 0.0) + jnp.diag(jnp.full((w,), jnp.inf, d2.dtype))
+    n_near = max(w - cfg.num_byzantine - 2, 1)
+    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :n_near], axis=1)
+    best = jnp.argmin(scores)
+    return jax.tree_util.tree_map(lambda z: z[best], stacked)
+
+
+def sharded_aggregate(
+    grads: Pytree,
+    cfg: RobustConfig,
+    *,
+    worker_axes: tuple[str, ...] = ("data",),
+    model_axes: tuple[str, ...] = ("model",),
+    num_workers: int,
+) -> Pytree:
+    """Beyond-paper ``sharded`` master (DESIGN.md Sec. 2, comm=sharded).
+
+    Instead of replicating the (W, p) message matrix, re-shard it by
+    coordinate with an ``all_to_all`` over the worker axes: every device ends
+    up with a distinct p_shard/W coordinate slice of all W messages, runs
+    Weiszfeld on its slice (full-vector norms restored by a psum of W floats
+    per iteration over worker+model axes), and the aggregated slices are
+    re-assembled with an all_gather.  Bytes moved per device drop from
+    O(W * p_shard) to O(2 * p_shard).
+
+    Only geomed (+ the coordinate-separable rules) are supported here;
+    Krum fundamentally needs pairwise full-vector products and stays on the
+    gather path.
+    """
+    w = num_workers
+    flat, unflatten = _flatten_concat(grads)
+    p = flat.shape[0]
+    pad = (-p) % w
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(w, -1)  # row r = my message's slice destined to worker r
+    axes = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    # After all_to_all: row r = worker r's slice for MY coordinate range.
+    z_local = jax.lax.all_to_all(chunks, axes, split_axis=0, concat_axis=0, tiled=False)
+    z_local = z_local.reshape(w, -1)
+
+    name = cfg.aggregator
+    if name == "mean":
+        slice_agg = jnp.mean(z_local, axis=0)
+    elif name == "median":
+        slice_agg = jnp.median(z_local, axis=0)
+    elif name == "trimmed_mean":
+        s = jnp.sort(z_local, axis=0)
+        slice_agg = jnp.mean(s[cfg.trim : w - cfg.trim], axis=0)
+    elif name in ("geomed", "geomed_groups"):
+        zz = z_local
+        if name == "geomed_groups":
+            zz = agg_lib.group_means(zz, cfg.num_groups)
+        slice_agg = weiszfeld_pytree(
+            zz, max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+            axis_names=tuple(worker_axes) + tuple(model_axes),
+        )
+    else:
+        raise ValueError(f"aggregator {name!r} unsupported in comm=sharded")
+
+    # Re-assemble the full (padded) vector on every worker.
+    full = jax.lax.all_gather(slice_agg, axes, axis=0, tiled=False).reshape(-1)
+    return unflatten(full[:p])
+
+
+def distributed_attack(
+    msg: Pytree,
+    cfg: RobustConfig,
+    *,
+    worker_axes: tuple[str, ...] = ("data",),
+    key: Optional[jax.Array] = None,
+) -> Pytree:
+    """Inject Byzantine behaviour inside ``shard_map``: workers with index
+    < num_byzantine replace their message per the attack model.  Honest
+    statistics are obtained with masked psums over the worker axes (the
+    paper's attackers are colluding/omniscient, so this leaks nothing that
+    the threat model doesn't already grant them)."""
+    if cfg.attack == "none" or cfg.num_byzantine == 0:
+        return msg
+    w = 1
+    for a in worker_axes:
+        w = w * jax.lax.axis_size(a)
+    wid = jax.lax.axis_index(tuple(worker_axes) if len(worker_axes) > 1 else worker_axes[0])
+    b = cfg.num_byzantine
+    wh = w - b
+    is_byz = wid < b
+
+    def masked_sum(x):
+        return jax.lax.psum(jnp.where(is_byz, 0.0, 1.0) * x.astype(jnp.float32),
+                            tuple(worker_axes))
+
+    honest_mean = jax.tree_util.tree_map(lambda x: masked_sum(x) / wh, msg)
+
+    name = cfg.attack
+    if name == "sign_flip":
+        byz = jax.tree_util.tree_map(lambda m: cfg.sign_flip_magnitude * m, honest_mean)
+    elif name == "zero_gradient":
+        byz = jax.tree_util.tree_map(lambda m: -(wh / b) * m, honest_mean)
+    elif name == "ipm":
+        byz = jax.tree_util.tree_map(lambda m: -cfg.ipm_eps * m, honest_mean)
+    elif name == "gaussian":
+        if key is None:
+            raise ValueError("gaussian attack needs a per-worker key")
+        std = jnp.sqrt(cfg.gaussian_variance)
+        leaves, treedef = jax.tree_util.tree_flatten(honest_mean)
+        keys = jax.random.split(jax.random.fold_in(key, wid), len(leaves))
+        byz = jax.tree_util.tree_unflatten(
+            treedef,
+            [m + std * jax.random.normal(k, m.shape, jnp.float32) for m, k in zip(leaves, keys)],
+        )
+    elif name == "alie":
+        sq_mean = jax.tree_util.tree_map(lambda x: masked_sum(x * x) / wh, msg)
+        byz = jax.tree_util.tree_map(
+            lambda m, s: m + cfg.alie_z * jnp.sqrt(jnp.maximum(s - m * m, 0.0)),
+            honest_mean, sq_mean)
+    else:
+        raise ValueError(f"unknown attack {name!r}")
+
+    return jax.tree_util.tree_map(
+        lambda orig, bad: jnp.where(is_byz, bad.astype(jnp.float32), orig.astype(jnp.float32)).astype(orig.dtype),
+        msg, byz)

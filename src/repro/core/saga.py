@@ -1,0 +1,144 @@
+"""SAGA variance reduction (per-worker gradient tables), paper Alg. 1.
+
+Each honest worker ``w`` keeps
+
+* ``table``: the most recent per-sample gradient ``f'_{w,j}(phi_{w,j})`` for
+  each of its J local samples (leaves shaped ``(J, *param_shape)``), and
+* ``avg``:   their running average ``(1/J) sum_j f'_{w,j}(phi_{w,j})``.
+
+Per step the worker draws ``i`` uniformly from ``{1..J}`` and sends the
+*corrected* stochastic gradient
+
+    m_w = f'_{w,i}(x) - table[i] + avg                      (Alg. 1)
+
+then performs the in-place bookkeeping
+
+    avg   <- avg + (f'_{w,i}(x) - table[i]) / J
+    table[i] <- f'_{w,i}(x)
+
+``m_w`` is an unbiased estimate of worker w's full local gradient (eq. (18))
+whose variance vanishes as the iterates converge -- which is exactly what
+makes the subsequent robust aggregation effective (Lemma 1 / Thm 1).
+
+The functions below operate on *stacked-worker* pytrees (leading axis W) so
+they vectorize the whole federation in one call, and equally work inside
+``shard_map`` where the worker axis is a mesh axis (W=1 locally).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class SagaState(NamedTuple):
+    """Per-worker SAGA memory, stacked over workers.
+
+    table leaves: ``(W, J, *shape)``; avg leaves: ``(W, *shape)``.
+    For the single-worker (shard_map) path, W == 1.
+    """
+
+    table: Pytree
+    avg: Pytree
+
+    @property
+    def num_samples(self) -> int:
+        return jax.tree_util.tree_leaves(self.table)[0].shape[1]
+
+
+def saga_init(per_sample_grads: Pytree) -> SagaState:
+    """Initialize from gradients of *all* J samples at x^0 (Alg. 1 init).
+
+    ``per_sample_grads`` leaves: (W, J, *shape).
+    """
+    avg = jax.tree_util.tree_map(lambda t: jnp.mean(t, axis=1), per_sample_grads)
+    return SagaState(table=per_sample_grads, avg=avg)
+
+
+def saga_init_zeros(params: Pytree, num_workers: int, num_samples: int,
+                    dtype=None) -> SagaState:
+    """Cold-start init with a zero table (practical variant: avoids the J
+    full-gradient passes at startup; the table warms up over the first
+    epoch).  Used at LLM scale where the init sweep is prohibitive."""
+
+    def zeros(p, extra):
+        d = dtype or p.dtype
+        return jnp.zeros((num_workers, *extra, *p.shape), d)
+
+    table = jax.tree_util.tree_map(lambda p: zeros(p, (num_samples,)), params)
+    avg = jax.tree_util.tree_map(lambda p: zeros(p, ()), params)
+    return SagaState(table=table, avg=avg)
+
+
+def saga_correct(
+    state: SagaState, grads: Pytree, sample_idx: jnp.ndarray
+) -> tuple[Pytree, SagaState]:
+    """Apply the SAGA correction and table update for every worker at once.
+
+    ``grads`` leaves: (W, *shape) -- fresh stochastic gradients f'_{w,i}(x^k).
+    ``sample_idx``: (W,) int32 -- each worker's drawn sample index i_w^k.
+
+    Returns ``(messages, new_state)`` where message leaves are (W, *shape).
+    """
+    idx = sample_idx
+
+    def correct(g, tab, avg):
+        # old = table[w, idx[w]] for each worker w.
+        old = jnp.take_along_axis(
+            tab, idx.reshape((-1, 1) + (1,) * (g.ndim - 1)).astype(jnp.int32), axis=1
+        )[:, 0]
+        old = old.astype(g.dtype)
+        msg = g - old + avg.astype(g.dtype)
+        return msg, old
+
+    msgs, olds = {}, {}
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_t = treedef.flatten_up_to(state.table)
+    flat_a = treedef.flatten_up_to(state.avg)
+    out_msgs, new_tabs, new_avgs = [], [], []
+    j = jax.tree_util.tree_leaves(state.table)[0].shape[1]
+    for g, tab, avg in zip(flat_g, flat_t, flat_a):
+        msg, old = correct(g, tab, avg)
+        out_msgs.append(msg)
+        new_avgs.append((avg + (g - old).astype(avg.dtype) / j).astype(avg.dtype))
+        # table[w, idx[w]] <- g[w]
+        w = g.shape[0]
+        onehot = jax.nn.one_hot(idx, tab.shape[1], dtype=tab.dtype)  # (W, J)
+        onehot = onehot.reshape(onehot.shape + (1,) * (g.ndim - 1))
+        new_tabs.append(tab * (1 - onehot) + onehot * g[:, None].astype(tab.dtype))
+    messages = jax.tree_util.tree_unflatten(treedef, out_msgs)
+    new_state = SagaState(
+        table=jax.tree_util.tree_unflatten(treedef, new_tabs),
+        avg=jax.tree_util.tree_unflatten(treedef, new_avgs),
+    )
+    return messages, new_state
+
+
+def saga_correct_scatter(
+    state: SagaState, grads: Pytree, sample_idx: jnp.ndarray
+) -> tuple[Pytree, SagaState]:
+    """Same semantics as :func:`saga_correct` but with scatter-based table
+    update (O(p) memory traffic instead of the O(J*p) one-hot multiply).
+    Preferred at scale; `saga_correct` is kept as the simple oracle."""
+    idx = sample_idx.astype(jnp.int32)
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_t = treedef.flatten_up_to(state.table)
+    flat_a = treedef.flatten_up_to(state.avg)
+    j = jax.tree_util.tree_leaves(state.table)[0].shape[1]
+    w_ids = jnp.arange(flat_g[0].shape[0], dtype=jnp.int32)
+    out_msgs, new_tabs, new_avgs = [], [], []
+    for g, tab, avg in zip(flat_g, flat_t, flat_a):
+        old = tab[w_ids, idx].astype(g.dtype)
+        out_msgs.append(g - old + avg.astype(g.dtype))
+        new_avgs.append((avg + (g - old).astype(avg.dtype) / j).astype(avg.dtype))
+        new_tabs.append(tab.at[w_ids, idx].set(g.astype(tab.dtype)))
+    return (
+        jax.tree_util.tree_unflatten(treedef, out_msgs),
+        SagaState(
+            table=jax.tree_util.tree_unflatten(treedef, new_tabs),
+            avg=jax.tree_util.tree_unflatten(treedef, new_avgs),
+        ),
+    )

@@ -1,0 +1,11 @@
+from repro.data.federated import partition
+from repro.data.synthetic import (
+    Dataset,
+    covtype_like,
+    ijcnn1_like,
+    logreg_dataset,
+    logreg_full_loss_and_opt,
+    logreg_loss,
+    mnist_like,
+    token_stream,
+)

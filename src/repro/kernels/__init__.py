@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's aggregation/VR hot spots.
+
+Modules: ``weiszfeld`` (geomed inner loop), ``saga_correct`` (fused table
+correct+update), ``robust_stats`` (coordinate median / trimmed mean);
+``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref

@@ -1,0 +1,119 @@
+"""Flash-attention Pallas TPU kernel (online softmax, O(S) memory).
+
+Not part of the paper's contribution (the paper's kernels are the
+aggregation sweeps), but the framework's attention hot spot: every dense/
+MoE/hybrid arch's train/prefill step is built on chunked attention, so a
+VMEM-tiled MXU kernel is the natural TPU lowering.
+
+Blocking: grid = (B*H, num_q_blocks, num_kv_blocks); TPU grid iteration is
+sequential over the last axis, so the (q-block)-indexed output tiles and the
+running max/denominator tiles persist across the kv-block sweep -- the
+classic flash accumulation expressed through revisited output blocks
+(no scratch buffers needed, works identically under interpret=True):
+
+    j == 0        : init  m = -inf, l = 0, o = 0
+    every j       : s = q k^T; m' = max(m, rowmax s); p = exp(s - m')
+                    o = o * exp(m - m') + p v;  l = l * exp(m - m') + rowsum p
+    j == last     : o /= l
+
+Causal masking is applied per (q-block, kv-block) tile; fully-masked tiles
+are skipped with ``pl.when`` (on TPU this prunes ~half the MXU work of a
+causal sweep).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  causal: bool, q_block: int, kv_block: int, seq_len: int,
+                  num_kv_blocks: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    if causal:
+        live = (i * q_block + q_block - 1) >= (j * kv_block)
+    else:
+        live = j >= 0  # always true (traced predicate)
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[0].astype(jnp.float32)            # (qb, hd)
+        k = k_ref[0].astype(jnp.float32)            # (kb, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = (q @ k.T) * (q.shape[-1] ** -0.5)       # (qb, kb)
+        qpos = i * q_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+        kpos = j * kv_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[0]
+        l_prev = l_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        o_ref[0] = o_ref[0] * corr[:, None] + p @ v
+        m_ref[0] = m_new
+        l_ref[0] = l_new
+
+    @pl.when(j == num_kv_blocks - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+def flash_attention_call(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         causal: bool = True, q_block: int = 128,
+                         kv_block: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """q/k/v: (BH, S, hd) with equal head counts (GQA repeat done by ops.py).
+    Returns (BH, S, hd) in fp32."""
+    bh, s, hd = q.shape
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, s)
+    nq = -(-s // q_block)
+    nk = -(-s // kv_block)
+    pad_q = nq * q_block - s
+    pad_k = nk * kv_block - s
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, q_block=q_block, kv_block=kv_block,
+        seq_len=s, num_kv_blocks=nk)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, q_block), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, q_block), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nq * q_block, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nq * q_block), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nq * q_block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o[:, :s]

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def partial_sqdist(z: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """z: (W, p), y: (p,) -> per-worker squared distances (W,)."""
+    d = z.astype(jnp.float32) - y.astype(jnp.float32)[None]
+    return jnp.sum(d * d, axis=-1)
+
+
+def weighted_sum(z: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """sum_i w[i] z[i] / sum(w); z: (W, p), w: (W,) -> (p,)."""
+    return (w.astype(jnp.float32) @ z.astype(jnp.float32)) / jnp.sum(w.astype(jnp.float32))
+
+
+def weiszfeld_step(z: jnp.ndarray, y: jnp.ndarray, floor: float = 1e-8) -> jnp.ndarray:
+    d = jnp.sqrt(partial_sqdist(z, y))
+    inv = 1.0 / jnp.maximum(d, floor)
+    return weighted_sum(z, inv)
+
+
+def geomed(z: jnp.ndarray, iters: int = 32) -> jnp.ndarray:
+    y = jnp.mean(z.astype(jnp.float32), axis=0)
+    for _ in range(iters):
+        y = weiszfeld_step(z, y)
+    return y.astype(z.dtype)
+
+
+def saga_correct(grad: jnp.ndarray, table: jnp.ndarray, avg: jnp.ndarray,
+                 idx: jnp.ndarray):
+    """grad: (p,), table: (J, p), avg: (p,), idx: scalar.
+    Returns (msg, new_avg, new_table)."""
+    j = table.shape[0]
+    old = table[idx].astype(jnp.float32)
+    g = grad.astype(jnp.float32)
+    msg = g - old + avg.astype(jnp.float32)
+    new_avg = avg.astype(jnp.float32) + (g - old) / j
+    new_table = table.at[idx].set(grad.astype(table.dtype))
+    return (msg.astype(grad.dtype), new_avg.astype(avg.dtype), new_table)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True) -> jnp.ndarray:
+    """Naive softmax attention oracle.  q/k/v: (BH, S, hd) -> (BH, S, hd)."""
+    bh, s, hd = q.shape
+    sc = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * (hd ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+
+
+def coordinate_median(z: jnp.ndarray) -> jnp.ndarray:
+    """z: (W, p) -> (p,) elementwise median."""
+    return jnp.median(z, axis=0).astype(z.dtype)
+
+
+def trimmed_mean(z: jnp.ndarray, trim: int) -> jnp.ndarray:
+    s = jnp.sort(z, axis=0)
+    w = z.shape[0]
+    return jnp.mean(s[trim : w - trim].astype(jnp.float32), axis=0).astype(z.dtype)

@@ -1,0 +1,64 @@
+"""Per-coordinate order statistics over the worker axis (median / trimmed
+mean), Pallas-tiled.
+
+The coordinate-wise rules of the paper's Fig. 6 comparison sort W values per
+coordinate.  W is small (tens), so each p-tile keeps the whole worker axis
+in VMEM and sorts along the sublane axis in-register; one HBM sweep total.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 512
+
+
+def _median_kernel(z_ref, out_ref, *, num_workers: int):
+    z = z_ref[...].astype(jnp.float32)       # (W, T)
+    s = jnp.sort(z, axis=0)
+    w = num_workers
+    if w % 2:
+        med = s[w // 2]
+    else:
+        med = 0.5 * (s[w // 2 - 1] + s[w // 2])
+    out_ref[...] = med[None].astype(out_ref.dtype)
+
+
+def coordinate_median_call(z: jnp.ndarray, *, tile: int = DEFAULT_TILE,
+                           interpret: bool = True) -> jnp.ndarray:
+    w, p = z.shape
+    assert p % tile == 0
+    out = pl.pallas_call(
+        functools.partial(_median_kernel, num_workers=w),
+        grid=(p // tile,),
+        in_specs=[pl.BlockSpec((w, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, p), z.dtype),
+        interpret=interpret,
+    )(z)
+    return out[0]
+
+
+def _trimmed_kernel(z_ref, out_ref, *, trim: int, num_workers: int):
+    z = z_ref[...].astype(jnp.float32)
+    s = jnp.sort(z, axis=0)
+    kept = s[trim : num_workers - trim]
+    out_ref[...] = jnp.mean(kept, axis=0)[None].astype(out_ref.dtype)
+
+
+def trimmed_mean_call(z: jnp.ndarray, trim: int, *, tile: int = DEFAULT_TILE,
+                      interpret: bool = True) -> jnp.ndarray:
+    w, p = z.shape
+    assert p % tile == 0 and 2 * trim < w
+    out = pl.pallas_call(
+        functools.partial(_trimmed_kernel, trim=trim, num_workers=w),
+        grid=(p // tile,),
+        in_specs=[pl.BlockSpec((w, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, p), z.dtype),
+        interpret=interpret,
+    )(z)
+    return out[0]

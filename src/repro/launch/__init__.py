@@ -1,0 +1,7 @@
+from repro.launch.mesh import (
+    axis_sizes,
+    make_host_mesh,
+    make_production_mesh,
+    num_workers,
+    worker_axes,
+)

@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first initialization).  Everything else follows.
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, record memory_analysis / cost_analysis / collective bytes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-130m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Artifacts: one JSON per (arch, shape, mesh) under experiments/dryrun/,
+consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.core.robust_step import RobustConfig
+from repro.launch import hlo_analysis
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_lib
+from repro.launch import steps as steps_lib
+from repro.models import api as model_api
+from repro.models.api import build_model, input_specs
+
+# Hardware constants (TPU v5e-class target).
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+# SAGA defaults at scale (DESIGN.md Sec. 4): table J per arch; 0 => Byrd-SGD.
+SAGA_SAMPLES = {
+    "mamba2-130m": 8,
+    "whisper-tiny": 8,
+    "paligemma-3b": 4,
+    "qwen2-moe-a2.7b": 2,
+}
+
+# long_500k applicability (DESIGN.md Sec. 5): whisper enc-dec is skipped.
+LONG_SKIP = {"whisper-tiny": "enc-dec with 448-token decoder context; 500k decode not meaningful"}
+# Dense/MoE/VLM full-attention archs run long_500k under a sliding window.
+NATIVE_LONG = {"mamba2-130m", "jamba-v0.1-52b", "mixtral-8x22b"}
+
+
+def robust_config(arch: str, overrides: dict | None = None) -> RobustConfig:
+    base = dict(aggregator="geomed", vr="saga" if SAGA_SAMPLES.get(arch) else "sgd",
+                attack="sign_flip", num_byzantine=2, comm="gather",
+                weiszfeld_iters=8, weiszfeld_tol=1e-6)
+    base.update(overrides or {})
+    base.pop("serve_fsdp", None)   # dry-run-only flag, not a RobustConfig field
+    return RobustConfig(**base)
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              robust_overrides: dict | None = None,
+              train_overrides: dict | None = None,
+              hlo_path: str | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    w = mesh_lib.num_workers(mesh)
+    szs = mesh_lib.axis_sizes(mesh)
+    chips = 1
+    for s in mesh.devices.shape:
+        chips *= s
+
+    if shape.kind == "decode" and shape.seq_len > 100_000:
+        if arch in LONG_SKIP:
+            return {"arch": arch, "shape": shape_name, "skipped": LONG_SKIP[arch]}
+
+    robust = robust_config(arch, robust_overrides)
+    train = TrainConfig(**(train_overrides or {}))
+    model = build_model(cfg, remat=train.remat, loss_chunk=256,
+                        q_chunk=512, kv_chunk=1024)
+
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "multi_pod": multi_pod, "chips": chips,
+        "robust": dataclasses.asdict(robust),
+        "step_kind": shape.kind,
+        "remat": train.remat,
+    }
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            step, sspecs, sstructs = steps_lib.make_train_step(
+                model, robust, train, mesh,
+                saga_num_samples=SAGA_SAMPLES.get(arch, 0) if robust.vr == "saga" else 0)
+            bspecs = shard_lib.batch_specs(cfg, shape, mesh)
+            bstructs = input_specs(cfg, shape, num_workers=w)
+            in_sh = (shard_lib.named(mesh, sspecs),
+                     shard_lib.named(mesh, bspecs),
+                     shard_lib.replicated(mesh))
+            out_sh = (shard_lib.named(mesh, sspecs),
+                      jax.tree_util.tree_map(lambda _: shard_lib.replicated(mesh),
+                                             {"loss": 0, "agg_norm": 0}))
+            fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = fn.lower(sstructs(), bstructs,
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+        elif shape.kind == "prefill":
+            step = steps_lib.make_prefill_step(model, mesh)
+            bspecs = shard_lib.batch_specs(cfg, shape, mesh)
+            bstructs = input_specs(cfg, shape)
+            pspecs = model.param_specs(szs)
+            fn = jax.jit(step, in_shardings=(shard_lib.named(mesh, pspecs),
+                                             shard_lib.named(mesh, bspecs)))
+            lowered = fn.lower(model.param_structs(), bstructs)
+        else:  # decode
+            window = None
+            if shape.seq_len > 100_000 and arch not in NATIVE_LONG and cfg.sliding_window is None:
+                window = cfg.long_context_window
+                record["window"] = window
+            step = steps_lib.make_serve_step(model, shape, mesh, window=window)
+            pspecs = model.param_specs(szs)
+            if (robust_overrides or {}).get("serve_fsdp"):
+                pspecs = shard_lib.fsdp_param_specs(pspecs, mesh,
+                                                    model.param_structs())
+                record["serve_fsdp"] = True
+            cspecs = shard_lib.cache_specs_for(cfg, shape, mesh)
+            bspecs = shard_lib.batch_specs(cfg, shape, mesh)
+            cache_structs = model.cache_structs(shape.global_batch, shape.seq_len)
+            bstructs = input_specs(cfg, shape)
+            fn = jax.jit(step, in_shardings=(
+                shard_lib.named(mesh, pspecs),
+                shard_lib.named(mesh, cspecs),
+                shard_lib.named(mesh, bspecs["tokens"]),
+                shard_lib.replicated(mesh)))
+            lowered = fn.lower(model.param_structs(), cache_structs,
+                               bstructs["tokens"],
+                               jax.ShapeDtypeStruct((), jnp.int32))
+
+        record["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            record["memory"] = {
+                "argument_gb": getattr(mem, "argument_size_in_bytes", 0) / 1e9,
+                "output_gb": getattr(mem, "output_size_in_bytes", 0) / 1e9,
+                "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 1e9,
+                "alias_gb": getattr(mem, "alias_size_in_bytes", 0) / 1e9,
+            }
+            record["memory"]["total_per_device_gb"] = (
+                record["memory"]["argument_gb"] + record["memory"]["temp_gb"]
+                + record["memory"]["output_gb"] - record["memory"]["alias_gb"])
+        try:
+            ca = compiled.cost_analysis()
+            record["flops_per_device"] = float(ca.get("flops", 0.0))
+            record["bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
+        except Exception as e:  # pragma: no cover
+            record["cost_analysis_error"] = str(e)
+        txt = compiled.as_text()
+        record["collectives"] = hlo_analysis.collective_bytes(txt)
+        record["hlo_chars"] = len(txt)
+        if hlo_path:
+            import gzip
+            with gzip.open(hlo_path, "wt") as hf:
+                hf.write(txt)
+
+    attach_roofline(record)
+    return record
+
+
+def attach_roofline(record: dict) -> None:
+    """Compute roofline terms from the ANALYTIC cost model (XLA CPU
+    cost_analysis undercounts while-loop bodies -- see launch/analytic.py);
+    the HLO-derived numbers stay in the record as a structural cross-check
+    (`hlo_*` fields)."""
+    from repro.launch import analytic
+
+    cfg = get_config(record["arch"])
+    shape = SHAPES[record["shape"]]
+    robust = RobustConfig(**{k: v for k, v in record.get("robust", {}).items()})
+    chips = record.get("chips", 256)
+    an = analytic.analytic_costs(
+        cfg, shape, chips=chips, model_shards=16,
+        num_workers=chips // 16,
+        robust=robust if shape.kind == "train" else None,
+        saga_num_samples=SAGA_SAMPLES.get(record["arch"], 0)
+        if record.get("robust", {}).get("vr") == "saga" else 0,
+        remat=record.get("remat", True))
+    record["analytic"] = an
+    record["hlo_flops_per_device"] = record.get("flops_per_device")
+    record["hlo_bytes_per_device"] = record.get("bytes_per_device")
+    record["params_total"] = an["params_total"]
+    record["params_active"] = an["params_active"]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    record["model_flops_total"] = mult * an["params_active"] * tokens
+    record["useful_flops_ratio"] = (
+        record["model_flops_total"] / (an["flops_per_device"] * chips)
+        if an["flops_per_device"] else None)
+    record["roofline"] = {
+        "compute_s": an["flops_per_device"] / PEAK_FLOPS,
+        "memory_s": an["hbm_bytes_per_device"] / HBM_BW,
+        "collective_s": an["collective_bytes_per_device"] / LINK_BW,
+    }
+    dom = max(record["roofline"], key=record["roofline"].get)
+    record["roofline"]["dominant"] = dom
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D tokens (train); decode uses
+    2*N_active per token forward-only."""
+    import math
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = model.param_structs()
+    n_total = sum(math.prod(p.shape) for p in
+                  jax.tree_util.tree_leaves(params))
+    # Active params for MoE: replace expert count by top_k (+ shared).
+    n_active = n_total
+    if cfg.num_experts:
+        pat, periods = cfg.resolve_pattern()
+        moe_blocks = sum(1 for b in pat if b.moe) * periods
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        n_active = n_total - moe_blocks * (cfg.num_experts - cfg.top_k) * per_expert
+    shape = SHAPES[shape_name]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_active * tokens, n_total, n_active
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--robust", default=None,
+                    help="JSON overrides for RobustConfig, e.g. '{\"comm\":\"sharded\"}'")
+    ap.add_argument("--train", default=None,
+                    help="JSON overrides for TrainConfig, e.g. '{\"remat\": false}'")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--save-hlo", action="store_true",
+                    help="archive gzipped post-SPMD HLO next to each JSON")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    overrides = json.loads(args.robust) if args.robust else None
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                if args.tag:
+                    name += f"__{args.tag}"
+                path = os.path.join(args.out, name + ".json")
+                try:
+                    rec = lower_one(
+                        arch, shape, multi_pod=mp, robust_overrides=overrides,
+                        train_overrides=json.loads(args.train) if args.train else None,
+                        hlo_path=(os.path.join(args.out, name + ".hlo.gz")
+                                  if args.save_hlo else None))
+                    if "skipped" in rec:
+                        print(f"SKIP {name}: {rec['skipped']}")
+                    else:
+                        r = rec["roofline"]
+                        print(f"OK   {name}: mem/dev={rec.get('memory',{}).get('total_per_device_gb',-1):.2f}GB "
+                              f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+                              f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+                              f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                except Exception as e:
+                    failures += 1
+                    print(f"FAIL {name}: {type(e).__name__}: {e}")
+                    traceback.print_exc(limit=6)
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

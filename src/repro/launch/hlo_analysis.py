@@ -1,0 +1,106 @@
+"""Parse collective traffic out of compiled (SPMD-partitioned) HLO text.
+
+``cost_analysis()`` does not expose collective bytes, so we scan the HLO for
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` ops.  The post-optimization HLO print omits operand
+shapes, so byte accounting works from the RESULT shape plus the collective's
+replica-group size S with a ring model (bytes received per device):
+
+    all-gather          result * (S-1)/S
+    all-reduce          2 * result * (S-1)/S     (reduce-scatter + all-gather)
+    reduce-scatter      result * (S-1)            (operand = S * result)
+    all-to-all          result * (S-1)/S
+    collective-permute  result
+
+The HLO module is the per-device program, so parsed bytes are already
+per-device; the roofline collective term is bytes / link_bw.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"=\s*(?:\(|\S+\s+)?\s*([\w-]+)\(")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        # replica_groups=[G,S]: G groups of size S.
+        return max(int(m.group(2)), 1)
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2  # unknown: conservative smallest nontrivial group
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Bytes moved per device, by collective kind + 'total'."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        eq = ls.index("=")
+        m = re.search(r"\s([\w-]+)\(", ls[eq:])
+        if not m:
+            continue
+        op = m.group(1)
+        kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        if op.endswith("-done"):   # payload counted at the matching -start
+            continue
+        result_seg = ls[eq + 1 : eq + m.start(1)]
+        result_b = _line_shapes(result_seg)
+        s = _group_size(ls)
+        if op.startswith(("all-gather-start", "all-reduce-start")):
+            # tuple result (operand, result): halve to get the result part.
+            result_b //= 2
+        if kind == "all-gather":
+            moved = result_b * (s - 1) / s
+        elif kind == "all-reduce":
+            moved = 2 * result_b * (s - 1) / s
+        elif kind == "reduce-scatter":
+            moved = result_b * (s - 1)
+        elif kind == "all-to-all":
+            moved = result_b * (s - 1) / s
+        else:  # collective-permute
+            moved = result_b
+        out[kind] += moved
+        out["total"] += moved
+        out[f"count:{kind}"] += 1
+    return dict(out)
+
+
+def _line_shapes(segment: str) -> int:
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(segment))
+
+
+def collective_summary(hlo_text: str) -> str:
+    b = collective_bytes(hlo_text)
+    parts = [f"{k}={b.get(k, 0) / 1e9:.3f}GB(n={int(b.get('count:' + k, 0))})"
+             for k in _COLLECTIVES if k in b]
+    return f"total={b.get('total', 0) / 1e9:.3f}GB " + " ".join(parts)

@@ -1,0 +1,55 @@
+"""Production meshes.
+
+Kept as FUNCTIONS so importing this module never touches jax device state.
+
+* single pod : (16, 16)   axes ("data", "model")  -- 256 chips (v5e pod)
+* multi-pod  : (2, 16, 16) axes ("pod", "data", "model") -- 512 chips
+
+Workers of the Byzantine-robust federation are the indices along the
+("pod",) "data" axes: 16 workers single-pod, 32 multi-pod; each worker owns
+16 model-parallel chips and its own finite local dataset + SAGA table.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} -- set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices exist (tests/examples)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def worker_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def num_workers(mesh) -> int:
+    n = 1
+    for a in worker_axes(mesh):
+        n *= axis_sizes(mesh)[a]
+    return n

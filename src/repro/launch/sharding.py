@@ -1,0 +1,139 @@
+"""Sharding-tree builders: PartitionSpec trees -> NamedSharding trees, plus
+the batch/cache/state specs for each step kind."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import mesh as mesh_lib
+
+Pytree = Any
+
+
+def fsdp_param_specs(spec_tree: Pytree, mesh, shapes: Pytree) -> Pytree:
+    """Upgrade 'model'-sharded param dims to ('data', 'model') where the dim
+    divides the combined axis size — FSDP-style inference sharding.
+
+    Valid for SERVING only: robust training needs per-worker gradients, so
+    params stay replicated over the worker axes there; at decode time there
+    is no such constraint and weights can shard over every axis (XLA inserts
+    the per-layer all-gathers)."""
+    szs = mesh_lib.axis_sizes(mesh)
+    wa = mesh_lib.worker_axes(mesh)
+    combo = tuple(wa) + ("model",)
+    total = 1
+    for a in combo:
+        total *= szs.get(a, 1)
+
+    def fix(spec, shape):
+        dims = tuple(spec) + (None,) * (len(shape.shape) - len(tuple(spec)))
+        out = []
+        for names, dim in zip(dims, shape.shape):
+            if names == "model" and dim % total == 0:
+                out.append(combo)
+            else:
+                out.append(names)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        fix, spec_tree, shapes, is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Pytree:
+    """PartitionSpec tree matching models.api.input_specs output."""
+    wa = mesh_lib.worker_axes(mesh)
+    waxes = wa if len(wa) > 1 else wa[0]
+    if shape.kind == "train":
+        # leaves (W, per-worker-batch, ...): worker axis sharded over pod+data.
+        specs = {"tokens": P(waxes, None, None), "labels": P(waxes, None, None)}
+        if cfg.family == "vlm":
+            specs["image_emb"] = P(waxes, None, None, None)
+        if cfg.family == "audio":
+            specs["audio_emb"] = P(waxes, None, None, None)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": P(waxes, None)}
+        if cfg.family == "vlm":
+            specs["image_emb"] = P(waxes, None, None)
+        if cfg.family == "audio":
+            specs["audio_emb"] = P(waxes, None, None)
+        return specs
+    if shape.kind == "decode":
+        bspec = waxes if shape.global_batch > 1 else None
+        return {"tokens": P(bspec, None), "pos": P()}
+    raise ValueError(shape.kind)
+
+
+def cache_batch_axis(shape: ShapeConfig, mesh) -> tuple:
+    """(batch_sharding, seq_sharding) for KV caches.
+
+    decode_32k: batch large -> shard batch over worker axes, seq replicated.
+    long_500k: batch=1 -> shard the *sequence* over the data axis
+    (sequence-parallel KV cache; attention LSE-combines across shards).
+    """
+    wa = mesh_lib.worker_axes(mesh)
+    waxes = wa if len(wa) > 1 else wa[0]
+    if shape.global_batch > 1:
+        return (waxes, None)
+    return (None, "data")
+
+
+def cache_specs_for(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Pytree:
+    """Spec tree matching models init_decode_cache structure: leaves are
+    stacked over periods (leading dim), then (B, S, KV, hd) for attention,
+    mamba state for SSM blocks."""
+    if cfg.family == "audio":
+        # The enc-dec decoder's pattern carries cross-attention caches.
+        import dataclasses
+
+        from repro.configs.base import BlockSpec
+        cfg = dataclasses.replace(cfg, pattern=(BlockSpec(kind="attn", cross=True),))
+    pat, _ = cfg.resolve_pattern()
+    b_ax, s_ax = cache_batch_axis(shape, mesh)
+    szs = mesh_lib.axis_sizes(mesh)
+
+    def div(dim, ax):
+        if ax is None:
+            return None
+        total = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            total *= szs.get(a, 1)
+        return ax if dim % total == 0 else None
+
+    hd = cfg.resolved_head_dim
+    kv_shard = div(cfg.num_kv_heads * 0 + cfg.num_kv_heads, "model")
+    # kv head count rarely divides 16; shard head_dim instead when possible.
+    cache = {}
+    for i, spec in enumerate(pat):
+        c = {}
+        if spec.kind == "attn":
+            kvspec = P(b_ax, s_ax, div(cfg.num_kv_heads, "model"),
+                       None if div(cfg.num_kv_heads, "model") else div(hd, "model"))
+            c["k"] = kvspec
+            c["v"] = kvspec
+        else:
+            c["h"] = P(b_ax, div(cfg.ssm_heads, "model"), None, None)
+            c["conv_x"] = P(b_ax, None, div(cfg.d_inner, "model"))
+            c["conv_B"] = P(b_ax, None, None)
+            c["conv_C"] = P(b_ax, None, None)
+        if spec.cross:
+            cs = P(b_ax, None, div(cfg.num_kv_heads, "model"), None)
+            c["cross_k"] = cs
+            c["cross_v"] = cs
+        cache[f"pos{i}"] = {k: P(None, *tuple(v)) for k, v in c.items()}
+    return cache

@@ -1,0 +1,205 @@
+"""Step builders for the distributed runtime.
+
+``make_train_step`` composes the Byzantine-robust data-parallel training
+step of DESIGN.md Sec. 2:
+
+  1. per-worker gradients -- ``vmap(grad)`` over the leading worker axis of
+     the batch (sharded over the pod/data mesh axes);
+  2. optional SAGA correction (tables sharded like the gradients);
+  3. Byzantine attack injection (mask-replace the first B workers);
+  4. robust aggregation:
+       * ``comm="gather"``  -- paper-faithful replicated master (XLA
+         all-gathers the worker axis; Weiszfeld runs redundantly);
+       * ``comm="sharded"`` -- beyond-paper distributed Weiszfeld (shard_map
+         all_to_all resharding; psum'd norms);
+  5. optimizer update (paper update is plain SGD, eq. (11)).
+
+``make_prefill_step`` / ``make_serve_step`` build the inference paths,
+including the sequence-sharded long-context decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core import attacks as attack_lib
+from repro.core import saga as saga_lib
+from repro.core.robust_step import RobustConfig, sharded_aggregate
+from repro.core import aggregators as agg_lib
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_lib
+from repro.models.api import Model
+from repro.optim import optimizers as optim_lib
+
+Pytree = Any
+
+
+def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
+                    mesh, *, saga_num_samples: int = 0):
+    """Returns (train_step, state_specs, make_state_structs).
+
+    ``train_step(state, batch, key) -> (state, metrics)`` where ``state`` is
+    a dict {params, opt, saga?, step}.  Batch leaves carry a leading worker
+    axis of size num_workers(mesh).
+    """
+    cfg = model.cfg
+    wa = mesh_lib.worker_axes(mesh)
+    w = mesh_lib.num_workers(mesh)
+    optimizer = optim_lib.get_optimizer(train.optimizer, train.lr)
+    attack_cfg = robust.attack_config()
+    use_saga = robust.vr == "saga" and saga_num_samples > 0
+
+    def train_step(state, batch, key):
+        params = state["params"]
+
+        def worker_loss(p, wb):
+            return model.loss(p, wb)
+
+        losses, grads = jax.vmap(jax.value_and_grad(worker_loss),
+                                 in_axes=(None, 0))(params, batch)
+        # Keep the worker axis sharded over the worker mesh axes.
+        waxes = wa if len(wa) > 1 else wa[0]
+        grads = jax.tree_util.tree_map(
+            lambda g: jax.lax.with_sharding_constraint(
+                g, jax.sharding.NamedSharding(mesh, P(waxes))), grads)
+
+        if use_saga:
+            idx = jax.random.randint(jax.random.fold_in(key, 1), (w,), 0,
+                                     saga_num_samples)
+            msgs, saga_state = saga_lib.saga_correct_scatter(
+                state["saga"], grads, idx)
+        else:
+            msgs, saga_state = grads, state.get("saga")
+
+        msgs = attack_lib.apply_attack_stacked(
+            attack_cfg, msgs, jax.random.fold_in(key, 2))
+
+        if robust.comm == "sharded":
+            agg = _sharded_agg(msgs, robust, mesh, pspecs)
+        else:
+            agg = _gather_agg(msgs, robust)
+
+        updates, opt_state = optimizer.update(agg, state["opt"], params,
+                                              state["step"])
+        params = optim_lib.apply_updates(params, updates)
+        new_state = {"params": params, "opt": opt_state, "step": state["step"] + 1}
+        if use_saga:
+            new_state["saga"] = saga_state
+        metrics = {
+            "loss": jnp.mean(losses),
+            "agg_norm": jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(agg))),
+        }
+        return new_state, metrics
+
+    # ---- specs / structs -------------------------------------------------
+    szs = mesh_lib.axis_sizes(mesh)
+    pspecs = model.param_specs(szs)
+    wa_spec = wa if len(wa) > 1 else wa[0]
+
+    def state_specs():
+        sp = {"params": pspecs, "opt": _opt_specs(pspecs), "step": P()}
+        if use_saga:
+            sp["saga"] = saga_lib.SagaState(
+                table=jax.tree_util.tree_map(lambda s: P(wa_spec, None, *tuple(s)), pspecs,
+                                             is_leaf=lambda x: isinstance(x, P)),
+                avg=jax.tree_util.tree_map(lambda s: P(wa_spec, *tuple(s)), pspecs,
+                                           is_leaf=lambda x: isinstance(x, P)))
+        return sp
+
+    def _opt_specs(pspecs):
+        if train.optimizer == "sgd":
+            return ()
+        if train.optimizer == "momentum":
+            return pspecs
+        return optim_lib.AdamState(mu=pspecs, nu=pspecs)
+
+    def state_structs():
+        ps = model.param_structs()
+        st = {"params": ps, "opt": _opt_structs(ps),
+              "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        if use_saga:
+            st["saga"] = saga_lib.SagaState(
+                table=jax.tree_util.tree_map(
+                    lambda s: jax.ShapeDtypeStruct((w, saga_num_samples) + s.shape, s.dtype), ps),
+                avg=jax.tree_util.tree_map(
+                    lambda s: jax.ShapeDtypeStruct((w,) + s.shape, s.dtype), ps))
+        return st
+
+    def _opt_structs(ps):
+        if train.optimizer == "sgd":
+            return ()
+        if train.optimizer == "momentum":
+            return ps
+        f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+        return optim_lib.AdamState(mu=jax.tree_util.tree_map(f32, ps),
+                                   nu=jax.tree_util.tree_map(f32, ps))
+
+    return train_step, state_specs(), state_structs
+
+
+def _gather_agg(msgs: Pytree, robust: RobustConfig) -> Pytree:
+    """Paper-faithful master: plain stacked aggregation; under jit the
+    Weiszfeld forces an all-gather of the worker axis on every device."""
+    name = robust.aggregator
+    agg = agg_lib.get_aggregator(
+        name, max_iters=robust.weiszfeld_iters, tol=robust.weiszfeld_tol,
+        num_groups=robust.num_groups, trim=robust.trim,
+        num_byzantine=robust.num_byzantine)
+    return agg(msgs)
+
+
+def _sharded_agg(msgs: Pytree, robust: RobustConfig, mesh,
+                 param_specs: Pytree) -> Pytree:
+    """Beyond-paper: all_to_all coordinate resharding + distributed Weiszfeld
+    inside a FULLY-manual shard_map (worker axes and model axis): every leaf
+    arrives as its local shard, the flatten/all_to_all stay local, and
+    Weiszfeld's full-vector norms are restored by one psum of W floats per
+    iteration over (worker + model) axes.  Bytes moved per device:
+    O(2 * p_shard) instead of the gather master's O(W * p_shard)."""
+    wa = mesh_lib.worker_axes(mesh)
+    w = mesh_lib.num_workers(mesh)
+    waxes = wa if len(wa) > 1 else wa[0]
+
+    def agg_fn(local_msgs):
+        local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
+        return sharded_aggregate(local, robust, worker_axes=wa,
+                                 model_axes=("model",), num_workers=w)
+
+    in_specs = jax.tree_util.tree_map(
+        lambda s: P(waxes, *tuple(s)), param_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return jax.shard_map(agg_fn, mesh=mesh, in_specs=(in_specs,),
+                         out_specs=param_specs, check_vma=False)(msgs)
+
+
+# ---------------------------------------------------------------------------
+# Inference steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model: Model, mesh):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_serve_step(model: Model, shape: ShapeConfig, mesh, *,
+                    window: Optional[int] = None):
+    """One-token decode step.  For long_500k (batch=1) the KV cache is
+    sequence-sharded over 'data' and attention LSE-combines across shards."""
+    cfg = model.cfg
+    seq_sharded = shape.global_batch == 1 and any(
+        bs.kind == "attn" for bs in cfg.resolve_pattern()[0])
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(
+            params, cache, tokens, pos, window=window,
+            seq_shard_axis="data" if seq_sharded else None)
+
+    return serve_step

@@ -1,0 +1,122 @@
+"""Runnable distributed training driver.
+
+CPU-scale entry point for the same code path the dry-run lowers: builds a
+host mesh over however many local devices exist, initializes real params,
+and runs Byzantine-robust data-parallel training on synthetic LM data.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --reduced \\
+        --steps 20 --mesh 4x2 --aggregator geomed --attack sign_flip --byzantine 1
+
+(The flag must be set by the caller; unlike dryrun.py this driver is meant
+to also run on real multi-chip platforms where forcing a device count would
+be wrong.)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.core.robust_step import RobustConfig
+from repro.data.synthetic import token_stream
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_lib
+from repro.launch import steps as steps_lib
+from repro.models.api import build_model
+
+
+def make_batch(key, cfg, num_workers: int, per_worker: int, seq: int):
+    toks = jax.random.randint(key, (num_workers, per_worker, seq + 1),
+                              0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    if cfg.family == "vlm":
+        batch["image_emb"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (num_workers, per_worker, cfg.num_prefix_tokens, cfg.d_model),
+            jnp.float32).astype(cfg.dtype)
+    if cfg.family == "audio":
+        batch["audio_emb"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (num_workers, per_worker, cfg.encoder_seq, cfg.d_model),
+            jnp.float32).astype(cfg.dtype)
+    return batch
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized variant (CPU friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--per-worker-batch", type=int, default=2)
+    ap.add_argument("--mesh", default="", help="e.g. 4x2 (data x model); "
+                    "default: all devices on the data axis")
+    ap.add_argument("--aggregator", default="geomed")
+    ap.add_argument("--attack", default="none")
+    ap.add_argument("--byzantine", type=int, default=0)
+    ap.add_argument("--comm", default="gather", choices=["gather", "sharded"])
+    ap.add_argument("--vr", default="sgd", choices=["sgd", "saga"])
+    ap.add_argument("--saga-samples", type=int, default=4)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    ndev = len(jax.devices())
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+    else:
+        shape = (ndev, 1)
+    mesh = mesh_lib.make_host_mesh(shape, ("data", "model"))
+    w = mesh_lib.num_workers(mesh)
+
+    model = build_model(cfg, remat=False, q_chunk=min(args.seq, 512),
+                        kv_chunk=min(args.seq, 512), loss_chunk=128)
+    robust = RobustConfig(
+        aggregator=args.aggregator, vr=args.vr, attack=args.attack,
+        num_byzantine=args.byzantine, comm=args.comm, weiszfeld_iters=16)
+    train = TrainConfig(optimizer=args.optimizer, lr=args.lr)
+    step_fn, sspecs, sstructs = steps_lib.make_train_step(
+        model, robust, train, mesh,
+        saga_num_samples=args.saga_samples if args.vr == "saga" else 0)
+
+    key = jax.random.PRNGKey(0)
+    with jax.set_mesh(mesh):
+        params = model.init(key)
+        from repro.optim import get_optimizer
+        opt = get_optimizer(args.optimizer, args.lr)
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if args.vr == "saga":
+            from repro.core.saga import saga_init_zeros
+            state["saga"] = saga_init_zeros(params, w, args.saga_samples)
+        jstep = jax.jit(step_fn, donate_argnums=(0,))
+        ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
+        t0 = time.time()
+        for i in range(args.steps):
+            bkey = jax.random.fold_in(key, 1000 + i)
+            batch = make_batch(bkey, cfg, w, args.per_worker_batch, args.seq)
+            state, metrics = jstep(state, batch, jax.random.fold_in(key, i))
+            if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                      f"agg_norm={float(metrics['agg_norm']):.4f} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
+            if ckpt and args.checkpoint_every and (i + 1) % args.checkpoint_every == 0:
+                ckpt.save(i + 1, state)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Unified model API: ``build_model(cfg)`` -> :class:`Model`.
+
+One object per architecture exposing init / loss / prefill / decode_step,
+plus the three *maker* interpretations of its parameter and cache trees
+(arrays, PartitionSpecs, ShapeDtypeStructs) so smoke tests, the real
+trainer, and the zero-allocation multi-pod dry-run all consume the same
+definition.  ``input_specs`` produces the batch stand-ins for each of the
+four assigned input shapes (with stubbed frontend embeddings for the
+audio/VLM archs, per the brief).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tfm
+from repro.models.common import init_maker, spec_maker, struct_maker
+
+Pytree = Any
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Pytree]
+    param_specs: Callable[[dict], Pytree]
+    param_structs: Callable[[], Pytree]
+    loss: Callable[[Pytree, dict], jnp.ndarray]
+    prefill: Callable[[Pytree, dict], tuple]
+    decode_step: Callable[..., tuple]
+    init_cache: Callable[..., Pytree]
+    cache_specs: Callable[..., Pytree]
+    cache_structs: Callable[..., Pytree]
+
+
+def _params_fn(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return lambda make: encdec_lib.encdec_params(make, cfg)
+    return lambda make: tfm.decoder_params(make, cfg)
+
+
+def build_model(cfg: ModelConfig, *, remat: bool = True, loss_chunk: int = 512,
+                q_chunk: int = 1024, kv_chunk: int = 1024) -> Model:
+    params_of = _params_fn(cfg)
+
+    def init(key):
+        return params_of(init_maker(key, cfg.dtype))
+
+    def param_specs(axis_sizes):
+        return params_of(spec_maker(axis_sizes))
+
+    def param_structs():
+        return params_of(struct_maker(cfg.dtype))
+
+    if cfg.family == "audio":
+        base_loss = encdec_lib.make_loss(cfg, remat=remat, loss_chunk=loss_chunk,
+                                         q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+        def loss(params, batch):
+            return base_loss(params, batch)
+
+        def prefill_fn(params, batch):
+            return encdec_lib.prefill(params, cfg, batch, q_chunk=q_chunk,
+                                      kv_chunk=kv_chunk)
+
+        def decode_fn(params, cache, tokens, pos, *, window=None,
+                      seq_shard_axis=None):
+            return encdec_lib.decode_step(params, cfg, cache, tokens, pos)
+
+        def init_cache(batch, max_len, dtype=jnp.bfloat16):
+            return encdec_lib.init_decode_cache(cfg, batch, max_len, dtype)
+
+        def cache_specs(axis_sizes, batch, max_len):
+            return encdec_lib.init_decode_cache(
+                cfg, batch, max_len, make=spec_maker(axis_sizes))
+
+        def cache_structs(batch, max_len, dtype=jnp.bfloat16):
+            return encdec_lib.init_decode_cache(
+                cfg, batch, max_len, make=struct_maker(dtype))
+
+    else:
+        base_loss = tfm.make_loss(cfg, remat=remat, loss_chunk=loss_chunk,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+        def loss(params, batch):
+            b = batch
+            if cfg.family == "vlm" and "image_emb" in batch:
+                b = dict(batch)
+                b["prefix_emb"] = b.pop("image_emb")
+            return base_loss(params, b)
+
+        def prefill_fn(params, batch):
+            prefix = batch.get("image_emb")
+            return tfm.prefill(params, cfg, batch["tokens"], prefix_emb=prefix,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+        def decode_fn(params, cache, tokens, pos, *, window=None,
+                      seq_shard_axis=None):
+            return tfm.decode_step(params, cfg, cache, tokens, pos,
+                                   window=window, seq_shard_axis=seq_shard_axis)
+
+        def init_cache(batch, max_len, dtype=jnp.bfloat16):
+            return tfm.init_decode_cache(cfg, batch, max_len, dtype)
+
+        def cache_specs(axis_sizes, batch, max_len):
+            return _fix_cache_specs(
+                tfm.init_decode_cache(cfg, batch, max_len, make=spec_maker(axis_sizes)))
+
+        def cache_structs(batch, max_len, dtype=jnp.bfloat16):
+            return tfm.init_decode_cache(cfg, batch, max_len, make=struct_maker(dtype))
+
+    return Model(cfg, init, param_specs, param_structs, loss, prefill_fn,
+                 decode_fn, init_cache, cache_specs, cache_structs)
+
+
+def _fix_cache_specs(tree):
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Input shape stand-ins
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                num_workers: int = 1) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this (arch, shape).
+
+    For train shapes the batch is pre-split by worker: leaves carry a
+    leading ``num_workers`` axis (the robust-aggregation worker axis).
+    Frontend embeddings (audio frames / image patches) are stubbed, per the
+    brief.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    emb = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.bfloat16)
+
+    if shape.kind == "train":
+        wb = b // num_workers
+        lead = (num_workers, wb) if num_workers > 1 else (b,)
+        text_s = s - cfg.num_prefix_tokens if cfg.family == "vlm" else s
+        batch = {"tokens": i32(lead + (text_s,)), "labels": i32(lead + (text_s,))}
+        if cfg.family == "vlm":
+            batch["image_emb"] = emb(lead + (cfg.num_prefix_tokens, cfg.d_model))
+        if cfg.family == "audio":
+            batch["audio_emb"] = emb(lead + (cfg.encoder_seq, cfg.d_model))
+        return batch
+
+    if shape.kind == "prefill":
+        text_s = s - cfg.num_prefix_tokens if cfg.family == "vlm" else s
+        batch = {"tokens": i32((b, text_s))}
+        if cfg.family == "vlm":
+            batch["image_emb"] = emb((b, cfg.num_prefix_tokens, cfg.d_model))
+        if cfg.family == "audio":
+            batch["audio_emb"] = emb((b, cfg.encoder_seq, cfg.d_model))
+        return batch
+
+    if shape.kind == "decode":
+        return {"tokens": i32((b, 1)),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,177 @@
+"""Shared model-building machinery.
+
+The central trick is the *maker* protocol: every model defines its parameter
+tree once, as a function ``params(make)`` where ``make(path, shape, spec,
+init)`` is interpreted three ways:
+
+* :func:`init_maker`    -- draw initialized ``jnp`` arrays (per-path PRNG);
+* :func:`spec_maker`    -- produce the matching ``PartitionSpec`` tree,
+                           dropping shardings whose dim isn't divisible by
+                           the mesh axis (e.g. 6 whisper heads on a 16-way
+                           model axis fall back to replication);
+* :func:`struct_maker`  -- produce ``jax.ShapeDtypeStruct`` stand-ins so the
+                           multi-pod dry-run can lower 340B-parameter models
+                           without allocating a single byte.
+
+Also here: RMSNorm/LayerNorm, RoPE, activations, and the chunked
+cross-entropy that never materializes the full (B, S, V) logits tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+Maker = Callable[..., Any]
+
+
+# ---------------------------------------------------------------------------
+# Maker protocol
+# ---------------------------------------------------------------------------
+
+def _path_seed(path: str) -> int:
+    return int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "little")
+
+
+def init_maker(key: jax.Array, dtype=jnp.float32) -> Maker:
+    """make() -> initialized array.  Init kinds: ("normal", std) | "ones" |
+    "zeros" | ("uniform", bound)."""
+
+    def make(path: str, shape: Sequence[int], spec: P = P(), init=None):
+        k = jax.random.fold_in(key, _path_seed(path))
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if isinstance(init, tuple) and init[0] == "uniform":
+            return jax.random.uniform(k, shape, dtype, -init[1], init[1])
+        if isinstance(init, tuple) and init[0] == "normal":
+            std = init[1]
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = fan_in ** -0.5
+        return (std * jax.random.normal(k, shape, jnp.float32)).astype(dtype)
+
+    return make
+
+
+def spec_maker(axis_sizes: dict[str, int]) -> Maker:
+    """make() -> PartitionSpec, replacing non-divisible shardings by None."""
+
+    def make(path: str, shape: Sequence[int], spec: P = P(), init=None):
+        del init
+        fixed = []
+        for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            if names is None:
+                fixed.append(None)
+                continue
+            names_t = names if isinstance(names, tuple) else (names,)
+            total = 1
+            for n in names_t:
+                total *= axis_sizes.get(n, 1)
+            fixed.append(names if dim % total == 0 else None)
+        return P(*fixed)
+
+    return make
+
+
+def struct_maker(dtype=jnp.bfloat16) -> Maker:
+    def make(path: str, shape: Sequence[int], spec: P = P(), init=None):
+        del spec, init
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+    return make
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "squared_relu": squared_relu,
+    "tanh": jnp.tanh,
+}
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes (B, S, V) logits)
+# ---------------------------------------------------------------------------
+
+def chunked_xent(
+    h: jnp.ndarray,          # (B, S, D) final hidden states
+    emb: jnp.ndarray,        # (V, D) tied output embedding (or unembed.T)
+    labels: jnp.ndarray,     # (B, S) int32
+    *,
+    chunk: int = 512,
+    mask: Optional[jnp.ndarray] = None,  # (B, S) 1=count
+) -> jnp.ndarray:
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else \
+            jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    n_chunks = h.shape[1] // chunk
+    hc = h.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hh, ll, mm = xs
+        logits = (hh.astype(jnp.float32) @ emb.astype(jnp.float32).T)  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, ll[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        nll = (lse - tgt) * mm
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mm)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

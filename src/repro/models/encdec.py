@@ -1,0 +1,102 @@
+"""Encoder-decoder (Whisper-style) backbone.
+
+Per the brief, the audio frontend (mel spectrogram + conv feature extractor)
+is a STUB: ``input_specs`` supplies precomputed frame embeddings
+(B, encoder_seq, D).  This module implements the transformer backbone: a
+bidirectional encoder over the frames and a causal decoder with
+cross-attention (built from the same block machinery as the decoder-only
+models, pattern = [attn(cross=True)]).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models import transformer as tfm
+
+Pytree = Any
+
+
+def _decoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, pattern=(BlockSpec(kind="attn", cross=True),))
+
+
+def encdec_params(make, cfg: ModelConfig):
+    enc = {
+        "pos_embed": make("enc.pos_embed", (cfg.encoder_seq, cfg.d_model),
+                          P(None, None), ("normal", 0.02)),
+        "blocks": {
+            "pos0": tfm._block_params(
+                _stacked_make(make, cfg.encoder_layers), "enc.pos0", cfg,
+                BlockSpec(kind="attn")),
+        },
+        "final_norm": tfm._norm_params(make, "enc.final_norm", cfg),
+    }
+    dec = tfm.decoder_params(make, _decoder_cfg(cfg), prefix="dec")
+    return {"encoder": enc, "decoder": dec}
+
+
+def _stacked_make(make, periods: int):
+    def stacked(path, shape, spec=P(), init=None):
+        return make(path, (periods,) + tuple(shape), P(None, *tuple(spec)), init)
+    return stacked
+
+
+def encode(params, cfg: ModelConfig, audio_emb: jnp.ndarray, *,
+           remat: bool = True, q_chunk: int = 1024, kv_chunk: int = 1024) -> jnp.ndarray:
+    """audio_emb: (B, encoder_seq, D) stub frontend output -> encoder states."""
+    x = audio_emb.astype(cfg.dtype) + params["encoder"]["pos_embed"].astype(cfg.dtype)
+
+    def body(x, bp):
+        h = tfm.apply_norm(cfg, bp["pre_norm"], x)
+        h = attn_lib.attention(
+            bp["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=None, causal=False,
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
+        x = x + h
+        h = tfm.apply_norm(cfg, bp["mlp_norm"], x)
+        h = mlp_lib.mlp(bp["mlp"], h, activation=cfg.activation)
+        return x + h, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["encoder"]["blocks"]["pos0"])
+    return tfm.apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+def make_loss(cfg: ModelConfig, *, remat: bool = True, loss_chunk: int = 512,
+              q_chunk: int = 1024, kv_chunk: int = 1024):
+    dcfg = _decoder_cfg(cfg)
+    dec_loss = tfm.make_loss(dcfg, remat=remat, loss_chunk=loss_chunk,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    def loss(params, batch):
+        enc_out = encode(params, cfg, batch["audio_emb"], remat=remat,
+                         q_chunk=q_chunk, kv_chunk=kv_chunk)
+        b = dict(batch)
+        b["enc_out"] = enc_out
+        return dec_loss(params["decoder"], b)
+
+    return loss
+
+
+def prefill(params, cfg: ModelConfig, batch, *, q_chunk=1024, kv_chunk=1024):
+    enc_out = encode(params, cfg, batch["audio_emb"], remat=False,
+                     q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return tfm.prefill(params["decoder"], _decoder_cfg(cfg), batch["tokens"],
+                       enc_out=enc_out, q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    return tfm.decode_step(params["decoder"], _decoder_cfg(cfg), cache, tokens, pos)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16, make=None):
+    return tfm.init_decode_cache(_decoder_cfg(cfg), batch, max_len, dtype, make)

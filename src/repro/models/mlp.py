@@ -1,0 +1,30 @@
+"""Dense FFN variants: gated (SwiGLU/GeGLU) and plain (GELU / squared-ReLU).
+
+Nemotron-4 uses squared-ReLU without gating [arXiv:2402.16819]; the Llama/
+Mistral/Qwen family uses SwiGLU; Whisper uses GELU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ACTIVATIONS
+
+GATED = {"swiglu": "silu", "geglu": "gelu"}
+
+
+def mlp_params(make, prefix: str, *, d_model: int, d_ff: int, activation: str):
+    p = {"w_in": make(f"{prefix}.w_in", (d_model, d_ff), P(None, "model")),
+         "w_out": make(f"{prefix}.w_out", (d_ff, d_model), P("model", None))}
+    if activation in GATED:
+        p["w_gate"] = make(f"{prefix}.w_gate", (d_model, d_ff), P(None, "model"))
+    return p
+
+
+def mlp(params, x, *, activation: str) -> jnp.ndarray:
+    if activation in GATED:
+        act = ACTIVATIONS[GATED[activation]]
+        h = act(x @ params["w_gate"]) * (x @ params["w_in"])
+    else:
+        h = ACTIVATIONS[activation](x @ params["w_in"])
+    return h @ params["w_out"]

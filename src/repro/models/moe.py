@@ -1,0 +1,101 @@
+"""Mixture-of-Experts layer: top-k routing, optional shared experts,
+capacity-based dispatch/combine einsums (TPU-native, collective pattern is
+an all-to-all-equivalent pair of batched matmuls under SPMD).
+
+Matches the assigned configs:
+* Mixtral-8x22B: 8 routed experts, top-2, no shared experts.
+* Qwen1.5-MoE-A2.7B: 60 routed top-4 + 4 shared experts (shared experts are
+  a dense SwiGLU whose d_ff is ``num_shared * moe_d_ff``).
+* Jamba: 16 routed, top-2.
+
+Dispatch is group-chunked (``lax.scan`` over token groups) so the one-hot
+dispatch tensor (g, E, C) stays bounded regardless of sequence length.
+Expert weights are stacked (E, D, F) with F sharded over the model axis
+(tensor-parallel experts — works for any expert count, incl. 60).
+A Switch-style load-balance aux loss is returned for training.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import mlp as mlp_lib
+
+
+def moe_params(make, prefix: str, *, d_model: int, moe_d_ff: int,
+               num_experts: int, num_shared_experts: int, activation: str):
+    p = {
+        "router": make(f"{prefix}.router", (d_model, num_experts), P(None, None)),
+        "w_in": make(f"{prefix}.w_in", (num_experts, d_model, moe_d_ff), P(None, None, "model")),
+        "w_gate": make(f"{prefix}.w_gate", (num_experts, d_model, moe_d_ff), P(None, None, "model")),
+        "w_out": make(f"{prefix}.w_out", (num_experts, moe_d_ff, d_model), P(None, "model", None)),
+    }
+    if num_shared_experts:
+        p["shared"] = mlp_lib.mlp_params(
+            make, f"{prefix}.shared", d_model=d_model,
+            d_ff=num_shared_experts * moe_d_ff, activation=activation)
+    return p
+
+
+def _expert_ffn(params, xe, activation: str):
+    """xe: (E, C, D) -> (E, C, D); expert-batched gated FFN."""
+    act = mlp_lib.ACTIVATIONS[mlp_lib.GATED.get(activation, activation)]
+    gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xe, params["w_in"])
+    if activation in mlp_lib.GATED:
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+
+
+def moe(params, x, *, num_experts: int, top_k: int, activation: str,
+        capacity_factor: float = 1.25, group_size: int = 2048,
+        num_shared_experts: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D). Returns (output, aux_load_balance_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    group = min(group_size, t)
+    pad = (-t) % group
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    n_groups = xf.shape[0] // group
+    xg = xf.reshape(n_groups, group, d)
+    cap = int(group * top_k / num_experts * capacity_factor)
+    cap = max(cap, top_k)
+
+    def group_body(_, xt):
+        # Routing.
+        logits = (xt @ params["router"]).astype(jnp.float32)     # (g, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (g, k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+        # Position of each (token, k) inside its expert's buffer.
+        onehot = jax.nn.one_hot(gate_idx, num_experts, dtype=jnp.float32)  # (g,k,E)
+        pos = jnp.cumsum(onehot.reshape(-1, num_experts), axis=0).reshape(
+            group, top_k, num_experts) - 1.0
+        pos = jnp.sum(pos * onehot, axis=-1)                     # (g, k)
+        keep = pos < cap
+        gate_vals = gate_vals * keep
+        # Dispatch/combine tensors (g, E, C).
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        disp = jnp.einsum("gke,gkc->gec", onehot * keep[..., None], pos_oh)
+        comb = jnp.einsum("gke,gkc,gk->gec", onehot, pos_oh, gate_vals)
+        xe = jnp.einsum("gec,gd->ecd", disp, xt.astype(jnp.float32))  # (E,C,D)
+        ye = _expert_ffn(params, xe.astype(xt.dtype), activation)
+        yt = jnp.einsum("gec,ecd->gd", comb, ye.astype(jnp.float32)).astype(xt.dtype)
+        # Switch aux loss terms: fraction routed + mean router prob per expert.
+        frac = jnp.mean(onehot[:, 0, :], axis=0)     # top-1 assignment share
+        pmean = jnp.mean(probs, axis=0)
+        aux = num_experts * jnp.sum(frac * pmean)
+        return None, (yt, aux)
+
+    _, (yg, auxg) = jax.lax.scan(group_body, None, xg)
+    y = yg.reshape(-1, d)[:t].reshape(b, s, d)
+    if num_shared_experts:
+        y = y + mlp_lib.mlp(params["shared"], x, activation=activation)
+    return y, jnp.mean(auxg)

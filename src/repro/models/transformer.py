@@ -1,0 +1,398 @@
+"""Decoder-only transformer assembler (dense / MoE / SSM / hybrid / VLM).
+
+Layers are organized as ``num_periods`` repetitions of a *pattern* of block
+specs (``configs.base.BlockSpec``); parameters of each pattern position are
+stacked over periods and the forward pass is a single ``lax.scan`` over
+periods (HLO size and compile time are depth-independent -- essential for
+the 96-layer dry-runs).  A uniform model is the special case of a length-1
+pattern.
+
+Three entry points per model (built by :func:`build`):
+
+* ``loss(params, batch)``         -- training loss (chunked xent).
+* ``prefill(params, batch)``      -- forward over the prompt, returns
+                                     (last_logits, cache).
+* ``decode_step(params, cache, tokens, pos)`` -- one-token serve step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models.common import chunked_xent, layernorm, rmsnorm
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def _norm_params(make, path: str, cfg: ModelConfig):
+    p = {"scale": make(f"{path}.scale", (cfg.d_model,), P(None), "ones")}
+    if cfg.norm == "layernorm":
+        p["bias"] = make(f"{path}.bias", (cfg.d_model,), P(None), "zeros")
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def _block_params(make, path: str, cfg: ModelConfig, spec: BlockSpec):
+    p = {"pre_norm": _norm_params(make, f"{path}.pre_norm", cfg)}
+    if spec.kind == "attn":
+        p["attn"] = attn_lib.attn_params(
+            make, f"{path}.attn", d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias)
+    else:
+        p["mamba"] = mamba_lib.mamba_params(
+            make, f"{path}.mamba", d_model=cfg.d_model, d_inner=cfg.d_inner,
+            ssm_state=cfg.ssm_state, num_heads=cfg.ssm_heads)
+    if spec.cross:
+        p["cross_norm"] = _norm_params(make, f"{path}.cross_norm", cfg)
+        p["cross"] = attn_lib.attn_params(
+            make, f"{path}.cross", d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias, cross=True)
+    p["mlp_norm"] = _norm_params(make, f"{path}.mlp_norm", cfg)
+    if spec.moe:
+        p["moe"] = moe_lib.moe_params(
+            make, f"{path}.moe", d_model=cfg.d_model, moe_d_ff=cfg.moe_d_ff,
+            num_experts=cfg.num_experts,
+            num_shared_experts=cfg.num_shared_experts,
+            activation=cfg.activation)
+    elif cfg.d_ff:
+        p["mlp"] = mlp_lib.mlp_params(
+            make, f"{path}.mlp", d_model=cfg.d_model, d_ff=cfg.d_ff,
+            activation=cfg.activation)
+    return p
+
+
+def decoder_params(make, cfg: ModelConfig, *, prefix: str = "dec"):
+    """Pattern-position params stacked over periods via an outer vmap-like
+    leading dim: we emit per-period paths and stack with the maker's shape
+    (periods is folded into the shape directly)."""
+    pat, periods = cfg.resolve_pattern()
+
+    def stacked_make(path, shape, spec=P(), init=None):
+        return make(path, (periods,) + tuple(shape), P(None, *tuple(spec)), init)
+
+    blocks = {
+        f"pos{i}": _block_params(stacked_make, f"{prefix}.pos{i}", cfg, bs)
+        for i, bs in enumerate(pat)
+    }
+    p = {
+        "embed": make(f"{prefix}.embed", (cfg.vocab_size, cfg.d_model),
+                      P("model", None), ("normal", 0.02)),
+        "blocks": blocks,
+        "final_norm": _norm_params(make, f"{prefix}.final_norm", cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = make(f"{prefix}.unembed", (cfg.d_model, cfg.vocab_size),
+                            P(None, "model"), ("normal", 0.02))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_block(cfg: ModelConfig, spec: BlockSpec, bp, x, *,
+               window, prefix_len, enc_out, q_chunk, kv_chunk):
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, bp["pre_norm"], x)
+    if spec.kind == "attn":
+        h = attn_lib.attention(
+            bp["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            causal=True, window=window, prefix_len=prefix_len,
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    else:
+        h = mamba_lib.mamba_block(
+            bp["mamba"], h, num_heads=cfg.ssm_heads, head_dim=cfg.ssm_head_dim,
+            ssm_state=cfg.ssm_state, chunk=cfg.ssm_chunk)
+    x = x + h
+    if spec.cross:
+        h = apply_norm(cfg, bp["cross_norm"], x)
+        h = attn_lib.attention(
+            bp["cross"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=None, causal=False,
+            cross_kv=enc_out, q_chunk=q_chunk, kv_chunk=kv_chunk)
+        x = x + h
+    h = apply_norm(cfg, bp["mlp_norm"], x)
+    if spec.moe:
+        h, aux = moe_lib.moe(
+            bp["moe"], h, num_experts=cfg.num_experts, top_k=cfg.top_k,
+            activation=cfg.activation, capacity_factor=cfg.capacity_factor,
+            num_shared_experts=cfg.num_shared_experts)
+    elif cfg.d_ff:
+        h = mlp_lib.mlp(bp["mlp"], h, activation=cfg.activation)
+    else:
+        h = jnp.zeros_like(x)
+    return x + h, aux
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *,
+                   prefix_emb: Optional[jnp.ndarray] = None,
+                   enc_out: Optional[jnp.ndarray] = None,
+                   window: Optional[int] = None,
+                   remat: bool = True,
+                   q_chunk: int = 1024, kv_chunk: int = 1024) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Embed + scan blocks.  Returns (hidden (B, S_total, D), moe_aux).
+
+    ``prefix_emb``: (B, Pfx, D) bidirectional prefix (VLM image tokens),
+    prepended to the token embeddings; ``enc_out``: encoder output for
+    cross-attention decoders.
+    """
+    pat, periods = cfg.resolve_pattern()
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    prefix_len = 0
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_emb.shape[1]
+    window = window if window is not None else cfg.sliding_window
+
+    def period_body(x, period_params):
+        aux = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(pat):
+            x, a = _run_block(cfg, spec, period_params[f"pos{i}"], x,
+                              window=window, prefix_len=prefix_len,
+                              enc_out=enc_out, q_chunk=q_chunk, kv_chunk=kv_chunk)
+            aux = aux + a
+        return x, aux
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    x, auxs = jax.lax.scan(lambda c, pp: body(c, pp), x, params["blocks"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, jnp.sum(auxs)
+
+
+def _unembed(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]
+    return params["unembed"].T
+
+
+def make_loss(cfg: ModelConfig, *, remat: bool = True, loss_chunk: int = 512,
+              window: Optional[int] = None, moe_aux_weight: float = 0.01,
+              q_chunk: int = 1024, kv_chunk: int = 1024):
+    def loss(params, batch):
+        prefix_emb = batch.get("prefix_emb")
+        enc_out = batch.get("enc_out")
+        h, aux = forward_hidden(
+            params, cfg, batch["tokens"], prefix_emb=prefix_emb,
+            enc_out=enc_out, window=window, remat=remat,
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
+        if prefix_emb is not None:
+            h = h[:, prefix_emb.shape[1]:]
+        nll = chunked_xent(h, _unembed(params, cfg), batch["labels"],
+                           chunk=loss_chunk, mask=batch.get("loss_mask"))
+        return nll + moe_aux_weight * aux
+
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward over the prompt, also populating the decode cache.
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, tokens, *,
+            prefix_emb: Optional[jnp.ndarray] = None,
+            enc_out: Optional[jnp.ndarray] = None,
+            window: Optional[int] = None,
+            q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Returns (last_token_logits (B, V), cache)."""
+    pat, periods = cfg.resolve_pattern()
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    prefix_len = 0
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_emb.shape[1]
+    window = window if window is not None else cfg.sliding_window
+
+    def period_body(x, period_params):
+        caches = {}
+        for i, spec in enumerate(pat):
+            bp = period_params[f"pos{i}"]
+            c = {}
+            h = apply_norm(cfg, bp["pre_norm"], x)
+            if spec.kind == "attn":
+                h, (k, v) = attn_lib.attention(
+                    bp["attn"], h, num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+                    rope_theta=cfg.rope_theta, causal=True, window=window,
+                    prefix_len=prefix_len, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                    return_kv=True)
+                c["k"], c["v"] = k, v
+            else:
+                h, st = mamba_lib.mamba_block(
+                    bp["mamba"], h, num_heads=cfg.ssm_heads,
+                    head_dim=cfg.ssm_head_dim, ssm_state=cfg.ssm_state,
+                    chunk=cfg.ssm_chunk, return_state=True)
+                c.update(st)
+            x = x + h
+            if spec.cross:
+                h = apply_norm(cfg, bp["cross_norm"], x)
+                hq = h @ bp["cross"]["wq"]
+                ck = enc_out @ bp["cross"]["wk"]
+                cv = enc_out @ bp["cross"]["wv"]
+                if "bq" in bp["cross"]:
+                    hq = hq + bp["cross"]["bq"]
+                    ck = ck + bp["cross"]["bk"]
+                    cv = cv + bp["cross"]["bv"]
+                b, s, _ = h.shape
+                se = enc_out.shape[1]
+                c["cross_k"] = ck.reshape(b, se, cfg.num_kv_heads, cfg.resolved_head_dim)
+                c["cross_v"] = cv.reshape(b, se, cfg.num_kv_heads, cfg.resolved_head_dim)
+                h = attn_lib.attention(
+                    bp["cross"], h, num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+                    rope_theta=None, causal=False, cross_kv=enc_out,
+                    q_chunk=q_chunk, kv_chunk=kv_chunk)
+                x = x + h
+            h = apply_norm(cfg, bp["mlp_norm"], x)
+            if spec.moe:
+                h, _ = moe_lib.moe(
+                    bp["moe"], h, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                    activation=cfg.activation, capacity_factor=cfg.capacity_factor,
+                    num_shared_experts=cfg.num_shared_experts)
+            elif cfg.d_ff:
+                h = mlp_lib.mlp(bp["mlp"], h, activation=cfg.activation)
+            else:
+                h = jnp.zeros_like(x)
+            x = x + h
+            caches[f"pos{i}"] = c
+        return x, caches
+
+    x, cache = jax.lax.scan(period_body, x, params["blocks"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = x[:, -1].astype(jnp.float32) @ _unembed(params, cfg).astype(jnp.float32).T
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve) path
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16, make=None):
+    """Cache pytree (optionally built through a maker for dry-run structs).
+
+    Layout mirrors the block pattern: per pattern position, leaves stacked
+    over periods."""
+    pat, periods = cfg.resolve_pattern()
+    mk = make or (lambda path, shape, spec=P(), init=None: jnp.zeros(shape, dtype))
+
+    def stk(path, shape, spec=P(), init=None):
+        return mk(path, (periods,) + tuple(shape), P(None, *tuple(spec)), init)
+
+    cache = {}
+    for i, spec in enumerate(pat):
+        c = {}
+        if spec.kind == "attn":
+            c["k"] = stk(f"cache.pos{i}.k", (batch, max_len, cfg.num_kv_heads, cfg.resolved_head_dim),
+                         P(("pod", "data"), None, "model", None))
+            c["v"] = stk(f"cache.pos{i}.v", (batch, max_len, cfg.num_kv_heads, cfg.resolved_head_dim),
+                         P(("pod", "data"), None, "model", None))
+        else:
+            c["h"] = stk(f"cache.pos{i}.h", (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                         P(("pod", "data"), "model", None, None))
+            c["conv_x"] = stk(f"cache.pos{i}.conv_x", (batch, 3, cfg.d_inner),
+                              P(("pod", "data"), None, "model"))
+            c["conv_B"] = stk(f"cache.pos{i}.conv_B", (batch, 3, cfg.ssm_state),
+                              P(("pod", "data"), None, None))
+            c["conv_C"] = stk(f"cache.pos{i}.conv_C", (batch, 3, cfg.ssm_state),
+                              P(("pod", "data"), None, None))
+        if spec.cross:
+            c["cross_k"] = stk(f"cache.pos{i}.cross_k",
+                               (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.resolved_head_dim),
+                               P(("pod", "data"), None, "model", None))
+            c["cross_v"] = stk(f"cache.pos{i}.cross_v",
+                               (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.resolved_head_dim),
+                               P(("pod", "data"), None, "model", None))
+        cache[f"pos{i}"] = c
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *,
+                window: Optional[int] = None,
+                seq_shard_axis: Optional[str] = None):
+    """One-token serve step.  tokens: (B, 1); pos: scalar int32 (tokens
+    already in cache).  Returns (logits (B, V), new_cache)."""
+    pat, periods = cfg.resolve_pattern()
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    window = window if window is not None else cfg.sliding_window
+
+    def period_body(x, scanned):
+        period_params, pcache = scanned
+        new_cache = {}
+        for i, spec in enumerate(pat):
+            bp = period_params[f"pos{i}"]
+            c = pcache[f"pos{i}"]
+            nc = dict(c)
+            h = apply_norm(cfg, bp["pre_norm"], x)
+            if spec.kind == "attn":
+                h, kv = attn_lib.decode_attention(
+                    bp["attn"], h, {"k": c["k"], "v": c["v"]}, pos,
+                    num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                    window=window, seq_shard_axis=seq_shard_axis)
+                nc.update(kv)
+            else:
+                h, mc = mamba_lib.mamba_decode_step(
+                    bp["mamba"], h, {k: c[k] for k in ("h", "conv_x", "conv_B", "conv_C")},
+                    num_heads=cfg.ssm_heads, head_dim=cfg.ssm_head_dim,
+                    ssm_state=cfg.ssm_state)
+                nc.update(mc)
+            x = x + h
+            if spec.cross:
+                h = apply_norm(cfg, bp["cross_norm"], x)
+                h, _ = attn_lib.decode_attention(
+                    bp["cross"], h, {"k": c["cross_k"], "v": c["cross_v"]},
+                    jnp.asarray(cfg.encoder_seq - 1, jnp.int32),
+                    num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, rope_theta=None, cross=True)
+                nc["cross_k"], nc["cross_v"] = c["cross_k"], c["cross_v"]
+                x = x + h
+            h = apply_norm(cfg, bp["mlp_norm"], x)
+            if spec.moe:
+                # Decode routes a single token per sequence: use a no-drop
+                # capacity (cap = group*top_k) so serving never drops tokens
+                # (training capacity pressure doesn't apply to batch-1 groups).
+                h, _ = moe_lib.moe(
+                    bp["moe"], h, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                    activation=cfg.activation,
+                    capacity_factor=float(cfg.num_experts),
+                    num_shared_experts=cfg.num_shared_experts,
+                    group_size=max(x.shape[0], 8))
+            elif cfg.d_ff:
+                h = mlp_lib.mlp(bp["mlp"], h, activation=cfg.activation)
+            else:
+                h = jnp.zeros_like(x)
+            x = x + h
+            new_cache[f"pos{i}"] = nc
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(period_body, x, (params["blocks"], cache))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = (x[:, 0].astype(jnp.float32) @ _unembed(params, cfg).astype(jnp.float32).T)
+    return logits, new_cache

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    apply_updates,
+    constant_schedule,
+    cosine_schedule,
+    get_optimizer,
+    momentum,
+    sgd,
+)

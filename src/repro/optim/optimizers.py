@@ -1,0 +1,138 @@
+"""Minimal optax-free optimizers.
+
+Each optimizer is a pair ``(init(params) -> state, update(grads, state,
+params, step) -> (updates, state))`` mirroring the optax contract; apply with
+:func:`apply_updates`.  The paper's update (eq. (11)) is plain ``sgd``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple[Pytree, Pytree]]
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def _as_schedule(lr):
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+# --------------------------------------------------------------------------
+# Optimizers
+# --------------------------------------------------------------------------
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None, step=0):
+        g = jax.tree_util.tree_map(lambda x: -sched(step) * x, grads)
+        return g, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None, step=0):
+        new_m = jax.tree_util.tree_map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda m, g: g + beta * m, new_m, grads)
+        else:
+            upd = new_m
+        return jax.tree_util.tree_map(lambda u: -sched(step) * u, upd), new_m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam / AdamW (decoupled weight decay when ``weight_decay`` > 0)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            mu=jax.tree_util.tree_map(z, params),
+            nu=jax.tree_util.tree_map(z, params),
+        )
+
+    def update(grads, state, params=None, step=0):
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step_f
+        bc2 = 1 - b2 ** step_f
+        lr_t = sched(step)
+
+        def upd(m, v, p, g):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params, grads)
+        return updates, AdamState(mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, **kw)
+    if name == "adam":
+        return adam(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,105 @@
+"""Robust aggregation rules vs naive references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregators as agg
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree(w=12):
+    k1, k2 = jax.random.split(KEY)
+    return {"x": jax.random.normal(k1, (w, 7)),
+            "y": jax.random.normal(k2, (w, 3, 2))}
+
+
+def test_mean():
+    t = _tree()
+    out = agg.mean_agg(t)
+    np.testing.assert_allclose(np.asarray(out["x"]),
+                               np.asarray(jnp.mean(t["x"], 0)), rtol=1e-6)
+
+
+def test_median_odd_even():
+    for w in (9, 10):
+        t = _tree(w)
+        out = agg.median_agg(t)
+        np.testing.assert_allclose(np.asarray(out["x"]),
+                                   np.median(np.asarray(t["x"]), axis=0), atol=1e-6)
+
+
+def test_trimmed_mean():
+    t = _tree(10)
+    out = agg.trimmed_mean_agg(t, trim=2)
+    ref = np.mean(np.sort(np.asarray(t["x"]), axis=0)[2:8], axis=0)
+    np.testing.assert_allclose(np.asarray(out["x"]), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_trimmed_mean_rejects_overtrim():
+    with pytest.raises(ValueError):
+        agg.trimmed_mean_agg(_tree(4), trim=2)
+
+
+def test_krum_selects_inlier():
+    # 8 tight inliers + 3 far outliers; krum must return one of the inliers.
+    k = jax.random.PRNGKey(1)
+    inl = 0.01 * jax.random.normal(k, (8, 5))
+    out = 100.0 + jnp.zeros((3, 5))
+    t = {"x": jnp.concatenate([inl, out])}
+    got = agg.krum_agg(t, num_byzantine=3)
+    assert float(jnp.linalg.norm(got["x"])) < 1.0
+
+
+def test_krum_returns_an_input_row():
+    t = _tree(9)
+    got = agg.krum_agg(t, num_byzantine=2)
+    flat = np.asarray(t["x"])
+    assert any(np.allclose(np.asarray(got["x"]), flat[i]) for i in range(9))
+
+
+def test_geomed_groups_equals_geomed_of_means():
+    t = _tree(12)
+    got = agg.geomed_groups_agg(t, num_groups=4, max_iters=100, tol=1e-9)
+    gm = jax.tree_util.tree_map(
+        lambda z: jnp.mean(z.reshape((4, 3) + z.shape[1:]), axis=1), t)
+    want = agg.geomed_agg(gm, max_iters=100, tol=1e-9)
+    np.testing.assert_allclose(np.asarray(got["x"]), np.asarray(want["x"]), atol=1e-5)
+
+
+def test_geomed_groups_uneven_w():
+    t = _tree(11)   # 11 workers, 4 groups: sizes 3,3,3,2
+    got = agg.geomed_groups_agg(t, num_groups=4, max_iters=50)
+    assert got["x"].shape == (7,)
+    assert bool(jnp.all(jnp.isfinite(got["x"])))
+
+
+def test_registry_names():
+    for name in agg.AGGREGATOR_NAMES:
+        fn = agg.get_aggregator(name, num_groups=3, trim=1, num_byzantine=1)
+        out = fn(_tree(9))
+        assert out["x"].shape == (7,)
+        assert bool(jnp.all(jnp.isfinite(out["x"])))
+
+
+def test_centered_clip_robust_to_outliers():
+    k = jax.random.PRNGKey(3)
+    inl = jax.random.normal(k, (12, 6))
+    out = 1e4 * jnp.ones((5, 6))
+    t = {"x": jnp.concatenate([inl, out])}
+    got = agg.centered_clip_agg(t, radius=2.0, iters=5)
+    assert float(jnp.linalg.norm(got["x"] - jnp.mean(inl, 0))) < 3.0
+
+
+def test_geomed_blockwise_per_leaf():
+    t = _tree(10)
+    got = agg.geomed_blockwise_agg(t, max_iters=100, tol=1e-9)
+    # each leaf equals the leaf-local geomed
+    want_x = agg.geomed_agg({"x": t["x"]}, max_iters=100, tol=1e-9)["x"]
+    np.testing.assert_allclose(np.asarray(got["x"]), np.asarray(want_x), atol=1e-5)
+
+
+def test_unknown_aggregator():
+    with pytest.raises(ValueError):
+        agg.get_aggregator("nope")

@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, as a
+REDUCED variant (<=2 periods, d_model<=256, <=4 experts), runs one forward/
+train step and one prefill+decode step on CPU; output shapes + finiteness
+asserted.  The FULL configs are exercised only by the dry-run."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.base import ShapeConfig
+from repro.models import build_model, input_specs
+
+SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+
+
+def _batch(cfg):
+    specs = input_specs(cfg, SHAPE)
+    batch = {}
+    key = jax.random.PRNGKey(0)
+    for k, v in specs.items():
+        if v.dtype == jnp.int32:
+            batch[k] = jax.random.randint(key, v.shape, 0, cfg.vocab_size, jnp.int32)
+        else:
+            batch[k] = 0.02 * jax.random.normal(key, v.shape, jnp.float32).astype(v.dtype)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name).reduced()
+            model = build_model(cfg, remat=False, q_chunk=16, kv_chunk=16,
+                                loss_chunk=16)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[name] = (cfg, model, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step(built, name):
+    cfg, model, params = built(name)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{name} loss not finite"
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32)))) for g in leaves), \
+        f"{name} grads not finite"
+    total = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in leaves)
+    assert total > 0, f"{name} zero gradients"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_decode(built, name):
+    cfg, model, params = built(name)
+    batch = _batch(cfg)
+    pb = {k: v for k, v in batch.items() if k != "labels"}
+    pb["tokens"] = pb["tokens"][:, :8]
+    logits, cache = model.prefill(params, pb)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{name} prefill logits not finite"
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = model.decode_step(params, cache, tok, jnp.asarray(7, jnp.int32))
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2))), f"{name} decode logits not finite"
+    # cache structure preserved
+    assert jax.tree_util.tree_structure(cache) == jax.tree_util.tree_structure(cache2)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_config_bounds(name):
+    cfg = get_config(name).reduced()
+    pat, periods = cfg.resolve_pattern()
+    assert periods <= 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+def test_full_configs_match_assignment():
+    """Pin the exact assigned hyperparameters."""
+    c = get_config("mamba2-130m")
+    assert (c.num_layers, c.d_model, c.vocab_size, c.ssm_state) == (24, 768, 50280, 128)
+    c = get_config("qwen2-moe-a2.7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads) == (24, 2048, 16, 16)
+    assert (c.num_experts, c.top_k, c.num_shared_experts, c.moe_d_ff) == (60, 4, 4, 1408)
+    assert c.vocab_size == 151936
+    c = get_config("qwen2-7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff) == (28, 3584, 28, 4, 18944)
+    assert c.qkv_bias and c.vocab_size == 152064
+    c = get_config("nemotron-4-340b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff) == (96, 18432, 96, 8, 73728)
+    assert c.activation == "squared_relu" and c.vocab_size == 256000
+    c = get_config("whisper-tiny")
+    assert (c.num_layers, c.d_model, c.num_heads, c.d_ff, c.vocab_size) == (4, 384, 6, 1536, 51865)
+    assert c.encoder_seq == 1500
+    c = get_config("mixtral-8x22b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads) == (56, 6144, 48, 8)
+    assert (c.num_experts, c.top_k, c.moe_d_ff, c.vocab_size) == (8, 2, 16384, 32768)
+    assert c.sliding_window is not None
+    c = get_config("jamba-v0.1-52b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff) == (32, 4096, 32, 8, 14336)
+    assert (c.num_experts, c.top_k, c.vocab_size) == (16, 2, 65536)
+    pat, _ = c.resolve_pattern()
+    assert sum(1 for b in pat if b.kind == "attn") == 1 and len(pat) == 8
+    c = get_config("mistral-large-123b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size) == (88, 12288, 96, 8, 28672, 32768)
+    c = get_config("command-r-plus-104b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size) == (64, 12288, 96, 8, 33792, 256000)
+    assert not c.qkv_bias
+    c = get_config("paligemma-3b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size) == (18, 2048, 8, 1, 16384, 257216)
+    assert c.num_prefix_tokens == 256

@@ -1,0 +1,85 @@
+"""Byzantine attack construction (paper Sec. V formulas)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _honest(wh=6, p=5):
+    return {"g": jax.random.normal(KEY, (wh, p))}
+
+
+def test_none_passthrough():
+    h = _honest()
+    cfg = attacks.AttackConfig(name="none", num_byzantine=3)
+    out = attacks.apply_attack(cfg, h, KEY)
+    assert out["g"].shape == (6, 5)
+
+
+def test_sign_flip():
+    h = _honest()
+    cfg = attacks.AttackConfig(name="sign_flip", num_byzantine=2,
+                               sign_flip_magnitude=-3.0)
+    out = attacks.apply_attack(cfg, h, KEY)
+    assert out["g"].shape == (8, 5)
+    hm = np.asarray(jnp.mean(h["g"], 0))
+    np.testing.assert_allclose(np.asarray(out["g"][6]), -3.0 * hm, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["g"][7]), -3.0 * hm, rtol=1e-5)
+
+
+def test_zero_gradient_sums_to_zero():
+    h = _honest()
+    cfg = attacks.AttackConfig(name="zero_gradient", num_byzantine=3)
+    out = attacks.apply_attack(cfg, h, KEY)
+    np.testing.assert_allclose(np.asarray(jnp.sum(out["g"], 0)),
+                               np.zeros(5), atol=1e-5)
+
+
+def test_gaussian_statistics():
+    h = {"g": jnp.zeros((50, 4))}
+    cfg = attacks.AttackConfig(name="gaussian", num_byzantine=2000,
+                               gaussian_variance=30.0)
+    out = attacks.apply_attack(cfg, h, KEY)
+    byz = np.asarray(out["g"][50:])
+    assert abs(byz.mean()) < 0.5
+    assert abs(byz.std() - np.sqrt(30.0)) < 0.5
+
+
+def test_ipm_direction():
+    h = _honest()
+    cfg = attacks.AttackConfig(name="ipm", num_byzantine=1, ipm_eps=0.5)
+    out = attacks.apply_attack(cfg, h, KEY)
+    hm = np.asarray(jnp.mean(h["g"], 0))
+    np.testing.assert_allclose(np.asarray(out["g"][6]), -0.5 * hm, rtol=1e-5)
+
+
+def test_alie_within_cloud():
+    h = _honest(wh=30)
+    cfg = attacks.AttackConfig(name="alie", num_byzantine=2, alie_z=1.0)
+    out = attacks.apply_attack(cfg, h, KEY)
+    hm = np.asarray(jnp.mean(h["g"], 0))
+    hs = np.asarray(jnp.std(h["g"], 0))
+    np.testing.assert_allclose(np.asarray(out["g"][30]), hm + hs, rtol=1e-4)
+
+
+def test_stacked_replaces_first_rows():
+    w, b = 8, 3
+    msgs = {"g": jax.random.normal(KEY, (w, 4))}
+    cfg = attacks.AttackConfig(name="sign_flip", num_byzantine=b)
+    out = attacks.apply_attack_stacked(cfg, msgs, KEY)
+    assert out["g"].shape == (w, 4)
+    # rows b.. unchanged (honest)
+    np.testing.assert_allclose(np.asarray(out["g"][b:]), np.asarray(msgs["g"][b:]))
+    hm = np.asarray(jnp.mean(msgs["g"][b:], 0))
+    for i in range(b):
+        np.testing.assert_allclose(np.asarray(out["g"][i]), -3.0 * hm, rtol=1e-5)
+
+
+def test_unknown_attack_raises():
+    with pytest.raises(ValueError):
+        attacks.apply_attack(
+            attacks.AttackConfig(name="wat", num_byzantine=1), _honest(), KEY)

@@ -1,0 +1,101 @@
+"""Weiszfeld geometric-median unit + property tests (paper eq. (6), Lemma 1)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis.extra import numpy as hnp
+
+from repro.core.geomed import geomed_objective, weiszfeld, weiszfeld_pytree
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_collinear_median():
+    # For points on a line, the geometric median is the 1-D median.
+    pts = jnp.array([[0.0], [1.0], [10.0]])
+    y = weiszfeld(pts, max_iters=200, tol=1e-10)
+    assert abs(float(y[0]) - 1.0) < 1e-3
+
+
+def test_symmetric_center():
+    pts = jnp.array([[1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]])
+    y = weiszfeld(pts, max_iters=100)
+    np.testing.assert_allclose(np.asarray(y), [0.0, 0.0], atol=1e-5)
+
+
+def test_objective_beats_mean():
+    key = jax.random.PRNGKey(0)
+    pts = jax.random.normal(key, (20, 5)) ** 3  # skewed
+    y = weiszfeld(pts, max_iters=200, tol=1e-9)
+    assert float(geomed_objective(pts, y)) <= float(
+        geomed_objective(pts, jnp.mean(pts, axis=0))) + 1e-5
+
+
+def test_epsilon_stationarity():
+    """At the geomed, the sum of unit residual vectors ~ 0 (first-order
+    optimality of eq. (6))."""
+    key = jax.random.PRNGKey(1)
+    pts = jax.random.normal(key, (15, 8))
+    y = weiszfeld(pts, max_iters=500, tol=1e-12)
+    r = pts - y[None]
+    units = r / jnp.linalg.norm(r, axis=1, keepdims=True)
+    assert float(jnp.linalg.norm(jnp.sum(units, axis=0))) < 1e-2
+
+
+def test_breakdown_under_half():
+    """With B < W/2 arbitrarily-far outliers the median stays near the
+    inliers (robustness behind Lemma 1); the mean does not."""
+    key = jax.random.PRNGKey(2)
+    inliers = jax.random.normal(key, (11, 4))
+    outliers = 1e6 * jnp.ones((5, 4))
+    pts = jnp.concatenate([inliers, outliers])
+    y = weiszfeld(pts, max_iters=300, tol=1e-9)
+    assert float(jnp.linalg.norm(y - jnp.mean(inliers, axis=0))) < 5.0
+    assert float(jnp.linalg.norm(jnp.mean(pts, axis=0))) > 1e5
+
+
+@hypothesis.given(
+    pts=hnp.arrays(np.float32, (9, 6),
+                   elements=st.floats(-100, 100, width=32)),
+    shift=hnp.arrays(np.float32, (6,),
+                     elements=st.floats(-50, 50, width=32)),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_translation_equivariance(pts, shift):
+    hypothesis.assume(np.std(pts) > 1e-3)
+    y1 = np.asarray(weiszfeld(jnp.asarray(pts), max_iters=80))
+    y2 = np.asarray(weiszfeld(jnp.asarray(pts + shift), max_iters=80))
+    np.testing.assert_allclose(y1 + shift, y2, atol=2e-2)
+
+
+@hypothesis.given(
+    pts=hnp.arrays(np.float32, (8, 5), elements=st.floats(-10, 10, width=32)),
+    perm_seed=st.integers(0, 1000),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_permutation_invariance(pts, perm_seed):
+    hypothesis.assume(np.std(pts) > 1e-3)
+    rng = np.random.default_rng(perm_seed)
+    perm = rng.permutation(pts.shape[0])
+    y1 = np.asarray(weiszfeld(jnp.asarray(pts), max_iters=100))
+    y2 = np.asarray(weiszfeld(jnp.asarray(pts[perm]), max_iters=100))
+    np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+
+def test_pytree_matches_flat():
+    key = jax.random.PRNGKey(3)
+    z = jax.random.normal(key, (10, 12))
+    tree = {"a": z[:, :5], "b": z[:, 5:].reshape(10, 7, 1)}
+    yt = weiszfeld_pytree(tree, max_iters=100, tol=1e-9)
+    yf = weiszfeld(z, max_iters=100, tol=1e-9)
+    np.testing.assert_allclose(np.asarray(yt["a"]), np.asarray(yf[:5]), rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(yt["b"]).reshape(7), np.asarray(yf[5:]), rtol=2e-5, atol=1e-5)
+
+
+def test_jit_and_grad_safe():
+    pts = jax.random.normal(jax.random.PRNGKey(4), (6, 3))
+    y = jax.jit(lambda p: weiszfeld(p, max_iters=50))(pts)
+    assert y.shape == (3,)
+    assert bool(jnp.all(jnp.isfinite(y)))

@@ -1,0 +1,134 @@
+"""Per-kernel allclose sweeps vs the ref.py oracles (interpret=True on CPU)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES = [(8, 512), (16, 1024), (50, 768), (7, 300), (33, 4096), (2, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("w,p", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_weiszfeld_step(w, p, dt):
+    z = jax.random.normal(KEY, (w, p)).astype(dt)
+    y = jnp.mean(z.astype(jnp.float32), axis=0)
+    got = np.asarray(ops.weiszfeld_step(z, y)).astype(np.float32)
+    want = np.asarray(ref.weiszfeld_step(z, y)).astype(np.float32)
+    np.testing.assert_allclose(got, want, **_tol(dt))
+
+
+@pytest.mark.parametrize("w,p", SHAPES[:4])
+def test_geomed_kernel(w, p):
+    z = jax.random.normal(KEY, (w, p))
+    got = np.asarray(ops.geomed(z, iters=25))
+    want = np.asarray(ref.geomed(z, iters=25))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("w,p", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_coordinate_median(w, p, dt):
+    z = jax.random.normal(KEY, (w, p)).astype(dt)
+    got = np.asarray(ops.coordinate_median(z)).astype(np.float32)
+    want = np.asarray(ref.coordinate_median(z)).astype(np.float32)
+    np.testing.assert_allclose(got, want, **_tol(dt))
+
+
+@pytest.mark.parametrize("w,p", [(9, 512), (16, 700), (50, 2048)])
+@pytest.mark.parametrize("trim", [1, 3])
+def test_trimmed_mean(w, p, trim):
+    z = jax.random.normal(KEY, (w, p))
+    got = np.asarray(ops.trimmed_mean(z, trim=trim))
+    want = np.asarray(ref.trimmed_mean(z, trim))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("j,p", [(4, 512), (10, 777), (32, 2048), (2, 100)])
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_saga_correct(j, p, dt):
+    ks = jax.random.split(KEY, 3)
+    grad = jax.random.normal(ks[0], (p,)).astype(dt)
+    table = jax.random.normal(ks[1], (j, p)).astype(dt)
+    avg = jnp.mean(table.astype(jnp.float32), axis=0).astype(dt)
+    for idx in (0, j // 2, j - 1):
+        got = ops.saga_correct(grad, table, avg, jnp.asarray(idx, jnp.int32))
+        want = ref.saga_correct(grad, table, avg, jnp.asarray(idx))
+        for g, w_ in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w_, np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,causal,qb,kb", [
+    (2, 64, 4, 2, 16, True, 16, 16),
+    (1, 100, 2, 2, 32, True, 32, 16),    # ragged S vs blocks
+    (2, 37, 4, 4, 8, False, 8, 8),       # bidirectional
+    (1, 192, 2, 1, 64, True, 128, 64),   # MQA
+])
+def test_flash_attention(b, s, h, kv, hd, causal, qb, kb):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    got = ops.flash_attention(q, k, v, causal=causal, q_block=qb, kv_block=kb)
+    rep = h // kv
+    kk, vv = jnp.repeat(k, rep, 2), jnp.repeat(v, rep, 2)
+    tb = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    want = ref.flash_attention(tb(q), tb(kk), tb(vv), causal).reshape(
+        b, h, s, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_flash_attention_dtypes(dt):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 48, 2, 16)).astype(dt)
+    k = jax.random.normal(ks[1], (1, 48, 2, 16)).astype(dt)
+    v = jax.random.normal(ks[2], (1, 48, 2, 16)).astype(dt)
+    got = ops.flash_attention(q, k, v, q_block=16, kv_block=16)
+    assert got.dtype == dt
+    tb = lambda x: x.transpose(0, 2, 1, 3).reshape(2, 48, 16)
+    want = ref.flash_attention(tb(q), tb(k), tb(v), True).reshape(
+        1, 2, 48, 16).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dt))
+
+
+@hypothesis.given(
+    w=st.integers(2, 40), p=st.integers(1, 600), seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_weiszfeld_step_property(w, p, seed):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (w, p))
+    y = jnp.mean(z, axis=0)
+    got = np.asarray(ops.weiszfeld_step(z, y))
+    want = np.asarray(ref.weiszfeld_step(z, y))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@hypothesis.given(
+    j=st.integers(2, 16), p=st.integers(1, 400),
+    idx_frac=st.floats(0, 0.999), seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_saga_property(j, p, idx_frac, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    grad = jax.random.normal(ks[0], (p,))
+    table = jax.random.normal(ks[1], (j, p))
+    avg = jnp.mean(table, axis=0)
+    idx = jnp.asarray(int(idx_frac * j), jnp.int32)
+    got = ops.saga_correct(grad, table, avg, idx)
+    want = ref.saga_correct(grad, table, avg, idx)
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_), rtol=1e-4, atol=1e-5)

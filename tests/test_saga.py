@@ -1,0 +1,78 @@
+"""SAGA table semantics (paper Alg. 1): correctness + unbiasedness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import saga
+
+
+def _state(w=3, j=5, shape=(4,)):
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (w, j) + shape)
+    return saga.SagaState(table=table,
+                          avg=jnp.mean(table, axis=1)), w, j, shape
+
+
+@pytest.mark.parametrize("fn", [saga.saga_correct, saga.saga_correct_scatter])
+def test_correction_formula(fn):
+    state, w, j, shape = _state()
+    grads = {"p": jax.random.normal(jax.random.PRNGKey(1), (w,) + shape)}
+    st = saga.SagaState(table={"p": state.table}, avg={"p": state.avg})
+    idx = jnp.array([0, 3, 4], jnp.int32)
+    msgs, new = fn(st, grads, idx)
+    for wi in range(w):
+        old = np.asarray(state.table[wi, int(idx[wi])])
+        want = np.asarray(grads["p"][wi]) - old + np.asarray(state.avg[wi])
+        np.testing.assert_allclose(np.asarray(msgs["p"][wi]), want, rtol=1e-5, atol=1e-6)
+        # table row replaced, others untouched
+        np.testing.assert_allclose(np.asarray(new.table["p"][wi, int(idx[wi])]),
+                                   np.asarray(grads["p"][wi]), rtol=1e-6)
+        for jj in range(5):
+            if jj != int(idx[wi]):
+                np.testing.assert_allclose(np.asarray(new.table["p"][wi, jj]),
+                                           np.asarray(state.table[wi, jj]), rtol=1e-6)
+        # avg updated incrementally
+        want_avg = np.asarray(state.avg[wi]) + (np.asarray(grads["p"][wi]) - old) / 5
+        np.testing.assert_allclose(np.asarray(new.avg["p"][wi]), want_avg, rtol=1e-5, atol=1e-6)
+
+
+def test_avg_consistency_after_updates():
+    """After arbitrary updates, avg == mean(table) (the invariant Alg. 1
+    maintains incrementally)."""
+    state, w, j, shape = _state()
+    st = saga.SagaState(table={"p": state.table}, avg={"p": state.avg})
+    key = jax.random.PRNGKey(2)
+    for t in range(10):
+        key, k1, k2 = jax.random.split(key, 3)
+        grads = {"p": jax.random.normal(k1, (w,) + shape)}
+        idx = jax.random.randint(k2, (w,), 0, j)
+        _, st = saga.saga_correct_scatter(st, grads, idx)
+    np.testing.assert_allclose(np.asarray(st.avg["p"]),
+                               np.asarray(jnp.mean(st.table["p"], axis=1)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_unbiasedness():
+    """E_i[m_w] over i uniform = full local gradient mean (paper eq. (18)):
+    enumerate all J choices exactly."""
+    state, w, j, shape = _state()
+    st = saga.SagaState(table={"p": state.table}, avg={"p": state.avg})
+    grads_true = {"p": jax.random.normal(jax.random.PRNGKey(3), (w, j) + shape)}
+    msgs = []
+    for i in range(j):
+        idx = jnp.full((w,), i, jnp.int32)
+        g_i = {"p": grads_true["p"][:, i]}
+        m, _ = saga.saga_correct_scatter(st, g_i, idx)
+        msgs.append(m["p"])
+    mean_msg = jnp.mean(jnp.stack(msgs), axis=0)
+    want = jnp.mean(grads_true["p"], axis=1)  # (1/J) sum_i f'_i(x)
+    np.testing.assert_allclose(np.asarray(mean_msg), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_init_zeros_shapes():
+    params = {"a": jnp.zeros((3, 2)), "b": jnp.zeros((5,))}
+    st = saga.saga_init_zeros(params, num_workers=4, num_samples=6)
+    assert st.table["a"].shape == (4, 6, 3, 2)
+    assert st.avg["b"].shape == (4, 5)
+    assert st.num_samples == 6
