@@ -12,6 +12,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.configs.base import TrainConfig  # noqa: E402
 from repro.core.robust_step import RobustConfig  # noqa: E402
@@ -34,7 +35,7 @@ def main() -> None:
                               num_byzantine=1, comm=comm, weiszfeld_iters=16)
         step_fn, _, _ = steps_lib.make_train_step(
             model, robust, TrainConfig(optimizer="adamw", lr=1e-3), mesh)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             params = model.init(jax.random.PRNGKey(0))
             opt = get_optimizer("adamw", 1e-3)
             state = {"params": params, "opt": opt.init(params),

@@ -12,6 +12,8 @@ from repro.core.aggregators import (
 from repro.core.attacks import ATTACK_NAMES, AttackConfig, apply_attack
 from repro.core.geomed import geomed_objective, weiszfeld, weiszfeld_pytree, weiszfeld_sharded
 from repro.core.robust_step import (
+    GATHER_AGGREGATORS,
+    SHARDED_AGGREGATORS,
     FederatedState,
     RobustConfig,
     distributed_aggregate,

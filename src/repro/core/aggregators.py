@@ -118,33 +118,43 @@ def krum_agg(stacked: Pytree, *, num_byzantine: int) -> Pytree:
 
 
 def centered_clip_agg(stacked: Pytree, *, radius: float = 1.0,
-                      iters: int = 3) -> Pytree:
+                      iters: int = 3,
+                      axis_names: tuple = ()) -> Pytree:
     """Centered clipping (Karimireddy et al. 2021) — beyond-paper baseline.
 
     v <- v + mean_w clip(m_w - v, radius), iterated from the coordinate
     median; clips the *influence* of any single worker to ``radius`` per
     iteration, giving a breakdown point of 1/2 with O(W p) work and no sort.
+
+    ``axis_names``: mesh axes over which the per-worker squared residual
+    partials are psum'd when the leaves are coordinate shards inside a
+    ``shard_map`` (same convention as :func:`...geomed.weiszfeld_pytree`);
+    this single implementation backs the local, gather and sharded comm
+    paths.  The iterate stays float32 and is cast to the leaf dtypes once at
+    the end (see DESIGN.md Sec. 2 on the f32-iterate policy).
     """
+    stacked32 = jax.tree_util.tree_map(lambda z: z.astype(jnp.float32), stacked)
 
     def clip_tree(v):
         # clip scale from the *global* per-worker residual norms (all leaves)
         diffs = jax.tree_util.tree_map(
-            lambda zl, vl: zl.astype(jnp.float32) - vl.astype(jnp.float32)[None],
-            stacked, v)
+            lambda zl, vl: zl - vl[None], stacked32, v)
         sq = None
         for dl in jax.tree_util.tree_leaves(diffs):
             part = jnp.sum(dl.reshape(dl.shape[0], -1) ** 2, axis=-1)
             sq = part if sq is None else sq + part
+        for ax in axis_names:
+            sq = jax.lax.psum(sq, ax)
         scale = jnp.minimum(1.0, radius / jnp.maximum(jnp.sqrt(sq), 1e-12))
         return jax.tree_util.tree_map(
-            lambda vl, dl: (vl.astype(jnp.float32) + jnp.mean(
-                dl * scale.reshape((-1,) + (1,) * (dl.ndim - 1)), axis=0)).astype(vl.dtype),
+            lambda vl, dl: vl + jnp.mean(
+                dl * scale.reshape((-1,) + (1,) * (dl.ndim - 1)), axis=0),
             v, diffs)
 
-    v = median_agg(stacked)
+    v = median_agg(stacked32)
     for _ in range(iters):
         v = clip_tree(v)
-    return v
+    return jax.tree_util.tree_map(lambda vl, z: vl.astype(z.dtype), v, stacked)
 
 
 def geomed_blockwise_agg(stacked: Pytree, *, max_iters: int = 64,

@@ -130,13 +130,58 @@ def apply_attack_stacked(cfg: AttackConfig, msgs: Pytree, key: jax.Array) -> Pyt
     """Variant for the distributed data-parallel path: ``msgs`` holds ALL W
     workers' messages stacked (leading axis W); the first B rows are
     *replaced* by the attack (their honest compute is discarded), leaving
-    W - B honest rows.  Pure jnp -- usable under jit with the worker axis
-    sharded across the mesh."""
+    W - B honest rows.
+
+    Everything is mask-select over the intact (W, ...) leaves -- honest
+    statistics come from masked sums, the Byzantine rows go in with
+    ``jnp.where``.  Do NOT rewrite this with ``z[b:]`` + concatenate: an
+    unaligned slice/concat of an axis that is sharded across the mesh both
+    costs halo exchanges and miscompiles (silently doubled rows) under
+    older XLA SPMD partitioners."""
     if cfg.name == "none" or cfg.num_byzantine == 0:
         return msgs
+    if cfg.name not in _ATTACKS:
+        raise ValueError(f"unknown attack {cfg.name!r}")
     b = cfg.num_byzantine
-    honest = jax.tree_util.tree_map(lambda z: z[b:], msgs)
-    full = apply_attack(cfg, honest, key)  # honest rows then B byz rows
-    # Reorder: byzantine rows first (mask-replacement layout).
-    return jax.tree_util.tree_map(
-        lambda z: jnp.concatenate([z[-b:], z[:-b]], axis=0), full)
+    w = jax.tree_util.tree_leaves(msgs)[0].shape[0]
+    wh = w - b
+
+    def honest_mask(z):
+        m = (jnp.arange(w) >= b).astype(jnp.float32)
+        return m.reshape((w,) + (1,) * (z.ndim - 1))
+
+    def masked_mean(fn):
+        return jax.tree_util.tree_map(
+            lambda z: jnp.sum(fn(z.astype(jnp.float32)) * honest_mask(z), axis=0) / wh,
+            msgs)
+
+    mean = masked_mean(lambda z: z)
+    name = cfg.name
+    if name == "sign_flip":
+        byz = jax.tree_util.tree_map(lambda m: cfg.sign_flip_magnitude * m, mean)
+    elif name == "zero_gradient":
+        # -(1/B) sum_honest => the mean of all W messages is exactly zero.
+        byz = jax.tree_util.tree_map(lambda m: -(wh / b) * m, mean)
+    elif name == "ipm":
+        byz = jax.tree_util.tree_map(lambda m: -cfg.ipm_eps * m, mean)
+    elif name == "alie":
+        sq = masked_mean(jnp.square)
+        byz = jax.tree_util.tree_map(
+            lambda m, s: m + cfg.alie_z * jnp.sqrt(jnp.maximum(s - m * m, 0.0)),
+            mean, sq)
+    elif name == "gaussian":
+        std = jnp.sqrt(cfg.gaussian_variance)
+        leaves, treedef = jax.tree_util.tree_flatten(mean)
+        keys = jax.random.split(key, len(leaves))
+        byz = jax.tree_util.tree_unflatten(treedef, [
+            m[None] + std * jax.random.normal(k, (w,) + m.shape, jnp.float32)
+            for m, k in zip(leaves, keys)])
+    else:  # pragma: no cover - guarded by the _ATTACKS check above
+        raise ValueError(f"unknown attack {name!r}")
+
+    def select(z, bz):
+        is_byz = (jnp.arange(w) < b).reshape((w,) + (1,) * (z.ndim - 1))
+        bz_rows = bz if bz.ndim == z.ndim else jnp.broadcast_to(bz[None], z.shape)
+        return jnp.where(is_byz, bz_rows.astype(z.dtype), z)
+
+    return jax.tree_util.tree_map(select, msgs, byz)

@@ -138,12 +138,15 @@ def weiszfeld_pytree(
     identical) stopping statistic is ``pmax``-synchronized, so the
     ``while_loop`` predicate is replicated across all devices (required for
     lockstep SPMD early stopping).  Use the worker axes here in gather mode.
+
+    The iterate stays float32 throughout and is cast back to the leaf dtypes
+    only on return: re-quantizing y to bf16 every iteration would both slow
+    convergence and make gather-mode results drift from the sharded path
+    (which flattens to f32 once up front).
     """
-
-    def mean0(z):
-        return jnp.mean(z.astype(jnp.float32), axis=0).astype(z.dtype)
-
-    y0 = jax.tree_util.tree_map(mean0, stacked)
+    stacked32 = jax.tree_util.tree_map(
+        lambda z: z.astype(jnp.float32), stacked)
+    y0 = jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0), stacked32)
 
     def cond(state):
         _, delta, it = state
@@ -151,15 +154,14 @@ def weiszfeld_pytree(
 
     def body(state):
         y, _, it = state
-        sq = _tree_sqdist_partials(stacked, y)
+        sq = _tree_sqdist_partials(stacked32, y)
         for ax in axis_names:
             sq = jax.lax.psum(sq, ax)
         inv = 1.0 / jnp.maximum(jnp.sqrt(sq), _DIST_FLOOR)
-        y_new = _tree_weighted_mean(stacked, inv)
-        #
+        y_new = _tree_weighted_mean(stacked32, inv)
 
         move = sum(
-            jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2)
+            jnp.sum((a - b) ** 2)
             for a, b in zip(jax.tree_util.tree_leaves(y_new), jax.tree_util.tree_leaves(y))
         )
         for ax in axis_names:
@@ -170,7 +172,7 @@ def weiszfeld_pytree(
 
     state0 = (y0, jnp.asarray(jnp.inf, jnp.float32), 0)
     y, _, _ = jax.lax.while_loop(cond, body, state0)
-    return y
+    return jax.tree_util.tree_map(lambda yl, z: yl.astype(z.dtype), y, stacked)
 
 
 def weiszfeld_sharded(

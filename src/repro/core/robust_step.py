@@ -27,6 +27,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
 from repro.core import saga as saga_lib
@@ -231,7 +232,22 @@ def distributed_aggregate(
             stacked)
     if name == "krum":
         return _distributed_krum(stacked, cfg, model_axes)
-    raise ValueError(f"unsupported distributed aggregator {name!r}")
+    if name == "centered_clip":
+        # Full-vector residual norms need a psum over the model axes only
+        # (the worker axis is materialized by the all_gather above).
+        return agg_lib.centered_clip_agg(
+            stacked, radius=cfg.clip_radius, axis_names=tuple(model_axes))
+    raise ValueError(f"unsupported distributed aggregator {name!r}; "
+                     f"supported: {GATHER_AGGREGATORS}")
+
+
+# Aggregators available on each distributed comm path; kept next to the
+# dispatchers below so the error messages stay truthful.
+GATHER_AGGREGATORS = ("mean", "median", "geomed", "geomed_groups",
+                      "trimmed_mean", "krum", "centered_clip",
+                      "geomed_blockwise")
+SHARDED_AGGREGATORS = ("mean", "median", "trimmed_mean", "geomed",
+                       "geomed_groups", "centered_clip")
 
 
 def _distributed_krum(stacked: Pytree, cfg: RobustConfig,
@@ -269,9 +285,10 @@ def sharded_aggregate(
     re-assembled with an all_gather.  Bytes moved per device drop from
     O(W * p_shard) to O(2 * p_shard).
 
-    Only geomed (+ the coordinate-separable rules) are supported here;
-    Krum fundamentally needs pairwise full-vector products and stays on the
-    gather path.
+    Only geomed / centered_clip (+ the coordinate-separable rules listed in
+    ``SHARDED_AGGREGATORS``) are supported here; Krum fundamentally needs
+    pairwise full-vector products (and geomed_blockwise per-leaf norms) and
+    stays on the gather path.
     """
     w = num_workers
     flat, unflatten = _flatten_concat(grads)
@@ -300,8 +317,20 @@ def sharded_aggregate(
             zz, max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
             axis_names=tuple(worker_axes) + tuple(model_axes),
         )
+    elif name == "centered_clip":
+        # Same psum trick as the distributed Weiszfeld: full-vector residual
+        # norms are restored by a psum of W floats over worker+model axes.
+        slice_agg = agg_lib.centered_clip_agg(
+            z_local, radius=cfg.clip_radius,
+            axis_names=tuple(worker_axes) + tuple(model_axes))
     else:
-        raise ValueError(f"aggregator {name!r} unsupported in comm=sharded")
+        # Krum needs pairwise full-vector inner products and geomed_blockwise
+        # per-leaf norms; neither survives the flatten/all_to_all coordinate
+        # resharding, so they stay on the gather path.
+        raise ValueError(
+            f"aggregator {name!r} unsupported in comm='sharded'; "
+            f"supported: {SHARDED_AGGREGATORS} (use comm='gather' for "
+            f"{tuple(sorted(set(GATHER_AGGREGATORS) - set(SHARDED_AGGREGATORS)))})")
 
     # Re-assemble the full (padded) vector on every worker.
     full = jax.lax.all_gather(slice_agg, axes, axis=0, tiled=False).reshape(-1)
@@ -324,7 +353,7 @@ def distributed_attack(
         return msg
     w = 1
     for a in worker_axes:
-        w = w * jax.lax.axis_size(a)
+        w = w * compat.axis_size(a)
     wid = jax.lax.axis_index(tuple(worker_axes) if len(worker_axes) > 1 else worker_axes[0])
     b = cfg.num_byzantine
     wh = w - b

@@ -94,7 +94,6 @@ def saga_correct(
         msg = g - old + avg.astype(g.dtype)
         return msg, old
 
-    msgs, olds = {}, {}
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
     flat_t = treedef.flatten_up_to(state.table)
     flat_a = treedef.flatten_up_to(state.avg)
@@ -105,7 +104,6 @@ def saga_correct(
         out_msgs.append(msg)
         new_avgs.append((avg + (g - old).astype(avg.dtype) / j).astype(avg.dtype))
         # table[w, idx[w]] <- g[w]
-        w = g.shape[0]
         onehot = jax.nn.one_hot(idx, tab.shape[1], dtype=tab.dtype)  # (W, J)
         onehot = onehot.reshape(onehot.shape + (1,) * (g.ndim - 1))
         new_tabs.append(tab * (1 - onehot) + onehot * g[:, None].astype(tab.dtype))

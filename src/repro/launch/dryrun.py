@@ -21,6 +21,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import ARCH_NAMES, SHAPES, get_config
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.core.robust_step import RobustConfig
@@ -91,7 +92,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     }
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         if shape.kind == "train":
             step, sspecs, sstructs = steps_lib.make_train_step(
                 model, robust, train, mesh,
@@ -156,7 +157,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                 record["memory"]["argument_gb"] + record["memory"]["temp_gb"]
                 + record["memory"]["output_gb"] - record["memory"]["alias_gb"])
         try:
-            ca = compiled.cost_analysis()
+            ca = compat.cost_analysis(compiled)
             record["flops_per_device"] = float(ca.get("flops", 0.0))
             record["bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
         except Exception as e:  # pragma: no cover

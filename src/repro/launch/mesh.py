@@ -8,36 +8,24 @@ Kept as FUNCTIONS so importing this module never touches jax device state.
 Workers of the Byzantine-robust federation are the indices along the
 ("pod",) "data" axes: 16 workers single-pod, 32 multi-pod; each worker owns
 16 model-parallel chips and its own finite local dataset + SAGA table.
+
+All mesh construction funnels through ``repro.compat.make_mesh`` so the same
+code runs on jax 0.4.x (no axis_types) and >= 0.6 (explicit AxisType.Auto).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    n = 1
-    for s in shape:
-        n *= s
-    devices = jax.devices()[:n]
-    if len(devices) < n:
-        raise RuntimeError(
-            f"mesh {shape} needs {n} devices, found {len(devices)} -- set "
-            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
-            "importing jax (dryrun.py does this)")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    if multi_pod:
+        return compat.make_mesh((2, 16, 16), ("pod", "data", "model"))
+    return compat.make_mesh((16, 16), ("data", "model"))
 
 
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over however many host devices exist (tests/examples)."""
-    n = 1
-    for s in shape:
-        n *= s
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, axes)
 
 
 def worker_axes(mesh) -> tuple[str, ...]:

@@ -3,16 +3,24 @@ step by step with the KV/SSM cache (greedy sampling).
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --reduced \\
         --prompt-len 32 --decode-tokens 16 --batch 2
+
+Pass ``--mesh DxM`` (e.g. 4x2) to serve on a device mesh: the batch is
+sharded over the 'data' axis and the whole loop runs under the ambient mesh
+(version-portable via repro.compat), exercising the same runtime the
+distributed trainer uses.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import get_config
+from repro.launch import mesh as mesh_lib
 from repro.models.api import build_model
 
 
@@ -23,12 +31,27 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-tokens", type=int, default=16)
+    ap.add_argument("--mesh", default="", help="e.g. 4x2 (data x model); "
+                    "default: single-device, no mesh")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        compat.require_distributed(min_devices=2, what="mesh serving")
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = mesh_lib.make_host_mesh(shape, ("data", "model"))
+        print(f"mesh: {mesh_lib.axis_sizes(mesh)}")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg, remat=False, q_chunk=64, kv_chunk=64)
+    with (compat.use_mesh(mesh) if mesh is not None
+          else contextlib.nullcontext()):
+        _serve(args, cfg, model, mesh)
+
+
+def _serve(args, cfg, model, mesh) -> None:
     key = jax.random.PRNGKey(0)
     params = model.init(key)
 
@@ -40,6 +63,12 @@ def main() -> None:
     if cfg.family == "audio":
         batch["audio_emb"] = 0.02 * jax.random.normal(
             jax.random.fold_in(key, 2), (b, cfg.encoder_seq, cfg.d_model))
+    if mesh is not None and b % mesh_lib.axis_sizes(mesh)["data"] == 0:
+        # Shard the serving batch over the 'data' axis (leading batch dim).
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        sh = NamedSharding(mesh, P("data"))
+        batch = {k: jax.device_put(v, sh) for k, v in batch.items()}
 
     t0 = time.time()
     logits, cache = jax.jit(model.prefill)(params, batch)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.core import attacks as attack_lib
 from repro.core import saga as saga_lib
@@ -48,6 +49,11 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
     axis of size num_workers(mesh).
     """
     cfg = model.cfg
+    if robust.comm not in ("gather", "sharded"):
+        raise ValueError(f"RobustConfig.comm must be 'gather' or 'sharded', "
+                         f"got {robust.comm!r}")
+    if robust.comm == "sharded":
+        compat.require_distributed(what="comm='sharded' aggregation")
     wa = mesh_lib.worker_axes(mesh)
     w = mesh_lib.num_workers(mesh)
     optimizer = optim_lib.get_optimizer(train.optimizer, train.lr)
@@ -151,7 +157,7 @@ def _gather_agg(msgs: Pytree, robust: RobustConfig) -> Pytree:
     agg = agg_lib.get_aggregator(
         name, max_iters=robust.weiszfeld_iters, tol=robust.weiszfeld_tol,
         num_groups=robust.num_groups, trim=robust.trim,
-        num_byzantine=robust.num_byzantine)
+        num_byzantine=robust.num_byzantine, clip_radius=robust.clip_radius)
     return agg(msgs)
 
 
@@ -175,8 +181,8 @@ def _sharded_agg(msgs: Pytree, robust: RobustConfig, mesh,
     in_specs = jax.tree_util.tree_map(
         lambda s: P(waxes, *tuple(s)), param_specs,
         is_leaf=lambda x: isinstance(x, P))
-    return jax.shard_map(agg_fn, mesh=mesh, in_specs=(in_specs,),
-                         out_specs=param_specs, check_vma=False)(msgs)
+    return compat.shard_map(agg_fn, mesh=mesh, in_specs=(in_specs,),
+                            out_specs=param_specs, check_vma=False)(msgs)
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +202,8 @@ def make_serve_step(model: Model, shape: ShapeConfig, mesh, *,
     cfg = model.cfg
     seq_sharded = shape.global_batch == 1 and any(
         bs.kind == "attn" for bs in cfg.resolve_pattern()[0])
+    if seq_sharded:
+        compat.require_distributed(what="sequence-sharded decode")
 
     def serve_step(params, cache, tokens, pos):
         return model.decode_step(

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.checkpoint import CheckpointManager
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ShapeConfig, TrainConfig
@@ -93,7 +94,7 @@ def main() -> None:
         saga_num_samples=args.saga_samples if args.vr == "saga" else 0)
 
     key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         params = model.init(key)
         from repro.optim import get_optimizer
         opt = get_optimizer(args.optimizer, args.lr)

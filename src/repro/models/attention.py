@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.common import apply_rope
 
 NEG_INF = -1e30
@@ -243,16 +244,28 @@ def decode_attention(params, x, cache, pos, *, num_heads: int,
     else:
         # Sequence-sharded cache: run the LSE-combined attention inside a
         # shard_map that is manual over the seq axis only ('model' and batch
-        # sharding stay under the automatic partitioner).
+        # sharding stay under the automatic partitioner).  The mesh comes from
+        # the ambient compat.use_mesh context.  Each shard learns its own
+        # index from a P(ax)-sharded iota instead of lax.axis_index, which
+        # old-jax partial-manual shard_map cannot lower (PartitionId op).
         ax = seq_shard_axis
+        mesh = compat.active_mesh()
+        if mesh is None:
+            raise RuntimeError(
+                "sequence-sharded decode needs an ambient mesh -- wrap the "
+                "call in `with repro.compat.use_mesh(mesh):`")
+        n_shards = dict(zip(mesh.axis_names, mesh.axis_sizes
+                            if hasattr(mesh, "axis_sizes")
+                            else tuple(mesh.shape.values())))[ax]
+        shard_ids = jnp.arange(n_shards, dtype=jnp.int32)
         kv_spec = P(None, ax, None, None)
         fn = functools.partial(_sharded_cache_attn, axis=ax, window=window)
-        out, new_cache = jax.shard_map(
+        out, new_cache = compat.shard_map(
             fn,
-            in_specs=(P(), P(), P(), {"k": kv_spec, "v": kv_spec}, P()),
+            in_specs=(P(), P(), P(), {"k": kv_spec, "v": kv_spec}, P(), P(ax)),
             out_specs=(P(), {"k": kv_spec, "v": kv_spec}),
             axis_names={ax}, check_vma=False,
-        )(q, k_new, v_new, {"k": cache["k"], "v": cache["v"]}, pos)
+        )(q, k_new, v_new, {"k": cache["k"], "v": cache["v"]}, pos, shard_ids)
     out = out.reshape(b, 1, num_heads * head_dim) @ params["wo"]
     return out, new_cache
 
@@ -274,16 +287,17 @@ def _cache_attn(q, k, v, pos, window):
     return out.reshape(b, 1, h, hd).astype(q.dtype)
 
 
-def _sharded_cache_attn(q, k_new, v_new, cache, pos, *, axis: str, window):
+def _sharded_cache_attn(q, k_new, v_new, cache, pos, shard_id, *, axis: str,
+                        window):
     """KV cache sharded over ``axis`` along the sequence dim; partial
-    softmax per shard combined with max/sum psums (2 scalars per head)."""
+    softmax per shard combined with max/sum psums (2 scalars per head).
+    ``shard_id``: (1,) int32 -- this shard's index along ``axis``."""
     b, _, h, hd = q.shape
     kv = k_new.shape[2]
     rep = h // kv
     k_loc, v_loc = cache["k"], cache["v"]
     s_loc = k_loc.shape[1]
-    n_shards = jax.lax.axis_size(axis)
-    my = jax.lax.axis_index(axis)
+    my = shard_id[0]
     # The new token's kv is written into the shard that owns position `pos`.
     owner = pos // s_loc
     local_off = pos - owner * s_loc

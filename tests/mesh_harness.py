@@ -1,0 +1,32 @@
+"""Shared subprocess harness for multi-device tests.
+
+Multi-device tests need >1 host device, and jax locks the device count at
+first initialization, so each test runs in a fresh subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=<devices> while the main
+pytest process keeps its default single device.  Inline test programs should
+go through ``repro.compat`` (make_mesh / use_mesh / shard_map) so they run on
+every supported jax version.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 420,
+           extra_env: dict | None = None) -> str:
+    """Run ``code`` (dedented) in a subprocess with ``devices`` forced host
+    devices and PYTHONPATH=src; assert exit 0 and return stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    if extra_env:
+        env.update(extra_env)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout

@@ -79,7 +79,47 @@ def test_stacked_replaces_first_rows():
         np.testing.assert_allclose(np.asarray(out["g"][i]), -3.0 * hm, rtol=1e-5)
 
 
+@pytest.mark.parametrize("name", ["sign_flip", "zero_gradient", "ipm", "alie"])
+def test_stacked_matches_reference_attack(name):
+    """The mask-select stacked variant must agree with the append-style
+    reference ``apply_attack`` for every deterministic attack: honest rows
+    untouched, Byzantine rows equal to the reference's appended rows."""
+    w, b, p = 7, 2, 6
+    msgs = {"g": jax.random.normal(KEY, (w, p)), "h": jax.random.normal(KEY, (w, 3, 2))}
+    cfg = attacks.AttackConfig(name=name, num_byzantine=b)
+    honest = jax.tree_util.tree_map(lambda z: z[b:], msgs)
+    ref = attacks.apply_attack(cfg, honest, KEY)       # honest rows then B byz
+    out = attacks.apply_attack_stacked(cfg, msgs, KEY)  # byz rows replace 0..B
+    for k in msgs:
+        np.testing.assert_allclose(np.asarray(out[k][b:]), np.asarray(msgs[k][b:]),
+                                   rtol=1e-6, err_msg=f"{name} honest rows")
+        for i in range(b):
+            np.testing.assert_allclose(
+                np.asarray(out[k][i]), np.asarray(ref[k][w - b + i]),
+                rtol=1e-4, atol=1e-6, err_msg=f"{name} byz row {i}")
+
+
+def test_stacked_gaussian_rows():
+    """Gaussian draws differ by key handling between the two variants; check
+    the structural contract instead: honest rows untouched, Byzantine rows
+    finite and centered near the honest mean."""
+    w, b, p = 50, 10, 4
+    msgs = {"g": jax.random.normal(KEY, (w, p))}
+    cfg = attacks.AttackConfig(name="gaussian", num_byzantine=b,
+                               gaussian_variance=30.0)
+    out = attacks.apply_attack_stacked(cfg, msgs, KEY)
+    np.testing.assert_allclose(np.asarray(out["g"][b:]), np.asarray(msgs["g"][b:]))
+    byz = np.asarray(out["g"][:b])
+    assert np.isfinite(byz).all()
+    hm = np.asarray(jnp.mean(msgs["g"][b:], 0))
+    assert abs((byz - hm[None]).mean()) < 3.0  # mean-centered, sigma ~ 5.5
+
+
 def test_unknown_attack_raises():
     with pytest.raises(ValueError):
         attacks.apply_attack(
             attacks.AttackConfig(name="wat", num_byzantine=1), _honest(), KEY)
+    with pytest.raises(ValueError):
+        attacks.apply_attack_stacked(
+            attacks.AttackConfig(name="wat", num_byzantine=1),
+            {"g": jnp.zeros((4, 2))}, KEY)

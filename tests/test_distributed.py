@@ -1,27 +1,9 @@
 """Multi-device integration tests.
 
-These need >1 host device, so each runs in a subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main pytest process
-keeps the default single device, per the brief)."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_py(code: str, devices: int = 8, timeout: int = 420) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, timeout=timeout, env=env)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
-    return out.stdout
+Each test runs an inline program in a subprocess via tests/mesh_harness.py
+(8 forced host devices); programs use repro.compat for every mesh/shard_map
+touch so they run on jax 0.4.x through 0.7.x."""
+from mesh_harness import run_py
 
 
 def test_gather_vs_sharded_aggregation_agree():
@@ -29,14 +11,15 @@ def test_gather_vs_sharded_aggregation_agree():
         import jax, jax.numpy as jnp
         from functools import partial
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.core import RobustConfig, distributed_aggregate, sharded_aggregate
         from repro.core.aggregators import geomed_agg
-        mesh = jax.make_mesh((4,2),("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         g1 = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
         g2 = jax.random.normal(jax.random.PRNGKey(1), (4, 6, 4))
         cfg = RobustConfig(aggregator="geomed", weiszfeld_iters=100, weiszfeld_tol=1e-9)
         ref = geomed_agg({"a": g1, "b": g2}, max_iters=100, tol=1e-9)
-        sm = partial(jax.shard_map, mesh=mesh,
+        sm = partial(compat.shard_map, mesh=mesh,
                      in_specs=(P("data","model"), P("data",None,"model")),
                      out_specs=(P("model"), P(None,"model")), check_vma=False)
         out1 = sm(lambda a, b: tuple(distributed_aggregate(
@@ -52,9 +35,69 @@ def test_gather_vs_sharded_aggregation_agree():
     assert "AGREE" in out
 
 
+def test_aggregator_names_covered_in_both_comm_modes():
+    """Every name in AGGREGATOR_NAMES either aggregates or raises the
+    documented ValueError, in BOTH comm modes; gather-mode results match the
+    single-host reference aggregator."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro import compat
+        from repro.core import (AGGREGATOR_NAMES, GATHER_AGGREGATORS,
+                                SHARDED_AGGREGATORS, RobustConfig,
+                                distributed_aggregate, sharded_aggregate)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
+        g1 = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+        g2 = jax.random.normal(jax.random.PRNGKey(1), (4, 6, 4))
+        sm = partial(compat.shard_map, mesh=mesh,
+                     in_specs=(P("data","model"), P("data",None,"model")),
+                     out_specs=(P("model"), P(None,"model")), check_vma=False)
+        for name in AGGREGATOR_NAMES:
+            cfg = RobustConfig(aggregator=name, weiszfeld_iters=100,
+                               weiszfeld_tol=1e-9, num_byzantine=1,
+                               clip_radius=2.5)
+            # gather mode: every registry name must work and match the
+            # single-host reference on replicated inputs.
+            assert name in GATHER_AGGREGATORS, name
+            got = sm(lambda a, b: tuple(distributed_aggregate(
+                {"a": a[0], "b": b[0]}, cfg, worker_axes=("data",),
+                model_axes=("model",)).values()))(g1, g2)
+            ref = cfg.aggregator_fn()({"a": g1, "b": g2})
+            np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref["a"]),
+                                       atol=2e-5, err_msg=f"gather {name} a")
+            np.testing.assert_allclose(np.asarray(got[1]), np.asarray(ref["b"]),
+                                       atol=2e-5, err_msg=f"gather {name} b")
+            # sharded mode: works (and agrees) or raises the documented error.
+            run = lambda: sm(lambda a, b: tuple(sharded_aggregate(
+                {"a": a[0], "b": b[0]}, cfg, worker_axes=("data",),
+                model_axes=("model",), num_workers=4).values()))(g1, g2)
+            if name in SHARDED_AGGREGATORS:
+                got_s = run()
+                np.testing.assert_allclose(np.asarray(got_s[0]), np.asarray(ref["a"]),
+                                           atol=2e-5, err_msg=f"sharded {name} a")
+                np.testing.assert_allclose(np.asarray(got_s[1]), np.asarray(ref["b"]),
+                                           atol=2e-5, err_msg=f"sharded {name} b")
+            else:
+                try:
+                    run()
+                except ValueError as e:
+                    assert "unsupported in comm='sharded'" in str(e), (name, e)
+                else:
+                    raise AssertionError(f"{name}: expected ValueError in sharded mode")
+        print("NAMES_COVERED")
+    """, timeout=600)
+    assert "NAMES_COVERED" in out
+
+
 def test_train_step_runs_on_mesh_and_attack_is_neutralized():
+    """Train on a FIXED batch so the learning signal is deterministic: with
+    sign_flip magnitude -3 and W=4/B=1 the mean aggregate is exactly zero
+    (the attack cancels the honest sum), so mean-aggregated training cannot
+    move, while geomed discards the Byzantine row and learns."""
     out = run_py("""
         import jax, jax.numpy as jnp
+        from repro import compat
         from repro.configs import get_config
         from repro.configs.base import TrainConfig
         from repro.core.robust_step import RobustConfig
@@ -72,24 +115,26 @@ def test_train_step_runs_on_mesh_and_attack_is_neutralized():
                                   num_byzantine=1, weiszfeld_iters=16)
             step_fn, _, _ = steps_lib.make_train_step(
                 model, robust, TrainConfig(optimizer="adamw", lr=1e-3), mesh)
-            with jax.set_mesh(mesh):
+            with compat.use_mesh(mesh):
                 params = model.init(jax.random.PRNGKey(0))
                 opt = get_optimizer("adamw", 1e-3)
                 state = {"params": params, "opt": opt.init(params),
                          "step": jnp.zeros((), jnp.int32)}
                 jstep = jax.jit(step_fn)
                 key = jax.random.PRNGKey(1)
+                batch = make_batch(key, cfg, 4, 2, 32)
                 losses = []
                 for i in range(8):
-                    batch = make_batch(jax.random.fold_in(key, i), cfg, 4, 2, 32)
                     state, m = jstep(state, batch, jax.random.fold_in(key, 100+i))
                     losses.append(float(m["loss"]))
             results[agg] = losses
-        # geomed training loss decreases; sign-flip attack under mean pushes
-        # the model the wrong way (loss non-decreasing or worse than geomed).
-        assert results["geomed"][-1] < results["geomed"][0], results["geomed"]
-        assert results["geomed"][-1] < results["mean"][-1] + 1e-6, results
-        print("ROBUST", results["geomed"][0], "->", results["geomed"][-1])
+        # geomed neutralizes the attack and fits the batch; the zeroed mean
+        # aggregate leaves the model stuck at its initial loss.
+        assert results["geomed"][-1] < results["geomed"][0] - 1.0, results["geomed"]
+        assert results["geomed"][-1] < results["mean"][-1] - 1.0, results
+        assert abs(results["mean"][-1] - results["mean"][0]) < 0.2, results["mean"]
+        print("ROBUST", results["geomed"][0], "->", results["geomed"][-1],
+              "| mean stuck at", results["mean"][-1])
     """)
     assert "ROBUST" in out
 
@@ -97,6 +142,7 @@ def test_train_step_runs_on_mesh_and_attack_is_neutralized():
 def test_sharded_comm_equals_gather_comm_training():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs import get_config
         from repro.configs.base import TrainConfig
         from repro.core.robust_step import RobustConfig
@@ -115,7 +161,7 @@ def test_sharded_comm_equals_gather_comm_training():
                                   weiszfeld_iters=32, weiszfeld_tol=1e-9)
             step_fn, _, _ = steps_lib.make_train_step(
                 model, robust, TrainConfig(optimizer="sgd", lr=0.1), mesh)
-            with jax.set_mesh(mesh):
+            with compat.use_mesh(mesh):
                 params = model.init(jax.random.PRNGKey(0))
                 state = {"params": params, "opt": (), "step": jnp.zeros((), jnp.int32)}
                 batch = make_batch(jax.random.PRNGKey(5), cfg, 4, 2, 32)
@@ -133,6 +179,7 @@ def test_sharded_comm_equals_gather_comm_training():
 def test_saga_distributed_train_step():
     out = run_py("""
         import jax, jax.numpy as jnp
+        from repro import compat
         from repro.configs import get_config
         from repro.configs.base import TrainConfig
         from repro.core.robust_step import RobustConfig
@@ -149,7 +196,7 @@ def test_saga_distributed_train_step():
         step_fn, _, sstructs = steps_lib.make_train_step(
             model, robust, TrainConfig(optimizer="sgd", lr=0.05), mesh,
             saga_num_samples=4)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             params = model.init(jax.random.PRNGKey(0))
             state = {"params": params, "opt": (), "step": jnp.zeros((), jnp.int32),
                      "saga": saga_init_zeros(params, 4, 4)}
@@ -184,3 +231,38 @@ def test_dryrun_single_combo_small_devices():
         print("DRYRUN_OK")
     """, timeout=600)
     assert "DRYRUN_OK" in out
+
+
+def test_require_distributed_and_comm_validation():
+    """Capability probe degrades with a clear error, not an AttributeError
+    from inside jit: bogus comm modes are rejected at step-build time."""
+    out = run_py("""
+        from repro import compat
+        from repro.configs import get_config
+        from repro.configs.base import TrainConfig
+        from repro.core.robust_step import RobustConfig
+        from repro.launch import mesh as mesh_lib, steps as steps_lib
+        from repro.models.api import build_model
+
+        assert compat.HAS_SHARD_MAP
+        compat.require_distributed(min_devices=8)
+        try:
+            compat.require_distributed(min_devices=10**6)
+        except RuntimeError as e:
+            assert "device" in str(e)
+        else:
+            raise AssertionError("expected RuntimeError for device count")
+
+        cfg = get_config("mamba2-130m").reduced()
+        mesh = mesh_lib.make_host_mesh((4, 2), ("data", "model"))
+        model = build_model(cfg, remat=False, q_chunk=32, kv_chunk=32, loss_chunk=32)
+        try:
+            steps_lib.make_train_step(
+                model, RobustConfig(comm="bogus"), TrainConfig(), mesh)
+        except ValueError as e:
+            assert "gather" in str(e) and "sharded" in str(e)
+        else:
+            raise AssertionError("expected ValueError for bogus comm")
+        print("PROBE_OK")
+    """)
+    assert "PROBE_OK" in out

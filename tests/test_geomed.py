@@ -1,11 +1,15 @@
 """Weiszfeld geometric-median unit + property tests (paper eq. (6), Lemma 1)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis.extra import numpy as hnp
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis.extra import numpy as hnp
+except ImportError:  # keep the suite collectable without the dev extra
+    from _hypothesis_fallback import hnp, hypothesis, st
 
 from repro.core.geomed import geomed_objective, weiszfeld, weiszfeld_pytree
 

@@ -1,25 +1,18 @@
 """Sequence-sharded (long_500k-style) decode attention correctness:
-the LSE-combined shard_map path must match the plain cached attention."""
-import os
-import subprocess
-import sys
-import textwrap
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+the LSE-combined shard_map path must match the plain cached attention.
+Subprocess inline programs go through repro.compat (see mesh_harness)."""
+from mesh_harness import run_py
 
 
 def test_sharded_decode_attention_matches_dense():
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    code = textwrap.dedent("""
+    out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro import compat
         from repro.models.attention import decode_attention, attn_params
         from repro.models.common import init_maker
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         B, S, H, KV, hd, D = 1, 64, 4, 2, 16, 32
         params = attn_params(init_maker(jax.random.PRNGKey(0)), "a",
                              d_model=D, num_heads=H, num_kv_heads=KV,
@@ -38,7 +31,7 @@ def test_sharded_decode_attention_matches_dense():
         # sequence-sharded path under jit with the cache sharded over 'data'
         kv_sh = NamedSharding(mesh, P(None, "data", None, None))
         cache_sh = jax.tree_util.tree_map(lambda c: jax.device_put(c, kv_sh), cache)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             out_s, cache_s = jax.jit(
                 lambda p, xx, cc, pp: decode_attention(
                     p, xx, cc, pp, seq_shard_axis="data", **kw)
@@ -49,7 +42,7 @@ def test_sharded_decode_attention_matches_dense():
                                    rtol=1e-5, atol=1e-5)
         # windowed variant
         out_w, _ = decode_attention(params, x, cache, pos, window=16, **kw)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             out_ws, _ = jax.jit(
                 lambda p, xx, cc, pp: decode_attention(
                     p, xx, cc, pp, seq_shard_axis="data", window=16, **kw)
@@ -58,16 +51,11 @@ def test_sharded_decode_attention_matches_dense():
                                    rtol=2e-4, atol=2e-4)
         print("SHARDED_DECODE_OK")
     """)
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=420, env=env)
-    assert out.returncode == 0, out.stderr[-3000:]
-    assert "SHARDED_DECODE_OK" in out.stdout
+    assert "SHARDED_DECODE_OK" in out
 
 
 def test_whisper_decode_matches_forward():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    code = textwrap.dedent("""
+    out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
         from repro.models import build_model
@@ -94,8 +82,5 @@ def test_whisper_decode_matches_forward():
         np.testing.assert_allclose(np.asarray(logits_d), np.asarray(lf),
                                    rtol=2e-3, atol=2e-3)
         print("WHISPER_OK")
-    """)
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=420, env=env)
-    assert out.returncode == 0, out.stderr[-3000:]
-    assert "WHISPER_OK" in out.stdout
+    """, devices=1)
+    assert "WHISPER_OK" in out

@@ -37,6 +37,30 @@ def test_correction_formula(fn):
         np.testing.assert_allclose(np.asarray(new.avg["p"][wi]), want_avg, rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
+def test_correct_equals_correct_scatter(dt):
+    """The one-hot oracle and the scatter-based fast path must agree on
+    messages, tables and averages, in both f32 and bf16."""
+    w, j, shape = 4, 6, (3, 5)
+    key = jax.random.PRNGKey(7)
+    table = jax.random.normal(key, (w, j) + shape).astype(dt)
+    st0 = saga.SagaState(
+        table={"p": table},
+        avg={"p": jnp.mean(table.astype(jnp.float32), axis=1).astype(dt)})
+    grads = {"p": jax.random.normal(jax.random.PRNGKey(8), (w,) + shape).astype(dt)}
+    idx = jnp.array([0, 5, 2, 2], jnp.int32)
+    msgs_a, new_a = saga.saga_correct(st0, grads, idx)
+    msgs_b, new_b = saga.saga_correct_scatter(st0, grads, idx)
+    tol = dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(msgs_a["p"], np.float32),
+                               np.asarray(msgs_b["p"], np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(new_a.table["p"], np.float32),
+                               np.asarray(new_b.table["p"], np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(new_a.avg["p"], np.float32),
+                               np.asarray(new_b.avg["p"], np.float32), **tol)
+    assert msgs_b["p"].dtype == dt and new_b.table["p"].dtype == dt
+
+
 def test_avg_consistency_after_updates():
     """After arbitrary updates, avg == mean(table) (the invariant Alg. 1
     maintains incrementally)."""

@@ -1,5 +1,7 @@
-"""Data / optimizer / checkpoint substrate tests."""
+"""Data / optimizer / checkpoint substrate tests + repo-level invariants."""
+import glob
 import os
+import re
 
 import jax
 import jax.numpy as jnp
@@ -104,3 +106,26 @@ def test_checkpoint_missing_leaf_raises(tmp_path):
     save(p, {"a": jnp.zeros(2)})
     with pytest.raises(KeyError):
         load(p, {"a": jnp.zeros(2), "b": jnp.zeros(3)})
+
+
+# ---------------- repo invariants ----------------
+
+def test_compat_layer_is_the_only_jax_version_gate():
+    """Version-moving jax names must be touched only inside repro.compat
+    (DESIGN.md Sec. 3): everything else goes through the compat surface so
+    the repo keeps running on jax 0.4.x through current."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    banned = re.compile(
+        r"jax\.shard_map|jax\.set_mesh|jax\.sharding\.AxisType"
+        r"|from jax\.sharding import .*AxisType|jax\.experimental\.shard_map"
+        r"|jax\.make_mesh|jax\.lax\.axis_size")
+    offenders = []
+    for sub in ("src", "tests", "examples", "benchmarks"):
+        for path in glob.glob(os.path.join(repo, sub, "**", "*.py"), recursive=True):
+            if os.sep + os.path.join("repro", "compat") + os.sep in path:
+                continue
+            with open(path) as f:
+                for ln, line in enumerate(f, 1):
+                    if banned.search(line):
+                        offenders.append(f"{os.path.relpath(path, repo)}:{ln}: {line.strip()}")
+    assert not offenders, "\n".join(offenders)
