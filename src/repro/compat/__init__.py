@@ -36,7 +36,8 @@ import numpy as np
 __all__ = [
     "JAX_VERSION", "AxisType", "HAS_AXIS_TYPE", "HAS_SHARD_MAP",
     "HAS_AMBIENT_MESH", "make_mesh", "use_mesh", "active_mesh", "shard_map",
-    "axis_size", "cost_analysis", "require_distributed",
+    "axis_size", "axis_group", "axis_index", "all_gather", "all_to_all",
+    "psum", "cost_analysis", "require_distributed",
 ]
 
 JAX_VERSION: tuple[int, ...] = tuple(
@@ -219,6 +220,56 @@ def axis_size(axis_name):
     if _HAS_LAX_AXIS_SIZE:
         return jax.lax.axis_size(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Multi-axis collectives over the federation's worker axes
+#
+# The worker dimension of the Byzantine-robust federation may span SEVERAL
+# mesh axes (("pod", "data") on multi-pod meshes, launch/mesh.py).  jax's
+# collectives accept a tuple of axis names and treat it as one collapsed
+# axis whose index is row-major over the tuple (pod-major): verified on
+# jax 0.4.37 and the current releases for all_gather / all_to_all /
+# axis_index inside fully-manual shard_map.  These wrappers are the single
+# guard point for that surface -- if a future jax moves the multi-axis
+# collective API (as shard_map/make_mesh did), only this module changes.
+# ---------------------------------------------------------------------------
+
+def axis_group(axis_names):
+    """Normalize a worker-axis spec -- one name or a sequence of names -- to
+    the form jax collectives accept: the bare name for a single axis, a
+    tuple for several (treated as one collapsed axis, row-major order)."""
+    if isinstance(axis_names, str):
+        return axis_names
+    names = tuple(axis_names)
+    return names[0] if len(names) == 1 else names
+
+
+def axis_index(axis_names):
+    """Linear index along (possibly several) mesh axes, row-major.  Only use
+    inside FULLY-manual shard_map: partial-manual shard_map on jax 0.4.x
+    cannot lower axis_index (DESIGN.md Sec. 2 -- use a sharded iota there)."""
+    return jax.lax.axis_index(axis_group(axis_names))
+
+
+def all_gather(x, axis_names, *, axis: int = 0, tiled: bool = False):
+    """``jax.lax.all_gather`` over one or several worker axes.  With several
+    names the gathered dimension arrives as ONE collapsed axis of size
+    prod(sizes) in row-major worker order -- not one nested axis per name."""
+    return jax.lax.all_gather(x, axis_group(axis_names), axis=axis, tiled=tiled)
+
+
+def all_to_all(x, axis_names, *, split_axis: int, concat_axis: int,
+               tiled: bool = False):
+    """``jax.lax.all_to_all`` over one or several worker axes, splitting
+    ``split_axis`` into prod(sizes) blocks in row-major worker order."""
+    return jax.lax.all_to_all(x, axis_group(axis_names), split_axis,
+                              concat_axis, tiled=tiled)
+
+
+def psum(x, axis_names):
+    """``jax.lax.psum`` over one or several mesh axes."""
+    return jax.lax.psum(x, axis_group(axis_names))
 
 
 _NO_SHARD_MAP_MSG = (

@@ -2,15 +2,23 @@
 from repro.core.aggregators import (
     AGGREGATOR_NAMES,
     geomed_agg,
+    geomed_blockwise_agg,
     geomed_groups_agg,
     get_aggregator,
     krum_agg,
+    krum_scores,
     mean_agg,
     median_agg,
     trimmed_mean_agg,
 )
 from repro.core.attacks import ATTACK_NAMES, AttackConfig, apply_attack
-from repro.core.geomed import geomed_objective, weiszfeld, weiszfeld_pytree, weiszfeld_sharded
+from repro.core.geomed import (
+    geomed_objective,
+    weiszfeld,
+    weiszfeld_blockwise_sharded,
+    weiszfeld_pytree,
+    weiszfeld_sharded,
+)
 from repro.core.robust_step import (
     GATHER_AGGREGATORS,
     SHARDED_AGGREGATORS,

@@ -12,8 +12,13 @@ Every aggregator consumes a pytree whose leaves carry a leading worker axis
 * ``krum``          -- Krum selection [14]; needs B in advance (as noted in
                        the paper, Sec. III-B).
 
-A registry :func:`get_aggregator` builds ``fn(stacked_tree) -> tree`` from a
-name + options so the training loop composes them freely.
+A registry (``_REGISTRY`` / :func:`get_aggregator`) builds
+``fn(stacked_tree) -> tree`` from a name + options so the training loop
+composes them freely; ``AGGREGATOR_NAMES`` and the unknown-name error are
+derived from the registry, so adding an entry updates both.  Every
+registered rule also runs on BOTH distributed comm paths
+(``comm="gather"`` and ``comm="sharded"``, see
+:mod:`repro.core.robust_step` and DESIGN.md Sec. 2).
 """
 from __future__ import annotations
 
@@ -103,17 +108,22 @@ def _pairwise_sq_dists(stacked: Pytree) -> jnp.ndarray:
     return jnp.maximum(d2, 0.0)
 
 
+def krum_scores(d2: jnp.ndarray, num_byzantine: int) -> jnp.ndarray:
+    """Krum scores from a (W, W) squared-distance matrix: per row, the sum of
+    the W-B-2 smallest off-diagonal entries (self-distance masked to +inf).
+    Shared by the local, gather, and sharded krum paths -- the comm modes
+    differ only in how d2 is assembled (local Gram, model-axis psum, or
+    coordinate-resharded partial Gram psum'd over worker+model axes)."""
+    w = d2.shape[0]
+    d2 = jnp.maximum(d2, 0.0) + jnp.diag(jnp.full((w,), jnp.inf, d2.dtype))
+    n_near = max(w - num_byzantine - 2, 1)
+    return jnp.sum(jnp.sort(d2, axis=1)[:, :n_near], axis=1)
+
+
 def krum_agg(stacked: Pytree, *, num_byzantine: int) -> Pytree:
     """Krum [14]: score(w) = sum of squared distances to the W-B-2 nearest
     other messages; output the message with the minimal score."""
-    d2 = _pairwise_sq_dists(stacked)
-    w = d2.shape[0]
-    n_near = max(w - num_byzantine - 2, 1)
-    # Exclude self-distance (0 on the diagonal) by pushing it to +inf.
-    d2 = d2 + jnp.diag(jnp.full((w,), jnp.inf, d2.dtype))
-    nearest = jnp.sort(d2, axis=1)[:, :n_near]
-    scores = jnp.sum(nearest, axis=1)
-    best = jnp.argmin(scores)
+    best = jnp.argmin(krum_scores(_pairwise_sq_dists(stacked), num_byzantine))
     return jax.tree_util.tree_map(lambda z: z[best], stacked)
 
 
@@ -170,43 +180,47 @@ def geomed_blockwise_agg(stacked: Pytree, *, max_iters: int = 64,
         lambda z: weiszfeld_pytree(z, max_iters=max_iters, tol=tol), stacked)
 
 
+# name -> builder(opts) -> Aggregator.  AGGREGATOR_NAMES and the
+# unknown-name error below derive from this dict: registering here is the
+# ONE place a new rule is added.
+_REGISTRY: dict[str, Callable[[dict], Aggregator]] = {
+    "mean": lambda opts: mean_agg,
+    "median": lambda opts: median_agg,
+    "geomed": lambda opts: functools.partial(
+        geomed_agg,
+        max_iters=opts.get("max_iters", 64),
+        tol=opts.get("tol", 1e-6)),
+    "geomed_groups": lambda opts: functools.partial(
+        geomed_groups_agg,
+        num_groups=opts["num_groups"],
+        max_iters=opts.get("max_iters", 64),
+        tol=opts.get("tol", 1e-6)),
+    "trimmed_mean": lambda opts: functools.partial(
+        trimmed_mean_agg, trim=opts.get("trim", 1)),
+    "krum": lambda opts: functools.partial(
+        krum_agg, num_byzantine=opts.get("num_byzantine", 0)),
+    "centered_clip": lambda opts: functools.partial(
+        centered_clip_agg, radius=opts.get("clip_radius", 1.0)),
+    "geomed_blockwise": lambda opts: functools.partial(
+        geomed_blockwise_agg,
+        max_iters=opts.get("max_iters", 64), tol=opts.get("tol", 1e-6)),
+}
+
+AGGREGATOR_NAMES = tuple(_REGISTRY)
+
+
 def get_aggregator(name: str, **opts) -> Aggregator:
     """Build an aggregator by name.
 
-    Options: ``geomed``/``geomed_groups`` accept ``max_iters``/``tol`` (and
-    ``num_groups``); ``trimmed_mean`` accepts ``trim``; ``krum`` accepts
-    ``num_byzantine``.
+    Options: ``geomed``/``geomed_groups``/``geomed_blockwise`` accept
+    ``max_iters``/``tol`` (and ``num_groups``); ``trimmed_mean`` accepts
+    ``trim``; ``krum`` accepts ``num_byzantine``; ``centered_clip`` accepts
+    ``clip_radius``.
     """
-    if name == "mean":
-        return mean_agg
-    if name == "median":
-        return median_agg
-    if name == "geomed":
-        return functools.partial(
-            geomed_agg,
-            max_iters=opts.get("max_iters", 64),
-            tol=opts.get("tol", 1e-6),
-        )
-    if name == "geomed_groups":
-        return functools.partial(
-            geomed_groups_agg,
-            num_groups=opts["num_groups"],
-            max_iters=opts.get("max_iters", 64),
-            tol=opts.get("tol", 1e-6),
-        )
-    if name == "trimmed_mean":
-        return functools.partial(trimmed_mean_agg, trim=opts.get("trim", 1))
-    if name == "krum":
-        return functools.partial(krum_agg, num_byzantine=opts.get("num_byzantine", 0))
-    if name == "centered_clip":
-        return functools.partial(centered_clip_agg,
-                                 radius=opts.get("clip_radius", 1.0))
-    if name == "geomed_blockwise":
-        return functools.partial(
-            geomed_blockwise_agg,
-            max_iters=opts.get("max_iters", 64), tol=opts.get("tol", 1e-6))
-    raise ValueError(f"unknown aggregator {name!r}")
-
-
-AGGREGATOR_NAMES = ("mean", "median", "geomed", "geomed_groups", "trimmed_mean",
-                    "krum", "centered_clip", "geomed_blockwise")
+    try:
+        build = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregator {name!r}; known: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+    return build(opts)

@@ -22,6 +22,11 @@ Three entry points:
                                  heavy (W, p) matrix never needs to be
                                  replicated.  This is the beyond-paper
                                  distributed Weiszfeld described in DESIGN.md.
+* :func:`weiszfeld_blockwise_sharded` -- segmented variant of the above for
+                                 ``geomed_blockwise``: every parameter block
+                                 (pytree leaf) runs its own Weiszfeld, jointly,
+                                 with one fused (W, num_blocks) psum per
+                                 iteration (DESIGN.md Sec. 2).
 
 All variants are jit-compatible (``lax.while_loop``).
 """
@@ -32,6 +37,8 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 
 Pytree = Any
 
@@ -192,3 +199,62 @@ def weiszfeld_sharded(
     return weiszfeld_pytree(
         z_local, max_iters=max_iters, tol=tol, axis_names=axis_names
     )
+
+
+def weiszfeld_blockwise_sharded(
+    z_local: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    num_segments: int,
+    *,
+    axis_names: Sequence[str],
+    max_iters: int = 64,
+    tol: float = 1e-6,
+) -> jnp.ndarray:
+    """Per-block (segmented) distributed Weiszfeld inside ``shard_map``.
+
+    ``z_local``: (W, c) -- this device's coordinate slice of all W messages
+    (the same layout as :func:`weiszfeld_sharded`).  ``seg_ids``: (c,) int32
+    block id of each local coordinate; a block is one pytree leaf of the
+    original gradient, so this computes ``geomed_blockwise`` (independent
+    geometric median per leaf) without ever gathering the leaves.  Padding
+    coordinates should carry a dedicated dummy block id (their all-zero
+    messages then median to zero and never affect real blocks).
+
+    All blocks iterate in lockstep: one fused psum of a (W, num_segments)
+    matrix of per-(worker, block) squared-distance partials over
+    ``axis_names`` per iteration, instead of num_segments separate W-float
+    psums.  Each coordinate is reweighted by its own block's inverse
+    distances, and the loop stops when the largest per-block iterate move
+    drops below ``tol`` (a block that converged early simply keeps its
+    fixed point).  Returns the (c,) f32 local slice of all blocks' medians.
+    """
+    z32 = z_local.astype(jnp.float32)
+
+    def seg_psum(coord_partials):
+        """(..., c) per-coordinate partials -> global (..., num_segments):
+        O(c) segment sum over the trailing axis, then ONE multi-axis psum."""
+        part = jax.ops.segment_sum(jnp.moveaxis(coord_partials, -1, 0),
+                                   seg_ids, num_segments=num_segments)
+        return compat.psum(jnp.moveaxis(part, 0, -1), axis_names)
+
+    y0 = jnp.mean(z32, axis=0)
+
+    def cond(state):
+        _, delta, it = state
+        return jnp.logical_and(it < max_iters, delta > tol)
+
+    def body(state):
+        y, _, it = state
+        diff = z32 - y[None]
+        sq = seg_psum(diff * diff)                           # (W, L)
+        inv = 1.0 / jnp.maximum(jnp.sqrt(sq), _DIST_FLOOR)   # (W, L)
+        w_coord = inv[:, seg_ids]                            # (W, c)
+        denom = jnp.sum(inv, axis=0)[seg_ids]                # (c,)
+        y_new = jnp.sum(w_coord * z32, axis=0) / jnp.maximum(denom, _DIST_FLOOR)
+
+        move = seg_psum((y_new - y) ** 2)                    # (L,) global
+        return y_new, jnp.sqrt(jnp.max(move)), it + 1
+
+    state0 = (y0, jnp.asarray(jnp.inf, jnp.float32), 0)
+    y, _, _ = jax.lax.while_loop(cond, body, state0)
+    return y

@@ -10,10 +10,14 @@ Two execution paths share the same math:
 
 * :func:`distributed_aggregate` / :func:`sharded_aggregate` -- the
   aggregation step for the multi-device path, called inside ``shard_map``
-  where each index of the mesh worker axes is one worker.  ``gather`` mode is
-  the paper-faithful master (all_gather + replicated Weiszfeld); ``sharded``
-  mode is the beyond-paper distributed Weiszfeld (all_to_all coordinate
-  resharding, psum'd norms -- see DESIGN.md Sec. 2).
+  where each index of the mesh worker axes (a single ``data`` axis, or
+  ``(pod, data)`` on multi-pod meshes) is one worker.  ``gather`` mode is
+  the paper-faithful master (all_gather + replicated aggregation);
+  ``sharded`` mode re-shards by coordinate with an all_to_all and restores
+  global geometry with small psums -- distributed Weiszfeld for geomed, a
+  partial-Gram psum for krum, per-block segmented Weiszfeld for
+  geomed_blockwise (DESIGN.md Sec. 2).  EVERY registry aggregator runs on
+  both paths.
 
 Variance-reduction modes: ``sgd`` (one sample), ``minibatch`` (mean of a
 random minibatch), ``saga`` (corrected gradients + table, Alg. 1).
@@ -22,16 +26,17 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
 from repro.core import saga as saga_lib
-from repro.core.geomed import weiszfeld_pytree
+from repro.core.geomed import weiszfeld_blockwise_sharded, weiszfeld_pytree
 from repro.optim import optimizers as optim_lib
 
 Pytree = Any
@@ -168,8 +173,12 @@ def make_federated_step(
 # model axes.
 # ---------------------------------------------------------------------------
 
-def _flatten_concat(tree: Pytree) -> tuple[jnp.ndarray, Callable[[jnp.ndarray], Pytree]]:
-    """Ravel a pytree into one fp32 vector + inverse (restoring dtypes)."""
+def _flatten_concat(
+    tree: Pytree,
+) -> tuple[jnp.ndarray, Callable[[jnp.ndarray], Pytree], list[int]]:
+    """Ravel a pytree into one fp32 vector + inverse (restoring dtypes) +
+    the per-leaf flat sizes (the block boundaries sharded geomed_blockwise
+    needs)."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     shapes = [l.shape for l in leaves]
     dtypes = [l.dtype for l in leaves]
@@ -183,7 +192,23 @@ def _flatten_concat(tree: Pytree) -> tuple[jnp.ndarray, Callable[[jnp.ndarray], 
             off += n
         return jax.tree_util.tree_unflatten(treedef, out)
 
-    return flat, unflatten
+    return flat, unflatten, sizes
+
+
+def _local_leaf_ids(leaf_sizes: Sequence[int], pad: int, num_workers: int,
+                    worker_axes: tuple[str, ...]) -> jnp.ndarray:
+    """(chunk,) leaf/block id of every coordinate in this device's
+    all_to_all slice, derived on-device from the (num_leaves,) cumulative
+    leaf boundaries -- no O(p) constant.  Coordinate c belongs to the leaf
+    whose cumulative upper bound first exceeds c; padding coordinates land
+    past every bound, i.e. in the dummy block ``len(leaf_sizes)``.  The
+    linear worker index picks the coordinate range (fully-manual shard_map,
+    so compat.axis_index lowers fine)."""
+    chunk = (sum(leaf_sizes) + pad) // num_workers
+    wid = compat.axis_index(worker_axes)
+    coords = wid * chunk + jax.lax.iota(jnp.int32, chunk)
+    bounds = jnp.asarray(np.cumsum(leaf_sizes).astype(np.int32))
+    return jnp.searchsorted(bounds, coords, side="right").astype(jnp.int32)
 
 
 def distributed_aggregate(
@@ -197,14 +222,11 @@ def distributed_aggregate(
     sharded) gradient over the worker axes, then run the robust rule
     redundantly on every device.  Collective volume: W * p_shard bytes
     gathered per device -- the cost the Sec-Perf hillclimb attacks."""
-    axes = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    # Multi-axis all_gather already collapses the worker axes into ONE
+    # leading (W_total,) axis in row-major worker order (compat.all_gather),
+    # so single- and multi-pod meshes land on the same stacked layout.
     stacked = jax.tree_util.tree_map(
-        lambda g: jax.lax.all_gather(g, axes, axis=0, tiled=False), grads
-    )
-    # Multi-axis all_gather yields (W_total, ...) with axes collapsed.
-    stacked = jax.tree_util.tree_map(
-        lambda z: z.reshape((-1,) + z.shape[len(worker_axes):]) if len(worker_axes) > 1 else z,
-        stacked,
+        lambda g: compat.all_gather(g, worker_axes, axis=0, tiled=False), grads
     )
     name = cfg.aggregator
     if name == "mean":
@@ -241,13 +263,23 @@ def distributed_aggregate(
                      f"supported: {GATHER_AGGREGATORS}")
 
 
-# Aggregators available on each distributed comm path; kept next to the
-# dispatchers below so the error messages stay truthful.
-GATHER_AGGREGATORS = ("mean", "median", "geomed", "geomed_groups",
-                      "trimmed_mean", "krum", "centered_clip",
-                      "geomed_blockwise")
-SHARDED_AGGREGATORS = ("mean", "median", "trimmed_mean", "geomed",
-                       "geomed_groups", "centered_clip")
+# Aggregators available on each distributed comm path.  Since PR 2 both
+# paths cover the whole registry (sharded krum via a partial-Gram psum,
+# sharded geomed_blockwise via segmented Weiszfeld); the split names are
+# kept because tests and benchmarks enumerate each path explicitly.
+GATHER_AGGREGATORS = agg_lib.AGGREGATOR_NAMES
+SHARDED_AGGREGATORS = agg_lib.AGGREGATOR_NAMES
+
+
+def _partial_gram_sq_dists(flat: jnp.ndarray,
+                           axes: tuple[str, ...]) -> jnp.ndarray:
+    """(W, W) squared distances from each device's (W, c) coordinate slice:
+    the local Gram partials are psum'd over ``axes``, which restores the
+    full-vector pairwise geometry because squared distances are separable
+    over any coordinate partition."""
+    sq = jnp.sum(flat ** 2, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)
+    return compat.psum(d2, axes) if axes else d2
 
 
 def _distributed_krum(stacked: Pytree, cfg: RobustConfig,
@@ -255,14 +287,8 @@ def _distributed_krum(stacked: Pytree, cfg: RobustConfig,
     leaves = [z.reshape(z.shape[0], -1).astype(jnp.float32)
               for z in jax.tree_util.tree_leaves(stacked)]
     flat = jnp.concatenate(leaves, axis=-1)
-    sq = jnp.sum(flat ** 2, axis=-1)
-    d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)
-    for ax in model_axes:
-        d2 = jax.lax.psum(d2, ax)
-    w = d2.shape[0]
-    d2 = jnp.maximum(d2, 0.0) + jnp.diag(jnp.full((w,), jnp.inf, d2.dtype))
-    n_near = max(w - cfg.num_byzantine - 2, 1)
-    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :n_near], axis=1)
+    scores = agg_lib.krum_scores(
+        _partial_gram_sq_dists(flat, tuple(model_axes)), cfg.num_byzantine)
     best = jnp.argmin(scores)
     return jax.tree_util.tree_map(lambda z: z[best], stacked)
 
@@ -278,28 +304,36 @@ def sharded_aggregate(
     """Beyond-paper ``sharded`` master (DESIGN.md Sec. 2, comm=sharded).
 
     Instead of replicating the (W, p) message matrix, re-shard it by
-    coordinate with an ``all_to_all`` over the worker axes: every device ends
-    up with a distinct p_shard/W coordinate slice of all W messages, runs
-    Weiszfeld on its slice (full-vector norms restored by a psum of W floats
-    per iteration over worker+model axes), and the aggregated slices are
-    re-assembled with an all_gather.  Bytes moved per device drop from
-    O(W * p_shard) to O(2 * p_shard).
+    coordinate with an ``all_to_all`` over the worker axes (one axis or
+    ``(pod, data)``): every device ends up with a distinct p_shard/W
+    coordinate slice of ALL W messages, the rule runs on the slices with
+    global geometry restored by small psums, and the aggregated slices are
+    re-assembled with an all_gather.  Bytes moved per device drop from the
+    gather master's O(W * p_shard) to O(2 * p_shard) plus the per-rule
+    psums:
 
-    Only geomed / centered_clip (+ the coordinate-separable rules listed in
-    ``SHARDED_AGGREGATORS``) are supported here; Krum fundamentally needs
-    pairwise full-vector products (and geomed_blockwise per-leaf norms) and
-    stays on the gather path.
+    * coordinate-separable rules (mean/median/trimmed_mean) need none;
+    * geomed / geomed_groups / centered_clip psum W floats of per-worker
+      norm partials per Weiszfeld/clip iteration;
+    * krum reuses the same coordinate resharding but psums one (W, W)
+      partial Gram matrix -- squared distances are separable over any
+      coordinate partition -- and then selects the winning slice everywhere;
+    * geomed_blockwise keeps per-leaf norms via block-segmented Weiszfeld
+      (one (W, num_leaves) psum per iteration, ``weiszfeld_blockwise_sharded``).
+
+    Every registry aggregator is supported (``SHARDED_AGGREGATORS``).
     """
     w = num_workers
-    flat, unflatten = _flatten_concat(grads)
+    flat, unflatten, leaf_sizes = _flatten_concat(grads)
     p = flat.shape[0]
     pad = (-p) % w
     flat = jnp.pad(flat, (0, pad))
     chunks = flat.reshape(w, -1)  # row r = my message's slice destined to worker r
-    axes = worker_axes if len(worker_axes) > 1 else worker_axes[0]
     # After all_to_all: row r = worker r's slice for MY coordinate range.
-    z_local = jax.lax.all_to_all(chunks, axes, split_axis=0, concat_axis=0, tiled=False)
+    z_local = compat.all_to_all(chunks, worker_axes, split_axis=0,
+                                concat_axis=0, tiled=False)
     z_local = z_local.reshape(w, -1)
+    comm_axes = tuple(worker_axes) + tuple(model_axes)
 
     name = cfg.aggregator
     if name == "mean":
@@ -315,25 +349,39 @@ def sharded_aggregate(
             zz = agg_lib.group_means(zz, cfg.num_groups)
         slice_agg = weiszfeld_pytree(
             zz, max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
-            axis_names=tuple(worker_axes) + tuple(model_axes),
+            axis_names=comm_axes,
         )
     elif name == "centered_clip":
         # Same psum trick as the distributed Weiszfeld: full-vector residual
         # norms are restored by a psum of W floats over worker+model axes.
         slice_agg = agg_lib.centered_clip_agg(
-            z_local, radius=cfg.clip_radius,
-            axis_names=tuple(worker_axes) + tuple(model_axes))
+            z_local, radius=cfg.clip_radius, axis_names=comm_axes)
+    elif name == "krum":
+        # Pairwise-distance resharding: the (W, W) Gram partials of the
+        # coordinate slices psum to the full-vector pairwise distances, so
+        # the (replicated) selection index is exact; the winner's slices
+        # are reassembled by the common all_gather below.
+        scores = agg_lib.krum_scores(
+            _partial_gram_sq_dists(z_local, comm_axes), cfg.num_byzantine)
+        slice_agg = z_local[jnp.argmin(scores)]
+    elif name == "geomed_blockwise":
+        # Per-leaf norms survive the resharding because every coordinate
+        # knows its block id: segmented Weiszfeld psums a (W, num_leaves)
+        # matrix per iteration instead of W floats.
+        slice_agg = weiszfeld_blockwise_sharded(
+            z_local,
+            _local_leaf_ids(leaf_sizes, pad, w, worker_axes),
+            len(leaf_sizes) + 1,  # + dummy block for the padding coordinates
+            axis_names=comm_axes,
+            max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol)
     else:
-        # Krum needs pairwise full-vector inner products and geomed_blockwise
-        # per-leaf norms; neither survives the flatten/all_to_all coordinate
-        # resharding, so they stay on the gather path.
         raise ValueError(
-            f"aggregator {name!r} unsupported in comm='sharded'; "
-            f"supported: {SHARDED_AGGREGATORS} (use comm='gather' for "
-            f"{tuple(sorted(set(GATHER_AGGREGATORS) - set(SHARDED_AGGREGATORS)))})")
+            f"unknown aggregator {name!r} for comm='sharded'; "
+            f"supported: {SHARDED_AGGREGATORS}")
 
     # Re-assemble the full (padded) vector on every worker.
-    full = jax.lax.all_gather(slice_agg, axes, axis=0, tiled=False).reshape(-1)
+    full = compat.all_gather(slice_agg, worker_axes, axis=0,
+                             tiled=False).reshape(-1)
     return unflatten(full[:p])
 
 
@@ -354,14 +402,14 @@ def distributed_attack(
     w = 1
     for a in worker_axes:
         w = w * compat.axis_size(a)
-    wid = jax.lax.axis_index(tuple(worker_axes) if len(worker_axes) > 1 else worker_axes[0])
+    wid = compat.axis_index(worker_axes)
     b = cfg.num_byzantine
     wh = w - b
     is_byz = wid < b
 
     def masked_sum(x):
-        return jax.lax.psum(jnp.where(is_byz, 0.0, 1.0) * x.astype(jnp.float32),
-                            tuple(worker_axes))
+        return compat.psum(jnp.where(is_byz, 0.0, 1.0) * x.astype(jnp.float32),
+                           worker_axes)
 
     honest_mean = jax.tree_util.tree_map(lambda x: masked_sum(x) / wh, msg)
 

@@ -58,6 +58,26 @@ def geomed(z: jnp.ndarray, *, iters: int = 32, tile: int = _TILE,
     return y.astype(z.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("num_segments", "tile", "interpret"))
+def partial_sqdist_segments(z: jnp.ndarray, y: jnp.ndarray,
+                            seg_ids: jnp.ndarray, *, num_segments: int,
+                            tile: int = _TILE,
+                            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Per-(worker, block) squared distances: z (W, p), y (p,), seg_ids (p,)
+    int block id per coordinate -> (W, num_segments).  One fused sweep
+    instead of num_segments sqdist passes -- the TPU form of the segment sum
+    in ``core/geomed.weiszfeld_blockwise_sharded`` (not yet wired into that
+    shard_map path); padding introduced here contributes to no block."""
+    interp = INTERPRET if interpret is None else interpret
+    zp, p = _pad_p(z, tile)
+    yp, _ = _pad_p(y, tile)
+    onehot = (seg_ids[None, :] == jnp.arange(num_segments)[:, None]).astype(
+        jnp.float32)
+    ohp, _ = _pad_p(onehot, tile)  # padded coordinates: all-zero columns
+    return wz.partial_sqdist_segments_call(zp, yp, ohp, tile=tile,
+                                           interpret=interp)
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def saga_correct(grad: jnp.ndarray, table: jnp.ndarray, avg: jnp.ndarray,
                  idx: jnp.ndarray, *, tile: int = _TILE,

@@ -11,6 +11,17 @@ def partial_sqdist(z: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(d * d, axis=-1)
 
 
+def partial_sqdist_segments(z: jnp.ndarray, y: jnp.ndarray,
+                            seg_ids: jnp.ndarray,
+                            num_segments: int) -> jnp.ndarray:
+    """z: (W, p), y: (p,), seg_ids: (p,) block ids -> (W, num_segments)
+    per-(worker, block) squared distances."""
+    d2 = (z.astype(jnp.float32) - y.astype(jnp.float32)[None]) ** 2
+    onehot = (seg_ids[None, :] == jnp.arange(num_segments)[:, None]).astype(
+        jnp.float32)
+    return d2 @ onehot.T
+
+
 def weighted_sum(z: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """sum_i w[i] z[i] / sum(w); z: (W, p), w: (W,) -> (p,)."""
     return (w.astype(jnp.float32) @ z.astype(jnp.float32)) / jnp.sum(w.astype(jnp.float32))

@@ -10,6 +10,13 @@ worker axis resident on-chip, fusing each pass to a single HBM sweep:
 * :func:`partial_sqdist_call`  -- grid over p-tiles, accumulates per-worker
   partial squared distances into a (W,) accumulator (revisited every grid
   step; Pallas grid iteration on TPU is sequential so accumulation is safe).
+* :func:`partial_sqdist_segments_call` -- same sweep, but distances are
+  accumulated per (worker, block) into a (W, L) accumulator given an (L, p)
+  block-membership indicator: one fused HBM pass instead of L separate
+  per-block sweeps.  This is the TPU-targeted counterpart of the segment
+  sum inside ``core/geomed.weiszfeld_blockwise_sharded`` (which currently
+  computes it with ``jax.ops.segment_sum``; the kernel is oracle-verified
+  but not yet wired into the shard_map path).
 * :func:`weighted_sum_call`    -- grid over p-tiles, each tile emits the
   weighted combination of the W messages for its coordinate range.
 
@@ -59,6 +66,47 @@ def partial_sqdist_call(z: jnp.ndarray, y: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((w,), jnp.float32),
         interpret=interpret,
     )(z, y.reshape(1, p))
+
+
+def _sqdist_seg_kernel(z_ref, y_ref, oh_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    z = z_ref[...].astype(jnp.float32)        # (W, T)
+    y = y_ref[...].astype(jnp.float32)        # (1, T)
+    oh = oh_ref[...].astype(jnp.float32)      # (L, T)
+    d = z - y
+    out_ref[...] += (d * d) @ oh.T            # (W, L)
+
+
+def partial_sqdist_segments_call(z: jnp.ndarray, y: jnp.ndarray,
+                                 onehot: jnp.ndarray, *,
+                                 tile: int = DEFAULT_TILE,
+                                 interpret: bool = True) -> jnp.ndarray:
+    """z: (W, p), y: (p,), onehot: (L, p) block membership (a coordinate with
+    an all-zero onehot column -- e.g. padding -- contributes nowhere) ->
+    (W, L) per-(worker, block) squared distances.  p must be a multiple of
+    ``tile`` (ops.py pads)."""
+    w, p = z.shape
+    l = onehot.shape[0]
+    assert p % tile == 0, (p, tile)
+    assert onehot.shape[1] == p, (onehot.shape, p)
+    grid = (p // tile,)
+    return pl.pallas_call(
+        _sqdist_seg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((w, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((l, tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((w, l), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, l), jnp.float32),
+        interpret=interpret,
+    )(z, y.reshape(1, p), onehot)
 
 
 def _wsum_kernel(z_ref, w_ref, out_ref):

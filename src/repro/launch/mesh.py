@@ -3,24 +3,43 @@
 Kept as FUNCTIONS so importing this module never touches jax device state.
 
 * single pod : (16, 16)   axes ("data", "model")  -- 256 chips (v5e pod)
-* multi-pod  : (2, 16, 16) axes ("pod", "data", "model") -- 512 chips
+* multi-pod  : (P, 16, 16) axes ("pod", "data", "model") -- P x 256 chips
 
 Workers of the Byzantine-robust federation are the indices along the
-("pod",) "data" axes: 16 workers single-pod, 32 multi-pod; each worker owns
-16 model-parallel chips and its own finite local dataset + SAGA table.
+WORKER AXES ``("pod", "data")`` (the axes :func:`worker_axes` reports): 16
+workers single-pod, P*16 multi-pod; each worker owns ``model``-parallel
+chips and its own finite local dataset + SAGA table.  The global worker id
+is the row-major linear index over the worker axes (pod-major) -- the order
+every collective in ``core/robust_step.py`` collapses those axes to
+(``repro.compat.all_gather`` / ``all_to_all`` / ``axis_index``).
 
 All mesh construction funnels through ``repro.compat.make_mesh`` so the same
 code runs on jax 0.4.x (no axis_types) and >= 0.6 (explicit AxisType.Auto).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 from repro import compat
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    if multi_pod:
-        return compat.make_mesh((2, 16, 16), ("pod", "data", "model"))
-    return compat.make_mesh((16, 16), ("data", "model"))
+def make_production_mesh(*, multi_pod: bool = False,
+                         num_pods: Optional[int] = None,
+                         data_per_pod: int = 16, model: int = 16):
+    """Build the production mesh.
+
+    ``num_pods``: explicit pod count; >= 2 adds the leading "pod" axis,
+    1 builds the flat single-pod mesh.  Defaults to the legacy boolean
+    ``multi_pod`` (False -> 1 pod, True -> 2 pods).
+    """
+    if num_pods is None:
+        num_pods = 2 if multi_pod else 1
+    if num_pods < 1:
+        raise ValueError(f"num_pods must be >= 1, got {num_pods}")
+    if num_pods > 1:
+        return compat.make_mesh((num_pods, data_per_pod, model),
+                                ("pod", "data", "model"))
+    return compat.make_mesh((data_per_pod, model), ("data", "model"))
 
 
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):

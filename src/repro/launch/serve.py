@@ -63,12 +63,17 @@ def _serve(args, cfg, model, mesh) -> None:
     if cfg.family == "audio":
         batch["audio_emb"] = 0.02 * jax.random.normal(
             jax.random.fold_in(key, 2), (b, cfg.encoder_seq, cfg.d_model))
-    if mesh is not None and b % mesh_lib.axis_sizes(mesh)["data"] == 0:
-        # Shard the serving batch over the 'data' axis (leading batch dim).
-        from jax.sharding import NamedSharding
-        from jax.sharding import PartitionSpec as P
-        sh = NamedSharding(mesh, P("data"))
-        batch = {k: jax.device_put(v, sh) for k, v in batch.items()}
+    if mesh is not None:
+        data = mesh_lib.axis_sizes(mesh)["data"]
+        if b % data == 0:
+            # Shard the serving batch over the 'data' axis (leading batch dim).
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            sh = NamedSharding(mesh, P("data"))
+            batch = {k: jax.device_put(v, sh) for k, v in batch.items()}
+        else:
+            print(f"WARNING: batch={b} not divisible by data axis ({data}); "
+                  "serving with a REPLICATED batch, not data-sharded")
 
     t0 = time.time()
     logits, cache = jax.jit(model.prefill)(params, batch)

@@ -7,12 +7,17 @@ step of DESIGN.md Sec. 2:
      the batch (sharded over the pod/data mesh axes);
   2. optional SAGA correction (tables sharded like the gradients);
   3. Byzantine attack injection (mask-replace the first B workers);
-  4. robust aggregation:
+  4. robust aggregation (every registry aggregator runs on both paths):
        * ``comm="gather"``  -- paper-faithful replicated master (XLA
-         all-gathers the worker axis; Weiszfeld runs redundantly);
-       * ``comm="sharded"`` -- beyond-paper distributed Weiszfeld (shard_map
-         all_to_all resharding; psum'd norms);
+         all-gathers the worker axes; the rule runs redundantly);
+       * ``comm="sharded"`` -- beyond-paper coordinate resharding (shard_map
+         all_to_all; psum'd norms / partial Gram / per-block segments --
+         DESIGN.md Sec. 2);
   5. optimizer update (paper update is plain SGD, eq. (11)).
+
+Worker axes may be a single ``data`` axis or multi-pod ``(pod, data)``
+(``launch/mesh.py``); the step builder is agnostic -- it forwards
+``mesh_lib.worker_axes(mesh)`` everywhere.
 
 ``make_prefill_step`` / ``make_serve_step`` build the inference paths,
 including the sequence-sharded long-context decode.
@@ -163,12 +168,14 @@ def _gather_agg(msgs: Pytree, robust: RobustConfig) -> Pytree:
 
 def _sharded_agg(msgs: Pytree, robust: RobustConfig, mesh,
                  param_specs: Pytree) -> Pytree:
-    """Beyond-paper: all_to_all coordinate resharding + distributed Weiszfeld
+    """Beyond-paper: all_to_all coordinate resharding + slice-local rules
     inside a FULLY-manual shard_map (worker axes and model axis): every leaf
-    arrives as its local shard, the flatten/all_to_all stay local, and
-    Weiszfeld's full-vector norms are restored by one psum of W floats per
-    iteration over (worker + model) axes.  Bytes moved per device:
-    O(2 * p_shard) instead of the gather master's O(W * p_shard)."""
+    arrives as its local shard, the flatten/all_to_all stay local, and global
+    geometry is restored by small psums over (worker + model) axes --
+    W-float norms per Weiszfeld/clip iteration, one (W, W) partial Gram for
+    krum, a (W, num_leaves) per-block matrix for geomed_blockwise.  Bytes
+    moved per device: O(2 * p_shard) instead of the gather master's
+    O(W * p_shard)."""
     wa = mesh_lib.worker_axes(mesh)
     w = mesh_lib.num_workers(mesh)
     waxes = wa if len(wa) > 1 else wa[0]

@@ -58,7 +58,8 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--per-worker-batch", type=int, default=2)
-    ap.add_argument("--mesh", default="", help="e.g. 4x2 (data x model); "
+    ap.add_argument("--mesh", default="", help="e.g. 4x2 (data x model) or "
+                    "2x2x2 (pod x data x model, multi-pod worker axes); "
                     "default: all devices on the data axis")
     ap.add_argument("--aggregator", default="geomed")
     ap.add_argument("--attack", default="none")
@@ -80,7 +81,10 @@ def main() -> None:
         shape = tuple(int(x) for x in args.mesh.split("x"))
     else:
         shape = (ndev, 1)
-    mesh = mesh_lib.make_host_mesh(shape, ("data", "model"))
+    if len(shape) not in (2, 3):
+        raise SystemExit(f"--mesh must have 2 or 3 axes, got {args.mesh!r}")
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    mesh = mesh_lib.make_host_mesh(shape, axes)
     w = mesh_lib.num_workers(mesh)
 
     model = build_model(cfg, remat=False, q_chunk=min(args.seq, 512),

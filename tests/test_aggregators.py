@@ -100,6 +100,10 @@ def test_geomed_blockwise_per_leaf():
     np.testing.assert_allclose(np.asarray(got["x"]), np.asarray(want_x), atol=1e-5)
 
 
-def test_unknown_aggregator():
-    with pytest.raises(ValueError):
+def test_unknown_aggregator_error_lists_registry():
+    with pytest.raises(ValueError) as ei:
         agg.get_aggregator("nope")
+    # The error is derived from the registry, so every registered name is in
+    # it and a new entry can never go stale.
+    for name in agg.AGGREGATOR_NAMES:
+        assert name in str(ei.value)

@@ -3,7 +3,10 @@
 Each test runs an inline program in a subprocess via tests/mesh_harness.py
 (8 forced host devices); programs use repro.compat for every mesh/shard_map
 touch so they run on jax 0.4.x through 0.7.x."""
+import pytest
+
 from mesh_harness import run_py
+from repro.core.aggregators import AGGREGATOR_NAMES
 
 
 def test_gather_vs_sharded_aggregation_agree():
@@ -36,9 +39,9 @@ def test_gather_vs_sharded_aggregation_agree():
 
 
 def test_aggregator_names_covered_in_both_comm_modes():
-    """Every name in AGGREGATOR_NAMES either aggregates or raises the
-    documented ValueError, in BOTH comm modes; gather-mode results match the
-    single-host reference aggregator."""
+    """Every name in AGGREGATOR_NAMES aggregates (no raising) in BOTH comm
+    modes on the single-worker-axis mesh, matching the single-host reference
+    aggregator."""
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
@@ -47,6 +50,9 @@ def test_aggregator_names_covered_in_both_comm_modes():
         from repro.core import (AGGREGATOR_NAMES, GATHER_AGGREGATORS,
                                 SHARDED_AGGREGATORS, RobustConfig,
                                 distributed_aggregate, sharded_aggregate)
+        # Since PR 2 both comm paths cover the whole registry.
+        assert GATHER_AGGREGATORS == AGGREGATOR_NAMES
+        assert SHARDED_AGGREGATORS == AGGREGATOR_NAMES
         mesh = compat.make_mesh((4, 2), ("data", "model"))
         g1 = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
         g2 = jax.random.normal(jax.random.PRNGKey(1), (4, 6, 4))
@@ -57,37 +63,99 @@ def test_aggregator_names_covered_in_both_comm_modes():
             cfg = RobustConfig(aggregator=name, weiszfeld_iters=100,
                                weiszfeld_tol=1e-9, num_byzantine=1,
                                clip_radius=2.5)
-            # gather mode: every registry name must work and match the
-            # single-host reference on replicated inputs.
-            assert name in GATHER_AGGREGATORS, name
+            ref = cfg.aggregator_fn()({"a": g1, "b": g2})
             got = sm(lambda a, b: tuple(distributed_aggregate(
                 {"a": a[0], "b": b[0]}, cfg, worker_axes=("data",),
                 model_axes=("model",)).values()))(g1, g2)
-            ref = cfg.aggregator_fn()({"a": g1, "b": g2})
-            np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref["a"]),
-                                       atol=2e-5, err_msg=f"gather {name} a")
-            np.testing.assert_allclose(np.asarray(got[1]), np.asarray(ref["b"]),
-                                       atol=2e-5, err_msg=f"gather {name} b")
-            # sharded mode: works (and agrees) or raises the documented error.
-            run = lambda: sm(lambda a, b: tuple(sharded_aggregate(
+            got_s = sm(lambda a, b: tuple(sharded_aggregate(
                 {"a": a[0], "b": b[0]}, cfg, worker_axes=("data",),
                 model_axes=("model",), num_workers=4).values()))(g1, g2)
-            if name in SHARDED_AGGREGATORS:
-                got_s = run()
-                np.testing.assert_allclose(np.asarray(got_s[0]), np.asarray(ref["a"]),
-                                           atol=2e-5, err_msg=f"sharded {name} a")
-                np.testing.assert_allclose(np.asarray(got_s[1]), np.asarray(ref["b"]),
-                                           atol=2e-5, err_msg=f"sharded {name} b")
-            else:
-                try:
-                    run()
-                except ValueError as e:
-                    assert "unsupported in comm='sharded'" in str(e), (name, e)
-                else:
-                    raise AssertionError(f"{name}: expected ValueError in sharded mode")
+            for comm, o in (("gather", got), ("sharded", got_s)):
+                np.testing.assert_allclose(np.asarray(o[0]), np.asarray(ref["a"]),
+                                           atol=2e-5, err_msg=f"{comm} {name} a")
+                np.testing.assert_allclose(np.asarray(o[1]), np.asarray(ref["b"]),
+                                           atol=2e-5, err_msg=f"{comm} {name} b")
         print("NAMES_COVERED")
     """, timeout=600)
     assert "NAMES_COVERED" in out
+
+
+# One aggregator per subprocess: the (pod, data) worker-axis matrix case.
+_MULTIPOD_CASE = """
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.core import RobustConfig, distributed_aggregate, sharded_aggregate
+    wa = ("pod", "data")
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    g1 = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    g2 = jax.random.normal(jax.random.PRNGKey(1), (4, 6, 4))
+    cfg = RobustConfig(aggregator=name, weiszfeld_iters=100, weiszfeld_tol=1e-9,
+                       num_byzantine=1, clip_radius=2.5)
+    ref = cfg.aggregator_fn()({"a": g1, "b": g2})
+    sm = partial(compat.shard_map, mesh=mesh,
+                 in_specs=(P(wa, "model"), P(wa, None, "model")),
+                 out_specs=(P("model"), P(None, "model")), check_vma=False)
+    outs = {}
+    outs["gather"] = sm(lambda a, b: tuple(distributed_aggregate(
+        {"a": a[0], "b": b[0]}, cfg, worker_axes=wa,
+        model_axes=("model",)).values()))(g1, g2)
+    outs["sharded"] = sm(lambda a, b: tuple(sharded_aggregate(
+        {"a": a[0], "b": b[0]}, cfg, worker_axes=wa, model_axes=("model",),
+        num_workers=4).values()))(g1, g2)
+    # Both comm modes match the single-host reference AND each other.
+    for comm, got in outs.items():
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref["a"]),
+                                   atol=2e-5, err_msg=comm + " a")
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(ref["b"]),
+                                   atol=2e-5, err_msg=comm + " b")
+    for x, y in zip(outs["gather"], outs["sharded"]):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-5)
+    print("MULTIPOD_AGREE", name)
+"""
+
+
+@pytest.mark.parametrize("name", AGGREGATOR_NAMES)
+def test_every_aggregator_gather_vs_sharded_on_pod_data_mesh(name):
+    """Every registry aggregator produces gather-vs-sharded results within
+    tolerance on a multi-pod (pod, data) worker-axis mesh (2, 2, 2)."""
+    out = run_py(f"    name = {name!r}\n" + _MULTIPOD_CASE, timeout=600)
+    assert f"MULTIPOD_AGREE {name}" in out
+
+
+def test_sharded_krum_selection_index_regression():
+    """Seeded gaussian attack, W=8 messages (5 honest + 3 Byzantine) on a
+    (2, 4, 1) multi-pod mesh: krum's selection index is pinned to honest
+    worker 2 by the seeds, and the sharded path (coordinate all_to_all +
+    partial-Gram psum) must return exactly that worker's message."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro import compat
+        from repro.core import RobustConfig, krum_scores, sharded_aggregate
+        from repro.core.aggregators import _pairwise_sq_dists
+        from repro.core.attacks import AttackConfig, apply_attack
+        honest = jax.random.normal(jax.random.PRNGKey(41), (5, 16))
+        msgs = apply_attack(AttackConfig(name="gaussian", num_byzantine=3,
+                                         gaussian_variance=100.0),
+                            {"g": honest}, jax.random.PRNGKey(7))["g"]
+        scores = krum_scores(_pairwise_sq_dists({"g": msgs}), 3)
+        assert int(jnp.argmin(scores)) == 2, np.asarray(scores)  # seed-pinned
+        mesh = compat.make_mesh((2, 4, 1), ("pod", "data", "model"))
+        cfg = RobustConfig(aggregator="krum", num_byzantine=3)
+        sm = partial(compat.shard_map, mesh=mesh,
+                     in_specs=(P(("pod", "data"), "model"),),
+                     out_specs=P("model"), check_vma=False)
+        got = sm(lambda g: sharded_aggregate(
+            {"g": g[0]}, cfg, worker_axes=("pod", "data"),
+            model_axes=("model",), num_workers=8)["g"])(msgs)
+        # Krum SELECTS, so the sharded result is bit-exact, not just close.
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(msgs[2]))
+        print("KRUM_SELECTS_2")
+    """)
+    assert "KRUM_SELECTS_2" in out
 
 
 def test_train_step_runs_on_mesh_and_attack_is_neutralized():

@@ -33,6 +33,22 @@ def test_weiszfeld_step(w, p, dt):
 
 
 @pytest.mark.parametrize("w,p", SHAPES[:4])
+@pytest.mark.parametrize("l", [1, 3, 7])
+def test_partial_sqdist_segments(w, p, l):
+    z = jax.random.normal(KEY, (w, p))
+    y = jnp.mean(z, axis=0)
+    # Uneven contiguous blocks, like flattened pytree leaves.
+    bounds = np.linspace(0, p, l + 1).astype(int)
+    seg = jnp.asarray(np.repeat(np.arange(l), np.diff(bounds)).astype(np.int32))
+    got = np.asarray(ops.partial_sqdist_segments(z, y, seg, num_segments=l))
+    want = np.asarray(ref.partial_sqdist_segments(z, y, seg, l))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    # The blocks partition the coordinates: rows sum to the full sqdist.
+    np.testing.assert_allclose(got.sum(axis=1), np.asarray(ref.partial_sqdist(z, y)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("w,p", SHAPES[:4])
 def test_geomed_kernel(w, p):
     z = jax.random.normal(KEY, (w, p))
     got = np.asarray(ops.geomed(z, iters=25))

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Doc-link checker: no dangling file references in the repo's documentation.
+
+Scans the markdown docs for references that look like repo paths -- markdown
+link targets and backticked tokens ending in a known file extension (or a
+trailing slash for directories) -- and fails if the referenced path exists
+neither relative to the repo root nor to src/repro/ (docstrings habitually
+cite module paths like ``core/robust_step.py``).  Generated artifacts
+(``BENCH_*.json``, anything under ``experiments/``) are exempt.
+
+    python tools/check_doc_links.py [files...]     # default: the doc set
+
+Run by .github/workflows/ci.yml on every push/PR.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DEFAULT_DOCS = ["README.md", "DESIGN.md", "ROADMAP.md", "benchmarks/README.md"]
+
+# Tokens that count as path references when they appear in `backticks` or as
+# [markdown](targets): end in a checked extension, or in "/" (a directory).
+EXTS = (".py", ".md", ".yml", ".yaml", ".json", ".txt", ".toml", ".cfg")
+
+BACKTICK = re.compile(r"`([A-Za-z0-9_.:/\-]+)`")
+MD_LINK = re.compile(r"\]\(([^)#\s]+)\)")
+
+# Generated at runtime, not committed.
+GENERATED = re.compile(r"(^|/)BENCH_[\w.-]*\.json$|^experiments/")
+
+
+def path_refs(text: str):
+    for m in BACKTICK.finditer(text):
+        tok = m.group(1).split("::")[0]  # strip pytest node ids
+        if tok.endswith(EXTS) or (tok.endswith("/") and "/" in tok.rstrip("/")):
+            yield tok
+    for m in MD_LINK.finditer(text):
+        tok = m.group(1)
+        if "://" not in tok and not tok.startswith("mailto:"):
+            yield tok
+
+
+def resolves(tok: str, doc_dir: str) -> bool:
+    tok = tok.rstrip("/") or tok
+    bases = (doc_dir, REPO, os.path.join(REPO, "src", "repro"),
+             os.path.join(REPO, "src"))
+    return any(os.path.exists(os.path.join(b, tok)) for b in bases)
+
+
+def main(argv) -> int:
+    docs = argv[1:] or DEFAULT_DOCS
+    missing = []
+    for doc in docs:
+        path = os.path.join(REPO, doc)
+        if not os.path.exists(path):
+            missing.append(f"{doc}: (document itself is missing)")
+            continue
+        with open(path) as f:
+            text = f.read()
+        for tok in path_refs(text):
+            if GENERATED.search(tok):
+                continue
+            if not resolves(tok, os.path.dirname(path)):
+                missing.append(f"{doc}: dangling reference {tok!r}")
+    if missing:
+        print("doc-link check FAILED:")
+        for m in missing:
+            print(" ", m)
+        return 1
+    print(f"doc-link check OK ({', '.join(docs)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
