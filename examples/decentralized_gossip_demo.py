@@ -1,0 +1,65 @@
+"""Decentralized Byzantine-robust training demo: ring vs complete graph.
+
+No master: every node owns its own parameter copy, exchanges SAGA-corrected
+gradients only with its graph neighbors, and robustly aggregates its masked
+neighborhood (repro.topology, DESIGN.md Sec. 6).  Two sign-flipping
+Byzantine nodes attack PER EDGE -- each receiver gets poison crafted from
+its own neighborhood statistics.
+
+The run prints, per topology, the spectral-gap report and the loss +
+consensus-distance trajectory under geomed vs the non-robust mean:
+
+* on the COMPLETE graph every honest node sees every message, so the
+  copies stay in perfect consensus and geomed recovers the master result;
+* on the RING information diffuses hop by hop: consensus distance stays
+  positive, robust aggregation still learns, while the mean rule lets the
+  per-edge attack poison every neighborhood.
+
+    PYTHONPATH=src python examples/decentralized_gossip_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RobustConfig, make_federated_step
+from repro.data import ijcnn1_like, logreg_loss, partition
+from repro.optim import get_optimizer
+from repro.topology import get_topology
+
+HONEST, BYZ, STEPS = 10, 2, 300
+
+
+def mean_honest_loss(loss_fn, params, wd, wh):
+    return float(np.mean([
+        loss_fn({"w": params["w"][i]},
+                {"a": wd["a"][i], "b": wd["b"][i]})
+        for i in range(wh)]))
+
+
+def main() -> None:
+    data = ijcnn1_like(jax.random.PRNGKey(0), n=2000)
+    wd = partition({"a": data.x, "b": data.y}, HONEST, seed=1)
+    loss_fn = logreg_loss(0.01)
+    opt = get_optimizer("sgd", 0.02)
+
+    for topo_name in ("ring", "complete"):
+        topo = get_topology(topo_name, HONEST + BYZ)
+        print(f"\n=== {topo_name} === {topo.describe()}")
+        for agg in ("geomed", "mean"):
+            cfg = RobustConfig(aggregator=agg, vr="saga", attack="sign_flip",
+                               num_byzantine=BYZ, weiszfeld_iters=32)
+            init_fn, step_fn = make_federated_step(
+                loss_fn, wd, cfg, opt, topology=topo)
+            state = init_fn({"w": jnp.zeros((22,), jnp.float32)},
+                            jax.random.PRNGKey(1))
+            step = jax.jit(step_fn)
+            for i in range(STEPS):
+                state, metrics = step(state)
+                if i % (STEPS // 3) == 0 or i == STEPS - 1:
+                    ml = mean_honest_loss(loss_fn, state.params, wd, HONEST)
+                    print(f"  {agg:7s} step {i:3d}: honest-loss={ml:.4f} "
+                          f"consensus={float(metrics['consensus_dist']):.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -118,6 +118,31 @@ class CheckpointManager:
     def restore(self, step: int, like: Pytree) -> Pytree:
         return load(self._path(step), like)
 
+    # -- full-train-state convenience -----------------------------------
+    #
+    # The train state is WHOLE-state by contract: params + optimizer state
+    # + SAGA table/avg + step counter (+ PRNG key for the simulation
+    # path), exactly the dict/NamedTuple the step builders hand back.
+    # Saving anything less makes resumed runs silently diverge (a fresh
+    # Adam moment or a cold SAGA table changes the trajectory);
+    # tests/test_system.py pins resume bit-exactness for both paths.
+
+    def save_train_state(self, step: int, state: Pytree) -> str:
+        """Checkpoint the COMPLETE train state at ``step``.  ``state`` must
+        be the full structure returned by the step functions -- every leaf
+        (bf16 included) round-trips bit-exactly."""
+        return self.save(step, state)
+
+    def restore_latest(self, like: Pytree) -> tuple[Optional[int], Pytree]:
+        """Restore the newest checkpoint into the structure of ``like``
+        (arrays or ShapeDtypeStructs).  Returns ``(step, state)``, or
+        ``(None, like)`` when the directory holds no checkpoint yet --
+        callers can start fresh without special-casing."""
+        step = self.latest_step()
+        if step is None:
+            return None, like
+        return step, self.restore(step, like)
+
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep else []:

@@ -106,7 +106,17 @@ def ipm_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
     return _append(honest, _broadcast_rows(byz, cfg.num_byzantine))
 
 
-_ATTACKS = {
+def none_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
+    """No Byzantine rows: the message set is the honest set (W = W_h)."""
+    del cfg, key
+    return honest
+
+
+# name -> attack.  The SINGLE source of truth: ``ATTACK_NAMES`` and every
+# unknown-name error derive from this dict, so registering here is the one
+# place a new attack is added (same pattern as the aggregator registry).
+_ATTACKS: dict[str, Attack] = {
+    "none": none_attack,
     "gaussian": gaussian_attack,
     "sign_flip": sign_flip_attack,
     "zero_gradient": zero_gradient_attack,
@@ -114,15 +124,20 @@ _ATTACKS = {
     "ipm": ipm_attack,
 }
 
-ATTACK_NAMES = ("none",) + tuple(_ATTACKS)
+ATTACK_NAMES = tuple(_ATTACKS)
+
+
+def _check_attack_name(name: str) -> None:
+    if name not in _ATTACKS:
+        raise ValueError(f"unknown attack {name!r}; known: "
+                         f"{', '.join(sorted(_ATTACKS))}")
 
 
 def apply_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
     """Return the full W-message set seen by the master."""
-    if cfg.name == "none" or cfg.num_byzantine == 0:
+    _check_attack_name(cfg.name)
+    if cfg.num_byzantine == 0:
         return honest
-    if cfg.name not in _ATTACKS:
-        raise ValueError(f"unknown attack {cfg.name!r}")
     return _ATTACKS[cfg.name](cfg, honest, key)
 
 
@@ -138,10 +153,9 @@ def apply_attack_stacked(cfg: AttackConfig, msgs: Pytree, key: jax.Array) -> Pyt
     unaligned slice/concat of an axis that is sharded across the mesh both
     costs halo exchanges and miscompiles (silently doubled rows) under
     older XLA SPMD partitioners."""
+    _check_attack_name(cfg.name)
     if cfg.name == "none" or cfg.num_byzantine == 0:
         return msgs
-    if cfg.name not in _ATTACKS:
-        raise ValueError(f"unknown attack {cfg.name!r}")
     b = cfg.num_byzantine
     w = jax.tree_util.tree_leaves(msgs)[0].shape[0]
     wh = w - b

@@ -50,6 +50,13 @@ class RobustConfig:
     vr: str = "saga"                  # sgd | minibatch | saga
     attack: str = "none"
     num_byzantine: int = 0
+    # Communication graph (repro.topology).  "star" is the paper's implicit
+    # master federation and keeps this module's paths bit-exact; any other
+    # name routes training through the decentralized per-node step
+    # (DESIGN.md Sec. 6).  seed/p only reach erdos_renyi.
+    topology: str = "star"
+    topology_seed: int = 0
+    topology_p: float = 0.5
     minibatch_size: int = 50          # paper's BSGD batch size
     weiszfeld_iters: int = 64
     weiszfeld_tol: float = 1e-6
@@ -93,18 +100,53 @@ class FederatedState(NamedTuple):
     key: jax.Array
 
 
+def resolve_topology(cfg: RobustConfig, num_nodes: int,
+                     topology: Optional[Any] = None):
+    """Resolve the ``topology=`` argument of the step builders: an explicit
+    :class:`repro.topology.Topology` wins, else ``cfg.topology`` is built by
+    name for ``num_nodes`` nodes.  Returns None for ``"star"`` -- the
+    callers keep the master path (bit-exact with the paper reproduction)."""
+    from repro import topology as topo_lib  # deferred: topology imports core
+    if topology is None:
+        topology = cfg.topology
+    if isinstance(topology, str):
+        if topology == "star":
+            return None
+        return topo_lib.get_topology(topology, num_nodes,
+                                     seed=cfg.topology_seed,
+                                     p=cfg.topology_p)
+    if topology.name == "star":
+        return None
+    return topology
+
+
 def make_federated_step(
     loss_fn: Callable[[Pytree, Pytree], jnp.ndarray],
     worker_data: Pytree,
     cfg: RobustConfig,
     optimizer: optim_lib.Optimizer,
+    *,
+    topology: Optional[Any] = None,
 ):
     """Build ``(init_fn, step_fn, metrics_keys)`` for the simulated federation.
 
     ``loss_fn(params, batch)``: mean loss over a batch whose leaves have a
     leading sample axis. ``worker_data``: leaves shaped (W_h, J, ...).
+
+    ``topology``: a name from ``repro.topology.TOPOLOGY_NAMES`` or a built
+    :class:`repro.topology.Topology` (default: ``cfg.topology``).  The
+    default ``"star"`` IS this function's master path, unchanged and
+    bit-exact; any other graph delegates to
+    :func:`repro.topology.make_decentralized_step`, whose state carries a
+    leading per-node axis on every leaf (DESIGN.md Sec. 6).
     """
     wh = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
+    b = cfg.num_byzantine if cfg.attack != "none" else 0
+    topo = resolve_topology(cfg, wh + b, topology)
+    if topo is not None:
+        from repro.topology import make_decentralized_step
+        return make_decentralized_step(loss_fn, worker_data, cfg, optimizer,
+                                       topo)
     j = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
     grad_fn = jax.grad(loss_fn)
     attack_cfg = cfg.attack_config()

@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the paper's aggregation/VR hot spots.
 
 Modules: ``weiszfeld`` (geomed inner loop), ``saga_correct`` (fused table
-correct+update), ``robust_stats`` (coordinate median / trimmed mean);
+correct+update), ``robust_stats`` (coordinate median / trimmed mean),
+``topology`` (masked-neighborhood reduction for the decentralized path);
 ``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles.
 """
 from repro.kernels import ops, ref

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as fa
 from repro.kernels import robust_stats as rs
 from repro.kernels import saga_correct as sc
+from repro.kernels import topology as tp
 from repro.kernels import weiszfeld as wz
 
 INTERPRET = jax.default_backend() == "cpu"
@@ -111,6 +112,22 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                                 q_block=q_block, kv_block=kv_block,
                                 interpret=interp)
     return o.reshape(b, h, s, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("trim", "tile", "interpret"))
+def masked_neighbor_reduce(exchange: jnp.ndarray, mask: jnp.ndarray, *,
+                           trim: int = 0, tile: int = _TILE,
+                           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused per-receiver masked (trimmed) neighborhood mean on a dense
+    (R, S, d) exchange tensor + (R, S) neighbor mask -> (R, d) f32.  The
+    decentralized hot path (DESIGN.md Sec. 6); the jnp shard_map path in
+    ``topology/masked.py`` is the oracle-checked reference, this is the
+    TPU form (one HBM sweep, no sort).  Padding coordinates introduced
+    here average masked zeros and are stripped before returning."""
+    interp = INTERPRET if interpret is None else interpret
+    ep, d = _pad_p(exchange, tile)
+    return tp.masked_neighbor_reduce_call(ep, mask, trim=trim, tile=tile,
+                                          interpret=interp)[:, :d]
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))

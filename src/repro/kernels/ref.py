@@ -66,6 +66,21 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
 
 
+def masked_neighbor_reduce(exchange: jnp.ndarray, mask: jnp.ndarray,
+                           trim: int = 0) -> jnp.ndarray:
+    """exchange: (R, S, d), mask: (R, S) -> (R, d) per-receiver masked
+    trimmed mean over the sender axis (trim=0: plain masked mean).
+    Sort-based: non-neighbors fill to +inf, ranks [trim, n-trim) survive."""
+    z = exchange.astype(jnp.float32)
+    m = mask[:, :, None]
+    n = jnp.sum(mask, axis=1)                                # (R,)
+    s = jnp.sort(jnp.where(m > 0, z, jnp.inf), axis=1)
+    ranks = jnp.arange(z.shape[1])[None, :, None]
+    keep = (ranks >= trim) & (ranks < (n[:, None, None] - trim))
+    return (jnp.sum(jnp.where(keep, s, 0.0), axis=1)
+            / jnp.maximum(n - 2 * trim, 1.0)[:, None])
+
+
 def coordinate_median(z: jnp.ndarray) -> jnp.ndarray:
     """z: (W, p) -> (p,) elementwise median."""
     return jnp.median(z, axis=0).astype(z.dtype)

@@ -45,6 +45,52 @@ from repro.optim import optimizers as optim_lib
 Pytree = Any
 
 
+def _opt_specs_like(optimizer_name: str, pspecs: Pytree) -> Pytree:
+    """Optimizer-state PartitionSpecs mirroring the parameter specs.  Shared
+    by the master and decentralized step builders so a new optimizer is
+    reflected in both (the decentralized caller passes node-stacked specs)."""
+    if optimizer_name == "sgd":
+        return ()
+    if optimizer_name == "momentum":
+        return pspecs
+    return optim_lib.AdamState(mu=pspecs, nu=pspecs)
+
+
+def _opt_structs_like(optimizer_name: str, ps: Pytree) -> Pytree:
+    """Optimizer-state ShapeDtypeStructs for parameter structs ``ps`` (Adam
+    moments are always f32); same sharing contract as `_opt_specs_like`."""
+    if optimizer_name == "sgd":
+        return ()
+    if optimizer_name == "momentum":
+        return ps
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return optim_lib.AdamState(mu=jax.tree_util.tree_map(f32, ps),
+                               nu=jax.tree_util.tree_map(f32, ps))
+
+
+def _saga_specs_like(pspecs: Pytree, wa_spec) -> saga_lib.SagaState:
+    """SAGA table/avg PartitionSpecs: per-worker tables sharded over the
+    worker axes like the gradients (DESIGN.md Sec. 4); shared by the master
+    and decentralized builders."""
+    return saga_lib.SagaState(
+        table=jax.tree_util.tree_map(lambda s: P(wa_spec, None, *tuple(s)),
+                                     pspecs,
+                                     is_leaf=lambda x: isinstance(x, P)),
+        avg=jax.tree_util.tree_map(lambda s: P(wa_spec, *tuple(s)), pspecs,
+                                   is_leaf=lambda x: isinstance(x, P)))
+
+
+def _saga_structs_like(ps: Pytree, w: int, saga_num_samples: int) -> saga_lib.SagaState:
+    """SAGA table/avg ShapeDtypeStructs for ``w`` workers with J =
+    ``saga_num_samples`` table rows; same sharing contract as above."""
+    return saga_lib.SagaState(
+        table=jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((w, saga_num_samples) + s.shape,
+                                           s.dtype), ps),
+        avg=jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((w,) + s.shape, s.dtype), ps))
+
+
 def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
                     mesh, *, saga_num_samples: int = 0):
     """Returns (train_step, state_specs, make_state_structs).
@@ -115,42 +161,139 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
     wa_spec = wa if len(wa) > 1 else wa[0]
 
     def state_specs():
-        sp = {"params": pspecs, "opt": _opt_specs(pspecs), "step": P()}
+        sp = {"params": pspecs, "opt": _opt_specs_like(train.optimizer, pspecs),
+              "step": P()}
         if use_saga:
-            sp["saga"] = saga_lib.SagaState(
-                table=jax.tree_util.tree_map(lambda s: P(wa_spec, None, *tuple(s)), pspecs,
-                                             is_leaf=lambda x: isinstance(x, P)),
-                avg=jax.tree_util.tree_map(lambda s: P(wa_spec, *tuple(s)), pspecs,
-                                           is_leaf=lambda x: isinstance(x, P)))
+            sp["saga"] = _saga_specs_like(pspecs, wa_spec)
         return sp
-
-    def _opt_specs(pspecs):
-        if train.optimizer == "sgd":
-            return ()
-        if train.optimizer == "momentum":
-            return pspecs
-        return optim_lib.AdamState(mu=pspecs, nu=pspecs)
 
     def state_structs():
         ps = model.param_structs()
-        st = {"params": ps, "opt": _opt_structs(ps),
+        st = {"params": ps, "opt": _opt_structs_like(train.optimizer, ps),
               "step": jax.ShapeDtypeStruct((), jnp.int32)}
         if use_saga:
-            st["saga"] = saga_lib.SagaState(
-                table=jax.tree_util.tree_map(
-                    lambda s: jax.ShapeDtypeStruct((w, saga_num_samples) + s.shape, s.dtype), ps),
-                avg=jax.tree_util.tree_map(
-                    lambda s: jax.ShapeDtypeStruct((w,) + s.shape, s.dtype), ps))
+            st["saga"] = _saga_structs_like(ps, w, saga_num_samples)
         return st
 
-    def _opt_structs(ps):
-        if train.optimizer == "sgd":
-            return ()
-        if train.optimizer == "momentum":
-            return ps
-        f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
-        return optim_lib.AdamState(mu=jax.tree_util.tree_map(f32, ps),
-                                   nu=jax.tree_util.tree_map(f32, ps))
+    return train_step, state_specs(), state_structs
+
+
+def make_decentralized_train_step(model: Model, robust: RobustConfig,
+                                  train: TrainConfig, mesh, topology, *,
+                                  saga_num_samples: int = 0):
+    """Server-free variant of :func:`make_train_step` (DESIGN.md Sec. 6):
+    every worker-axis index is a graph NODE owning its own parameter /
+    optimizer copy (state leaves grow a leading node axis sharded over the
+    worker axes), gradients are computed at each node's own parameters, and
+    the aggregation step is the per-node masked neighborhood rule of
+    :func:`repro.topology.decentralized_aggregate` -- per-edge Byzantine
+    attacks included, so ``apply_attack_stacked`` is NOT used here.  Both
+    ``comm="gather"`` and ``comm="sharded"`` run on 1-axis and (pod, data)
+    worker meshes.
+
+    Returns ``(train_step, state_specs, make_state_structs)`` like
+    :func:`make_train_step`; metrics add ``consensus_dist`` (mean squared
+    drift of the honest nodes' parameters from their average).
+    """
+    from repro.core.robust_step import resolve_topology
+    from repro.topology import decentralized_aggregate, validate_topology
+
+    cfg = model.cfg
+    if robust.comm not in ("gather", "sharded"):
+        raise ValueError(f"RobustConfig.comm must be 'gather' or 'sharded', "
+                         f"got {robust.comm!r}")
+    compat.require_distributed(what="decentralized topology training")
+    wa = mesh_lib.worker_axes(mesh)
+    w = mesh_lib.num_workers(mesh)
+    topo = resolve_topology(robust, w, topology)
+    if topo is None:
+        raise ValueError(
+            "topology 'star' is the master federation -- use "
+            "launch/steps.make_train_step (the bit-exact paper path)")
+    validate_topology(robust, topo, w)
+    optimizer = optim_lib.get_optimizer(train.optimizer, train.lr)
+    use_saga = robust.vr == "saga" and saga_num_samples > 0
+    b = robust.num_byzantine if robust.attack != "none" else 0
+    honest = (jnp.arange(w) >= b).astype(jnp.float32)  # first B nodes attack
+    wh = max(w - b, 1)
+
+    szs = mesh_lib.axis_sizes(mesh)
+    pspecs = model.param_specs(szs)
+    wa_spec = wa if len(wa) > 1 else wa[0]
+    node_specs = jax.tree_util.tree_map(
+        lambda s: P(wa_spec, *tuple(s)), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    def train_step(state, batch, key):
+        params = state["params"]  # leaves (W, ...): one copy per node
+
+        losses, grads = jax.vmap(jax.value_and_grad(model.loss))(params, batch)
+        grads = jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, jax.sharding.NamedSharding(mesh, s)), grads, node_specs)
+
+        if use_saga:
+            idx = jax.random.randint(jax.random.fold_in(key, 1), (w,), 0,
+                                     saga_num_samples)
+            msgs, saga_state = saga_lib.saga_correct_scatter(
+                state["saga"], grads, idx)
+        else:
+            msgs, saga_state = grads, state.get("saga")
+
+        def agg_fn(local_msgs, k):
+            local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
+            out = decentralized_aggregate(
+                local, robust, topo, comm=robust.comm, worker_axes=wa,
+                model_axes=("model",), num_workers=w, key=k)
+            return jax.tree_util.tree_map(lambda a: a[None], out)
+
+        agg = compat.shard_map(
+            agg_fn, mesh=mesh, in_specs=(node_specs, P()),
+            out_specs=node_specs, check_vma=False,
+        )(msgs, jax.random.fold_in(key, 2))
+
+        updates, opt_state = optimizer.update(agg, state["opt"], params,
+                                              state["step"])
+        params = optim_lib.apply_updates(params, updates)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        if use_saga:
+            new_state["saga"] = saga_state
+
+        # Consensus drift of the honest nodes' parameter copies.
+        cons = jnp.zeros((), jnp.float32)
+        for x in jax.tree_util.tree_leaves(params):
+            x32 = x.astype(jnp.float32).reshape(w, -1)
+            hmask = honest.reshape(w, 1)
+            mean = jnp.sum(hmask * x32, axis=0, keepdims=True) / wh
+            cons = cons + jnp.sum(hmask * (x32 - mean) ** 2)
+        metrics = {
+            "loss": jnp.sum(honest * losses) / wh,
+            "consensus_dist": cons / wh,
+            "agg_norm": jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(agg)) / w),
+        }
+        return new_state, metrics
+
+    # ---- specs / structs: every leaf gains the leading node axis ---------
+    def state_specs():
+        sp = {"params": node_specs,
+              "opt": _opt_specs_like(train.optimizer, node_specs),
+              "step": P()}
+        if use_saga:
+            sp["saga"] = _saga_specs_like(pspecs, wa_spec)
+        return sp
+
+    def state_structs():
+        ps = model.param_structs()
+        node = lambda s: jax.ShapeDtypeStruct((w,) + s.shape, s.dtype)
+        nps = jax.tree_util.tree_map(node, ps)
+        st = {"params": nps, "opt": _opt_structs_like(train.optimizer, nps),
+              "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        if use_saga:
+            st["saga"] = _saga_structs_like(ps, w, saga_num_samples)
+        return st
 
     return train_step, state_specs(), state_structs
 

@@ -65,13 +65,27 @@ def main() -> None:
     ap.add_argument("--attack", default="none")
     ap.add_argument("--byzantine", type=int, default=0)
     ap.add_argument("--comm", default="gather", choices=["gather", "sharded"])
+    ap.add_argument("--topology", default="star",
+                    help="communication graph (repro.topology): star keeps "
+                    "the master path; ring/torus2d/complete/erdos_renyi "
+                    "train decentralized (per-node params)")
+    ap.add_argument("--topology-seed", type=int, default=0,
+                    help="seed for erdos_renyi draws")
+    ap.add_argument("--topology-p", type=float, default=0.5,
+                    help="edge probability for erdos_renyi")
     ap.add_argument("--vr", default="sgd", choices=["sgd", "saga"])
     ap.add_argument("--saga-samples", type=int, default=4)
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest checkpoint in --checkpoint-dir "
+                    "(full train state: params + opt + SAGA + step) and "
+                    "continue from there")
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume needs --checkpoint-dir")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -91,35 +105,61 @@ def main() -> None:
                         kv_chunk=min(args.seq, 512), loss_chunk=128)
     robust = RobustConfig(
         aggregator=args.aggregator, vr=args.vr, attack=args.attack,
-        num_byzantine=args.byzantine, comm=args.comm, weiszfeld_iters=16)
+        num_byzantine=args.byzantine, comm=args.comm, weiszfeld_iters=16,
+        topology=args.topology, topology_seed=args.topology_seed,
+        topology_p=args.topology_p)
     train = TrainConfig(optimizer=args.optimizer, lr=args.lr)
-    step_fn, sspecs, sstructs = steps_lib.make_train_step(
-        model, robust, train, mesh,
-        saga_num_samples=args.saga_samples if args.vr == "saga" else 0)
+    decentralized = args.topology != "star"
+    saga_samples = args.saga_samples if args.vr == "saga" else 0
+    if decentralized:
+        from repro.topology import get_topology
+        topo = get_topology(args.topology, w, seed=args.topology_seed,
+                            p=args.topology_p)
+        print(f"topology: {topo.describe()}")  # incl. the spectral gap
+        step_fn, sspecs, sstructs = steps_lib.make_decentralized_train_step(
+            model, robust, train, mesh, topo, saga_num_samples=saga_samples)
+    else:
+        step_fn, sspecs, sstructs = steps_lib.make_train_step(
+            model, robust, train, mesh, saga_num_samples=saga_samples)
 
     key = jax.random.PRNGKey(0)
     with compat.use_mesh(mesh):
-        params = model.init(key)
+        params0 = model.init(key)
+        params = params0
+        if decentralized:
+            # Every node starts from the same init; copies drift apart only
+            # as far as the robust gossip lets them (consensus_dist metric).
+            params = jax.tree_util.tree_map(
+                lambda p: jnp.broadcast_to(p[None], (w,) + p.shape) + 0,
+                params0)
         from repro.optim import get_optimizer
         opt = get_optimizer(args.optimizer, args.lr)
         state = {"params": params, "opt": opt.init(params),
                  "step": jnp.zeros((), jnp.int32)}
         if args.vr == "saga":
             from repro.core.saga import saga_init_zeros
-            state["saga"] = saga_init_zeros(params, w, args.saga_samples)
-        jstep = jax.jit(step_fn, donate_argnums=(0,))
+            state["saga"] = saga_init_zeros(params0, w, args.saga_samples)
         ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
+        start = 0
+        if args.resume:
+            step0, state = ckpt.restore_latest(state)
+            if step0 is not None:
+                start = step0
+                print(f"resumed full train state from step {step0}")
+        jstep = jax.jit(step_fn, donate_argnums=(0,))
         t0 = time.time()
-        for i in range(args.steps):
+        for i in range(start, args.steps):
             bkey = jax.random.fold_in(key, 1000 + i)
             batch = make_batch(bkey, cfg, w, args.per_worker_batch, args.seq)
             state, metrics = jstep(state, batch, jax.random.fold_in(key, i))
             if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+                extra = (f" consensus={float(metrics['consensus_dist']):.5f}"
+                         if decentralized else "")
                 print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
-                      f"agg_norm={float(metrics['agg_norm']):.4f} "
-                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
+                      f"agg_norm={float(metrics['agg_norm']):.4f}{extra} "
+                      f"({(time.time()-t0)/(i-start+1):.2f}s/step)")
             if ckpt and args.checkpoint_every and (i + 1) % args.checkpoint_every == 0:
-                ckpt.save(i + 1, state)
+                ckpt.save_train_state(i + 1, state)
     print("done")
 
 

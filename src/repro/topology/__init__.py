@@ -1,0 +1,31 @@
+"""Decentralized topologies: network graphs, masked neighborhood
+aggregation, and the server-free training step (DESIGN.md Sec. 6)."""
+from repro.topology.graphs import (
+    TOPOLOGY_NAMES,
+    Topology,
+    complete,
+    erdos_renyi,
+    get_topology,
+    ring,
+    star,
+    torus2d,
+)
+from repro.topology.masked import (
+    MASKED_AGGREGATOR_NAMES,
+    masked_aggregate,
+    masked_centered_clip,
+    masked_geomed_blockwise,
+    masked_geomed_groups,
+    masked_krum,
+    masked_mean,
+    masked_median,
+    masked_trimmed_mean,
+    masked_weiszfeld,
+    masked_weiszfeld_segments,
+)
+from repro.topology.decentralized_step import (
+    build_exchange,
+    decentralized_aggregate,
+    make_decentralized_step,
+    validate_topology,
+)

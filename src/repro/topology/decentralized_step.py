@@ -1,0 +1,363 @@
+"""Decentralized Byzantine-robust training over an explicit network graph.
+
+Server-free counterpart of :mod:`repro.core.robust_step` (DESIGN.md Sec. 6):
+there is no master -- every node keeps ITS OWN parameters, computes its own
+(SAGA-corrected) stochastic gradient, exchanges gradient messages only with
+its graph neighbors, and robustly aggregates its masked neighborhood with
+any registry aggregator (:mod:`repro.topology.masked`).  Byzantine nodes
+attack PER EDGE: the message a Byzantine sender injects toward receiver i
+is crafted from receiver i's own honest-neighborhood statistics, so two
+receivers see different poison (strictly stronger than the master-path
+attacks, which send one identical vector to the single aggregation point).
+
+Three execution paths share the math, mirroring the master layout:
+
+* :func:`make_decentralized_step` -- single-host simulation (dense
+  (N, N, ...) exchange tensor), the path behind
+  ``make_federated_step(..., topology=...)``;
+* :func:`decentralized_aggregate` with ``comm="gather"`` -- inside
+  ``shard_map``: all_gather the worker axes, pick this node's mask row at
+  its linear worker index, aggregate its own neighborhood (per-iteration
+  psums over the model axes, worker-axis pmax keeping the Weiszfeld loops
+  in collective lockstep);
+* ``comm="sharded"`` -- the coordinate-resharded path: the Sec. 2
+  all_to_all gives every device a p/W slice of ALL messages, per-edge
+  attacks and ALL receivers' masked aggregations run slice-locally with
+  (R, S)-shaped psums restoring global geometry, and a second all_to_all
+  routes each receiver its own aggregate's slices.
+
+``topology="star"`` is deliberately NOT routed here: the training entry
+points special-case it onto the existing master implementations so the
+default path stays bit-exact with the paper reproduction.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core import attacks as attack_lib
+from repro.core import saga as saga_lib
+from repro.core.robust_step import (FederatedState, _flatten_concat,
+                                    _local_leaf_ids)
+from repro.optim import optimizers as optim_lib
+from repro.topology.graphs import Topology
+from repro.topology.masked import masked_aggregate, masked_weiszfeld_segments
+
+Pytree = Any
+
+
+def _bcast_rows(tree: Pytree, r: int) -> Pytree:
+    """Leaves (S, ...) -> (R, S, ...) by broadcast (honest senders say the
+    same thing to every receiver)."""
+    return jax.tree_util.tree_map(
+        lambda z: jnp.broadcast_to(z[None], (r,) + z.shape), tree)
+
+
+def build_exchange(
+    msgs: Pytree,
+    cfg: attack_lib.AttackConfig,
+    mask: jnp.ndarray,
+    is_byz: jnp.ndarray,
+    key: Optional[jax.Array] = None,
+) -> Pytree:
+    """Materialize the per-edge message exchange.
+
+    ``msgs``: leaves (S, ...) -- the honestly computed messages (rows of
+    Byzantine senders are ignored).  ``mask``: (R, S) neighbor-mask rows of
+    the receivers being built.  ``is_byz``: (S,) marks Byzantine senders.
+    Returns leaves (R, S, ...): row r is receiver r's view, with every
+    Byzantine sender's entry replaced by an attack vector crafted from
+    receiver r's masked HONEST statistics (mask-select; the omniscient
+    threat model of DESIGN.md Sec. 1 already grants attackers these stats).
+
+    All rules are coordinate-separable, so the same construction runs on
+    full messages (simulation), model shards (gather) and coordinate slices
+    (sharded) with no communication; only the ``gaussian`` attack's draws
+    are layout-dependent (same caveat as the master-path attack variants).
+    """
+    r = mask.shape[0]
+    if cfg.name not in attack_lib.ATTACK_NAMES:
+        raise ValueError(f"unknown attack {cfg.name!r}; known: "
+                         f"{', '.join(sorted(attack_lib.ATTACK_NAMES))}")
+    if cfg.name == "none" or cfg.num_byzantine == 0:
+        return _bcast_rows(msgs, r)
+
+    byz_f = is_byz.astype(jnp.float32)                    # (S,)
+    hon_w = mask * (1.0 - byz_f)[None, :]                 # (R, S)
+    h_cnt = jnp.maximum(jnp.sum(hon_w, axis=1), 1.0)      # (R,)
+    b_cnt = jnp.maximum(jnp.sum(mask * byz_f[None, :], axis=1), 1.0)
+
+    def nbr_mean(fn):
+        def leaf(z):
+            w = hon_w.reshape(hon_w.shape + (1,) * (z.ndim - 1))
+            acc = jnp.sum(w * fn(z.astype(jnp.float32))[None], axis=1)
+            return acc / h_cnt.reshape((-1,) + (1,) * (z.ndim - 1))
+        return jax.tree_util.tree_map(leaf, msgs)
+
+    mean = nbr_mean(lambda z: z)                          # leaves (R, ...)
+
+    name = cfg.name
+    if name == "sign_flip":
+        byz = jax.tree_util.tree_map(
+            lambda m: cfg.sign_flip_magnitude * m, mean)
+    elif name == "zero_gradient":
+        # Each receiver's masked neighborhood mean becomes exactly zero.
+        ratio = h_cnt / b_cnt
+        byz = jax.tree_util.tree_map(
+            lambda m: -ratio.reshape((-1,) + (1,) * (m.ndim - 1)) * m, mean)
+    elif name == "ipm":
+        byz = jax.tree_util.tree_map(lambda m: -cfg.ipm_eps * m, mean)
+    elif name == "alie":
+        sq = nbr_mean(jnp.square)
+        byz = jax.tree_util.tree_map(
+            lambda m, s: m + cfg.alie_z * jnp.sqrt(
+                jnp.maximum(s - m * m, 0.0)), mean, sq)
+    elif name == "gaussian":
+        if key is None:
+            raise ValueError("gaussian attack needs a key")
+        std = jnp.sqrt(cfg.gaussian_variance)
+        leaves, treedef = jax.tree_util.tree_flatten(mean)
+        keys = jax.random.split(key, len(leaves))
+        s = mask.shape[1]
+        byz = jax.tree_util.tree_unflatten(treedef, [
+            m[:, None] + std * jax.random.normal(
+                k, (r, s) + m.shape[1:], jnp.float32)
+            for m, k in zip(leaves, keys)])
+    else:
+        # Reachable for a name that IS in the registry: every attack needs
+        # an explicit per-edge generalization here (receiver-local stats),
+        # so a newly registered master-path attack fails loudly with the
+        # gap named instead of silently passing through unattacked.
+        raise NotImplementedError(
+            f"attack {name!r} is registered in core.attacks but has no "
+            "per-edge decentralized form in topology.build_exchange -- add "
+            "its receiver-neighborhood construction here")
+
+    def select(z, bz):
+        zb = jnp.broadcast_to(z[None].astype(jnp.float32),
+                              (r,) + z.shape)
+        # Per-receiver attack values broadcast over senders unless the
+        # attack already drew per-edge values (gaussian).
+        bz_rows = bz[:, None] if bz.ndim == z.ndim else bz
+        sel = is_byz.reshape((1, -1) + (1,) * (z.ndim - 1))
+        return jnp.where(sel, bz_rows, zb).astype(z.dtype)
+
+    return jax.tree_util.tree_map(select, msgs, byz)
+
+
+def _agg_opts(cfg, topo: Topology, mixing, axis_names=(), sync_axes=()):
+    return dict(
+        max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+        num_groups=cfg.num_groups, trim=cfg.trim,
+        num_byzantine=cfg.num_byzantine, clip_radius=cfg.clip_radius,
+        mixing=mixing, axis_names=tuple(axis_names),
+        sync_axes=tuple(sync_axes))
+
+
+def validate_topology(cfg, topo: Topology, num_nodes: int) -> None:
+    """Static feasibility checks against the graph (trace-time, so they
+    raise with context instead of producing NaN aggregates)."""
+    if topo.num_nodes != num_nodes:
+        raise ValueError(
+            f"topology {topo.name!r} has {topo.num_nodes} nodes but the "
+            f"federation has {num_nodes}")
+    if not topo.is_connected():
+        raise ValueError(f"topology {topo.name!r} is disconnected")
+    if cfg.aggregator == "trimmed_mean" and topo.min_neighborhood <= 2 * cfg.trim:
+        raise ValueError(
+            f"trimmed_mean(trim={cfg.trim}) needs every neighborhood to "
+            f"have > {2 * cfg.trim} members; topology {topo.name!r} has a "
+            f"neighborhood of {topo.min_neighborhood}")
+
+
+# ---------------------------------------------------------------------------
+# Simulation path (single host, dense exchange)
+# ---------------------------------------------------------------------------
+
+def make_decentralized_step(
+    loss_fn: Callable[[Pytree, Pytree], jnp.ndarray],
+    worker_data: Pytree,
+    cfg,
+    optimizer: optim_lib.Optimizer,
+    topology: Topology,
+):
+    """Build ``(init_fn, step_fn)`` for the simulated decentralized
+    federation; drop-in shaped like
+    :func:`repro.core.robust_step.make_federated_step` but with PER-NODE
+    parameters.
+
+    Graph nodes are ``N = W_h + B``: the first W_h ids are the honest
+    workers (rows of ``worker_data``), the LAST B are Byzantine (matching
+    the simulation convention of ``attacks.apply_attack``, which appends
+    Byzantine rows; the distributed path replaces the FIRST B workers,
+    matching ``apply_attack_stacked``).  State leaves carry a leading node
+    axis: every node owns its own parameter/optimizer copy, and
+    ``consensus_dist`` in the metrics tracks how far the honest copies have
+    drifted apart.
+    """
+    wh = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
+    j = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
+    b = cfg.num_byzantine if cfg.attack != "none" else 0
+    n = wh + b
+    validate_topology(cfg, topology, n)
+    grad_fn = jax.grad(loss_fn)
+    attack_cfg = cfg.attack_config()
+    mask = jnp.asarray(topology.neighbor_mask, jnp.float32)
+    mixing = jnp.asarray(topology.mixing, jnp.float32)
+    is_byz = jnp.arange(n) >= wh
+
+    def sample_batch(data_w, idx):
+        return jax.tree_util.tree_map(lambda d: d[idx], data_w)
+
+    def per_worker_grad(params_w, data_w, idx):
+        return grad_fn(params_w, sample_batch(data_w, idx))
+
+    def init_fn(params, key):
+        nodes = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p[None], (n,) + p.shape) + 0, params)
+        opt_state = optimizer.init(nodes)
+        saga_state = None
+        if cfg.vr == "saga":
+            def worker_tab(data_w):
+                return jax.vmap(
+                    lambda jj: grad_fn(params, sample_batch(data_w, jj[None]))
+                )(jnp.arange(j))
+            per_sample = jax.vmap(worker_tab)(worker_data)
+            saga_state = saga_lib.saga_init(per_sample)
+        return FederatedState(nodes, opt_state, saga_state,
+                              jnp.zeros((), jnp.int32), key)
+
+    def step_fn(state):
+        key, k_idx, k_attack = jax.random.split(state.key, 3)
+        honest_params = jax.tree_util.tree_map(lambda x: x[:wh], state.params)
+
+        if cfg.vr == "minibatch":
+            idx = jax.random.randint(k_idx, (wh, cfg.minibatch_size), 0, j)
+            honest = jax.vmap(per_worker_grad)(honest_params, worker_data, idx)
+            saga_state = state.saga
+        else:
+            idx = jax.random.randint(k_idx, (wh,), 0, j)
+            honest = jax.vmap(
+                lambda p, d, i: per_worker_grad(p, d, i[None])
+            )(honest_params, worker_data, idx)
+            if cfg.vr == "saga":
+                honest, saga_state = saga_lib.saga_correct_scatter(
+                    state.saga, honest, idx)
+            else:
+                saga_state = state.saga
+
+        # Honest-message variance (same metric as the master path).
+        hm = jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0), honest)
+        var = sum(
+            jnp.sum((z.astype(jnp.float32) - m.astype(jnp.float32)[None]) ** 2)
+            for z, m in zip(jax.tree_util.tree_leaves(honest),
+                            jax.tree_util.tree_leaves(hm))
+        ) / wh
+
+        # Byzantine node rows carry zeros until the attack replaces them.
+        msgs = jax.tree_util.tree_map(
+            lambda g: jnp.zeros((n,) + g.shape[1:], g.dtype).at[:wh].set(g),
+            honest)
+        exchange = build_exchange(msgs, attack_cfg, mask, is_byz, k_attack)
+        agg = masked_aggregate(
+            cfg.aggregator, exchange, mask,
+            **_agg_opts(cfg, topology, mixing * mask))
+
+        updates, opt_state = optimizer.update(
+            agg, state.opt_state, state.params, state.step)
+        params = optim_lib.apply_updates(state.params, updates)
+
+        xh = jax.tree_util.tree_map(lambda x: x[:wh], params)
+        cons = sum(
+            jnp.sum((x.astype(jnp.float32)
+                     - jnp.mean(x.astype(jnp.float32), axis=0)[None]) ** 2)
+            for x in jax.tree_util.tree_leaves(xh)
+        ) / wh
+        new_state = FederatedState(params, opt_state, saga_state,
+                                   state.step + 1, key)
+        return new_state, {"honest_variance": var, "consensus_dist": cons}
+
+    return init_fn, step_fn
+
+
+# ---------------------------------------------------------------------------
+# Distributed path (inside shard_map; one node per worker-axis index)
+# ---------------------------------------------------------------------------
+
+def decentralized_aggregate(
+    grads: Pytree,
+    cfg,
+    topology: Topology,
+    *,
+    comm: str = "gather",
+    worker_axes: tuple[str, ...] = ("data",),
+    model_axes: tuple[str, ...] = ("model",),
+    num_workers: int,
+    key: Optional[jax.Array] = None,
+) -> Pytree:
+    """Per-node robust neighborhood aggregation inside ``shard_map``.
+
+    ``grads``: this node's message (leaves are local model shards).  Nodes
+    are the linear worker-axis indices (row-major over ``worker_axes``,
+    the Sec. 2 convention); the FIRST ``cfg.num_byzantine`` nodes attack
+    per edge.  Returns THIS node's aggregate (same local-shard geometry as
+    the input) -- per-node results, unlike the master paths which return
+    one shared aggregate.
+    """
+    if comm not in ("gather", "sharded"):
+        raise ValueError(f"comm must be 'gather' or 'sharded', got {comm!r}")
+    w = num_workers
+    validate_topology(cfg, topology, w)
+    attack_cfg = cfg.attack_config()
+    mask_all = jnp.asarray(topology.neighbor_mask, jnp.float32)
+    mixing_all = jnp.asarray(topology.mixing, jnp.float32)
+    is_byz = jnp.arange(w) < cfg.num_byzantine
+    wid = compat.axis_index(worker_axes)
+
+    if comm == "gather":
+        stacked = jax.tree_util.tree_map(
+            lambda g: compat.all_gather(g, worker_axes, axis=0, tiled=False),
+            grads)
+        mask_row = jnp.take(mask_all, wid, axis=0)[None]      # (1, S)
+        mix_row = jnp.take(mixing_all, wid, axis=0)[None]
+        k = jax.random.fold_in(key, wid) if key is not None else None
+        exchange = build_exchange(stacked, attack_cfg, mask_row, is_byz, k)
+        agg = masked_aggregate(
+            cfg.aggregator, exchange, mask_row,
+            **_agg_opts(cfg, topology, mix_row * mask_row,
+                        axis_names=model_axes, sync_axes=worker_axes))
+        return jax.tree_util.tree_map(lambda a: a[0], agg)
+
+    # comm == "sharded": reuse the coordinate-resharding plumbing of
+    # robust_step.sharded_aggregate, but aggregate ALL receivers' masked
+    # neighborhoods on this device's slice and route each receiver its own
+    # result with a second all_to_all (DESIGN.md Sec. 6).
+    flat, unflatten, leaf_sizes = _flatten_concat(grads)
+    p = flat.shape[0]
+    pad = (-p) % w
+    flat = jnp.pad(flat, (0, pad))
+    z_local = compat.all_to_all(flat.reshape(w, -1), worker_axes,
+                                split_axis=0, concat_axis=0, tiled=False)
+    z_local = z_local.reshape(w, -1)                          # (S, chunk)
+    comm_axes = tuple(worker_axes) + tuple(model_axes)
+    k = jax.random.fold_in(key, wid) if key is not None else None
+    exchange = build_exchange({"flat": z_local}, attack_cfg, mask_all,
+                              is_byz, k)
+    if cfg.aggregator == "geomed_blockwise":
+        seg = _local_leaf_ids(leaf_sizes, pad, w, worker_axes)
+        agg = masked_weiszfeld_segments(
+            exchange["flat"], mask_all, seg, len(leaf_sizes) + 1,
+            axis_names=comm_axes, max_iters=cfg.weiszfeld_iters,
+            tol=cfg.weiszfeld_tol)
+    else:
+        agg = masked_aggregate(
+            cfg.aggregator, exchange, mask_all,
+            **_agg_opts(cfg, topology, mixing_all * mask_all,
+                        axis_names=comm_axes))["flat"]
+    agg = agg.astype(jnp.float32)                             # (R, chunk)
+    mine = compat.all_to_all(agg, worker_axes, split_axis=0,
+                             concat_axis=0, tiled=False).reshape(-1)
+    return unflatten(mine[:p])

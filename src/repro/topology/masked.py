@@ -1,0 +1,398 @@
+"""Masked-neighborhood counterparts of every registry aggregator.
+
+Decentralized training has no master: node i robustly aggregates only the
+messages of its graph neighborhood N(i) + {i}.  Every rule here consumes
+
+* ``exchange`` -- pytree whose leaves are ``(R, S, *shape)``: row r is what
+  RECEIVER r sees from each of the S senders (per-edge Byzantine attacks
+  make the sender axis receiver-dependent, hence the dense layout);
+* ``mask``     -- ``(R, S)`` float32 neighbor mask (``Topology.neighbor_mask``
+  rows): ``mask[r, s] = 0`` senders must not influence receiver r's result;
+
+and returns the aggregated pytree with leaves ``(R, *shape)`` in the input
+dtypes.  Restriction is MASK-SELECT everywhere -- non-neighbors are weighted
+to zero, +-inf-filled out of sorts, or masked out of pairwise distances --
+never a slice+concat of the sender axis, which both breaks under vmap/SPMD
+sharding and has miscompiled on old XLA partitioners (DESIGN.md Sec. 1).
+
+With a full mask (and no mixing weights) every rule reduces exactly to its
+:mod:`repro.core.aggregators` counterpart -- pinned by
+``tests/test_topology.py``.
+
+Distributed execution (DESIGN.md Sec. 6): leaves may be coordinate shards
+inside a ``shard_map``.  ``axis_names`` restores full-vector geometry by
+psum-ing the per-(receiver, sender) squared-distance partials over those
+mesh axes (the decentralized analogue of the Sec. 2 comm layouts), and
+``sync_axes`` pmax-synchronizes the Weiszfeld stopping statistic so every
+device's ``while_loop`` stays in collective lockstep (gather mode, where
+each device iterates its own receiver's masked Weiszfeld).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+
+Pytree = Any
+
+_DIST_FLOOR = 1e-8  # same smoothing floor as core/geomed.py
+
+
+def _leaves32(exchange: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda z: z.astype(jnp.float32), exchange)
+
+
+def _restore_dtypes(y: Pytree, exchange: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda yl, z: yl.astype(z.dtype), y, exchange)
+
+
+def _weighted_mean(ex32: Pytree, weights: jnp.ndarray) -> Pytree:
+    """Per-receiver weighted mean over the sender axis: weights (R, S)."""
+    denom = jnp.maximum(jnp.sum(weights, axis=1), _DIST_FLOOR)  # (R,)
+
+    def leaf(z):
+        w = weights.reshape(weights.shape + (1,) * (z.ndim - 2))
+        return jnp.sum(w * z, axis=1) / denom.reshape(
+            (-1,) + (1,) * (z.ndim - 2))
+
+    return jax.tree_util.tree_map(leaf, ex32)
+
+
+def masked_mean(exchange: Pytree, mask: jnp.ndarray, *,
+                mixing: Optional[jnp.ndarray] = None) -> Pytree:
+    """Masked neighborhood mean.  With ``mixing`` (rows of the
+    doubly-stochastic matrix) this is exactly one DGD gossip step; without,
+    the uniform mean over the masked senders."""
+    weights = mask if mixing is None else mixing * mask
+    return _restore_dtypes(_weighted_mean(_leaves32(exchange), weights),
+                           exchange)
+
+
+def _masked_sorted(z: jnp.ndarray, mask: jnp.ndarray, fill: float):
+    """Sort the sender axis with non-neighbors pushed to ``fill`` ends."""
+    m = mask.reshape(mask.shape + (1,) * (z.ndim - 2))
+    return jnp.sort(jnp.where(m > 0, z, fill), axis=1)
+
+
+def masked_median(exchange: Pytree, mask: jnp.ndarray) -> Pytree:
+    """Coordinate-wise median over each masked neighborhood (non-neighbors
+    sorted out to +inf; the median index comes from the neighbor count)."""
+    n = jnp.sum(mask, axis=1).astype(jnp.int32)  # (R,)
+
+    def leaf(z):
+        s = _masked_sorted(z.astype(jnp.float32), mask, jnp.inf)
+        sel = lambda i: jnp.take_along_axis(
+            s, i.reshape((-1, 1) + (1,) * (z.ndim - 2)), axis=1)[:, 0]
+        return 0.5 * (sel((n - 1) // 2) + sel(n // 2))
+
+    return _restore_dtypes(jax.tree_util.tree_map(leaf, exchange), exchange)
+
+
+def masked_trimmed_mean(exchange: Pytree, mask: jnp.ndarray, *,
+                        trim: int) -> Pytree:
+    """Coordinate-wise trimmed mean per neighborhood: drop the ``trim``
+    largest and smallest masked entries per coordinate, average the rest.
+    Callers must guarantee every neighborhood has > 2*trim members
+    (``decentralized_step`` validates against the static topology)."""
+    n = jnp.sum(mask, axis=1).astype(jnp.int32)  # (R,)
+
+    def leaf(z):
+        s = _masked_sorted(z.astype(jnp.float32), mask, jnp.inf)
+        ranks = jnp.arange(s.shape[1]).reshape((1, -1) + (1,) * (z.ndim - 2))
+        hi = (n - trim).reshape((-1, 1) + (1,) * (z.ndim - 2))
+        keep = (ranks >= trim) & (ranks < hi)
+        kept = jnp.where(keep, s, 0.0)
+        denom = jnp.maximum(n - 2 * trim, 1).reshape((-1,) + (1,) * (z.ndim - 2))
+        return jnp.sum(kept, axis=1) / denom
+
+    return _restore_dtypes(jax.tree_util.tree_map(leaf, exchange), exchange)
+
+
+def _sqdist_partials(ex32: Pytree, y: Pytree) -> jnp.ndarray:
+    """Per-(receiver, sender) squared distances summed over leaves -> (R, S)
+    (a PARTIAL over the local coordinate shard when inside shard_map)."""
+    total = None
+    for z, yl in zip(jax.tree_util.tree_leaves(ex32),
+                     jax.tree_util.tree_leaves(y)):
+        r, s = z.shape[:2]
+        part = jnp.sum(
+            (z.reshape(r, s, -1) - yl.reshape(r, 1, -1)) ** 2, axis=-1)
+        total = part if total is None else total + part
+    return total
+
+
+def _global_delta(move: jnp.ndarray, axis_names: Sequence[str],
+                  sync_axes: Sequence[str]) -> jnp.ndarray:
+    """(R,) squared iterate moves -> replicated scalar stopping statistic."""
+    if axis_names:
+        move = compat.psum(move, tuple(axis_names))
+    delta = jnp.sqrt(jnp.max(move))
+    for ax in sync_axes:
+        delta = jax.lax.pmax(delta, ax)
+    return delta
+
+
+def masked_weiszfeld(
+    exchange: Pytree,
+    mask: jnp.ndarray,
+    *,
+    max_iters: int = 64,
+    tol: float = 1e-6,
+    axis_names: Sequence[str] = (),
+    sync_axes: Sequence[str] = (),
+) -> Pytree:
+    """Per-receiver geometric median of the masked neighborhood, all
+    receivers iterating in lockstep (one fused (R, S) distance psum per
+    iteration when sharded).  Non-neighbors get zero Weiszfeld weight, so
+    the restriction is exact, not approximate."""
+    ex32 = _leaves32(exchange)
+    y0 = _weighted_mean(ex32, mask)
+
+    def cond(state):
+        _, delta, it = state
+        return jnp.logical_and(it < max_iters, delta > tol)
+
+    def body(state):
+        y, _, it = state
+        sq = _sqdist_partials(ex32, y)
+        if axis_names:
+            sq = compat.psum(sq, tuple(axis_names))
+        inv = mask / jnp.maximum(jnp.sqrt(sq), _DIST_FLOOR)
+        y_new = _weighted_mean(ex32, inv)
+        move = None
+        for a, b in zip(jax.tree_util.tree_leaves(y_new),
+                        jax.tree_util.tree_leaves(y)):
+            part = jnp.sum((a - b).reshape(a.shape[0], -1) ** 2, axis=-1)
+            move = part if move is None else move + part
+        return y_new, _global_delta(move, axis_names, sync_axes), it + 1
+
+    y, _, _ = jax.lax.while_loop(
+        cond, body, (y0, jnp.asarray(jnp.inf, jnp.float32), 0))
+    return _restore_dtypes(y, exchange)
+
+
+def masked_geomed_groups(
+    exchange: Pytree, mask: jnp.ndarray, *, num_groups: int,
+    max_iters: int = 64, tol: float = 1e-6,
+    axis_names: Sequence[str] = (), sync_axes: Sequence[str] = (),
+) -> Pytree:
+    """Geomed of masked group means: senders keep their GLOBAL contiguous
+    group ids (same ``(s * G) // S`` partition as ``aggregators.group_means``),
+    each receiver mean-reduces the group members inside its neighborhood,
+    and groups with no member there drop out via the group mask."""
+    s_tot = mask.shape[1]
+    gids = (np.arange(s_tot) * num_groups) // s_tot
+    onehot = jnp.asarray(gids[None, :] == np.arange(num_groups)[:, None],
+                         jnp.float32)                       # (G, S)
+    counts = jnp.einsum("rs,gs->rg", mask, onehot)          # (R, G)
+    gmask = (counts > 0).astype(jnp.float32)
+    denom = jnp.maximum(counts, 1.0)
+
+    def leaf(z):
+        w = mask[:, None, :] * onehot[None, :, :]          # (R, G, S)
+        flat = z.reshape(z.shape[0], z.shape[1], -1)
+        grouped = jnp.einsum("rgs,rsc->rgc", w, flat) / denom[..., None]
+        return grouped.reshape((z.shape[0], num_groups) + z.shape[2:])
+
+    grouped = jax.tree_util.tree_map(leaf, _leaves32(exchange))
+    y = masked_weiszfeld(grouped, gmask, max_iters=max_iters, tol=tol,
+                         axis_names=axis_names, sync_axes=sync_axes)
+    return _restore_dtypes(y, exchange)
+
+
+def masked_geomed_blockwise(
+    exchange: Pytree, mask: jnp.ndarray, *, max_iters: int = 64,
+    tol: float = 1e-6, axis_names: Sequence[str] = (),
+    sync_axes: Sequence[str] = (),
+) -> Pytree:
+    """Per-leaf masked geometric median (each parameter block aggregates its
+    neighborhood independently; the leaves run their lockstep Weiszfeld
+    loops one after another, each synchronized like ``masked_weiszfeld``)."""
+    return jax.tree_util.tree_map(
+        lambda z: masked_weiszfeld(
+            [z], mask, max_iters=max_iters, tol=tol,
+            axis_names=axis_names, sync_axes=sync_axes)[0],
+        exchange)
+
+
+def masked_krum(
+    exchange: Pytree, mask: jnp.ndarray, *, num_byzantine: int,
+    axis_names: Sequence[str] = (),
+) -> Pytree:
+    """Per-receiver Krum over the masked neighborhood: candidate scores sum
+    the ``m_r - B - 2`` smallest pairwise distances BETWEEN neighborhood
+    members (m_r = neighborhood size incl. self, a traced per-receiver
+    count), and the winning sender's message is selected.  Sharded: the
+    (R, S, S) Gram partials psum over ``axis_names``, so the selection index
+    is replicated and each device keeps its own slice of the winner.
+
+    Like the master path's ``aggregators.krum_scores``, the score width is
+    clipped to >= 1 when a neighborhood is smaller than Krum's B + 3
+    feasibility bound -- the rule still runs but its guarantee is VOID
+    there: a node whose neighbors are mostly colluding Byzantine senders
+    can be steered to select their (mutually close) poison.  Krum's
+    breakdown condition is per-NEIGHBORHOOD on sparse graphs, so pick
+    graphs with min degree >= B + 2 when using it (DESIGN.md Sec. 6)."""
+    leaves = [z.reshape(z.shape[0], z.shape[1], -1).astype(jnp.float32)
+              for z in jax.tree_util.tree_leaves(exchange)]
+    flat = jnp.concatenate(leaves, axis=-1)                 # (R, S, C)
+    sq = jnp.sum(flat ** 2, axis=-1)                        # (R, S)
+    d2 = (sq[:, :, None] + sq[:, None, :]
+          - 2.0 * jnp.einsum("rsc,rtc->rst", flat, flat))
+    if axis_names:
+        d2 = compat.psum(d2, tuple(axis_names))
+    s_tot = mask.shape[1]
+    pair = (mask[:, :, None] * mask[:, None, :]
+            * (1.0 - jnp.eye(s_tot)[None]))
+    d2 = jnp.where(pair > 0, jnp.maximum(d2, 0.0), jnp.inf)
+    m_r = jnp.sum(mask, axis=1).astype(jnp.int32)           # (R,)
+    n_near = jnp.clip(m_r - num_byzantine - 2, 1, jnp.maximum(m_r - 1, 1))
+    ranks = jnp.arange(s_tot)[None, None, :]
+    contrib = jnp.where(ranks < n_near[:, None, None],
+                        jnp.sort(d2, axis=2), 0.0)
+    scores = jnp.where(mask > 0, jnp.sum(contrib, axis=2), jnp.inf)
+    best = jnp.argmin(scores, axis=1)                       # (R,)
+
+    def leaf(z):
+        idx = best.reshape((-1, 1) + (1,) * (z.ndim - 2))
+        return jnp.take_along_axis(z, idx, axis=1)[:, 0]
+
+    return jax.tree_util.tree_map(leaf, exchange)
+
+
+def masked_centered_clip(
+    exchange: Pytree, mask: jnp.ndarray, *, radius: float = 1.0,
+    iters: int = 3, axis_names: Sequence[str] = (),
+) -> Pytree:
+    """Centered clipping per neighborhood: iterate from the masked median,
+    each sender's influence clipped to ``radius`` by its full-vector
+    residual norm ((R, S) psum over ``axis_names`` when sharded)."""
+    ex32 = _leaves32(exchange)
+    v = _leaves32(masked_median(exchange, mask))
+
+    def one_iter(_, v):
+        diffs = jax.tree_util.tree_map(
+            lambda z, vl: z - vl[:, None], ex32, v)
+        sq = None
+        for dl in jax.tree_util.tree_leaves(diffs):
+            part = jnp.sum(dl.reshape(dl.shape[0], dl.shape[1], -1) ** 2,
+                           axis=-1)
+            sq = part if sq is None else sq + part
+        if axis_names:
+            sq = compat.psum(sq, tuple(axis_names))
+        scale = jnp.minimum(1.0, radius / jnp.maximum(jnp.sqrt(sq), 1e-12))
+        # Influence-clipped masked mean: sum_s mask*scale*diff / sum_s mask.
+        denom = jnp.maximum(jnp.sum(mask, axis=1), _DIST_FLOOR)
+        w = mask * scale
+
+        def leaf(vl, dl):
+            ww = w.reshape(w.shape + (1,) * (dl.ndim - 2))
+            return vl + jnp.sum(ww * dl, axis=1) / denom.reshape(
+                (-1,) + (1,) * (dl.ndim - 2))
+
+        return jax.tree_util.tree_map(leaf, v, diffs)
+
+    v = jax.lax.fori_loop(0, iters, one_iter, v)
+    return _restore_dtypes(v, exchange)
+
+
+def masked_weiszfeld_segments(
+    ex: jnp.ndarray,
+    mask: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    num_segments: int,
+    *,
+    axis_names: Sequence[str],
+    max_iters: int = 64,
+    tol: float = 1e-6,
+) -> jnp.ndarray:
+    """Per-block masked Weiszfeld on coordinate slices: the decentralized
+    counterpart of ``core/geomed.weiszfeld_blockwise_sharded``.
+
+    ``ex``: (R, S, c) -- each receiver's view of every sender's slice on
+    this device's coordinate range; ``seg_ids``: (c,) block id per local
+    coordinate (padding coordinates carry the dummy id ``num_segments-1``).
+    One fused (R, S, L) psum of per-(receiver, sender, block) distance
+    partials per iteration over ``axis_names``.  Returns the (R, c) f32
+    slice of every receiver's per-block medians.
+    """
+    ex32 = ex.astype(jnp.float32)
+
+    def seg_psum(part):
+        p = jax.ops.segment_sum(jnp.moveaxis(part, -1, 0), seg_ids,
+                                num_segments=num_segments)
+        p = jnp.moveaxis(p, 0, -1)
+        return compat.psum(p, tuple(axis_names)) if axis_names else p
+
+    denom0 = jnp.maximum(jnp.sum(mask, axis=1), _DIST_FLOOR)
+    y0 = jnp.sum(mask[:, :, None] * ex32, axis=1) / denom0[:, None]
+
+    def cond(state):
+        _, delta, it = state
+        return jnp.logical_and(it < max_iters, delta > tol)
+
+    def body(state):
+        y, _, it = state
+        diff = ex32 - y[:, None]                          # (R, S, c)
+        sq = seg_psum(diff * diff)                        # (R, S, L)
+        inv = mask[:, :, None] / jnp.maximum(jnp.sqrt(sq), _DIST_FLOOR)
+        w_coord = inv[:, :, seg_ids]                      # (R, S, c)
+        denom = jnp.sum(inv, axis=1)[:, seg_ids]          # (R, c)
+        y_new = (jnp.sum(w_coord * ex32, axis=1)
+                 / jnp.maximum(denom, _DIST_FLOOR))
+        move = seg_psum((y_new - y) ** 2)                 # (R, L)
+        return y_new, jnp.sqrt(jnp.max(move)), it + 1
+
+    y, _, _ = jax.lax.while_loop(
+        cond, body, (y0, jnp.asarray(jnp.inf, jnp.float32), 0))
+    return y
+
+
+# name -> masked rule.  Kept in bijection with the aggregator registry
+# (tests/test_topology.py pins the key sets against each other), so a new
+# registry aggregator fails loudly until its masked counterpart exists.
+_MASKED: dict[str, Any] = {
+    "mean": lambda ex, m, o: masked_mean(ex, m, mixing=o.get("mixing")),
+    "median": lambda ex, m, o: masked_median(ex, m),
+    "trimmed_mean": lambda ex, m, o: masked_trimmed_mean(
+        ex, m, trim=o.get("trim", 1)),
+    "geomed": lambda ex, m, o: masked_weiszfeld(
+        ex, m, max_iters=o.get("max_iters", 64), tol=o.get("tol", 1e-6),
+        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ())),
+    "geomed_groups": lambda ex, m, o: masked_geomed_groups(
+        ex, m, num_groups=o["num_groups"],
+        max_iters=o.get("max_iters", 64), tol=o.get("tol", 1e-6),
+        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ())),
+    "geomed_blockwise": lambda ex, m, o: masked_geomed_blockwise(
+        ex, m, max_iters=o.get("max_iters", 64), tol=o.get("tol", 1e-6),
+        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ())),
+    "krum": lambda ex, m, o: masked_krum(
+        ex, m, num_byzantine=o.get("num_byzantine", 0),
+        axis_names=o.get("axis_names", ())),
+    "centered_clip": lambda ex, m, o: masked_centered_clip(
+        ex, m, radius=o.get("clip_radius", 1.0),
+        axis_names=o.get("axis_names", ())),
+}
+
+MASKED_AGGREGATOR_NAMES = tuple(_MASKED)
+
+
+def masked_aggregate(name: str, exchange: Pytree, mask: jnp.ndarray,
+                     **opts) -> Pytree:
+    """Dispatch a masked neighborhood aggregation by registry name.
+
+    Options mirror :func:`repro.core.aggregators.get_aggregator` plus
+    ``mixing`` (mean only), ``axis_names`` and ``sync_axes`` (sharded
+    execution, see module docstring).
+    """
+    try:
+        rule = _MASKED[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown masked aggregator {name!r}; known: "
+            f"{', '.join(sorted(_MASKED))}") from None
+    return rule(exchange, mask, opts)

@@ -116,10 +116,27 @@ def test_stacked_gaussian_rows():
 
 
 def test_unknown_attack_raises():
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="known"):
         attacks.apply_attack(
             attacks.AttackConfig(name="wat", num_byzantine=1), _honest(), KEY)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="known"):
         attacks.apply_attack_stacked(
             attacks.AttackConfig(name="wat", num_byzantine=1),
             {"g": jnp.zeros((4, 2))}, KEY)
+
+
+def test_attack_names_derive_from_registry():
+    """_ATTACKS is the single source of truth: ATTACK_NAMES is exactly its
+    key tuple (no hand-splicing), 'none' is a registered passthrough, and
+    the unknown-name error enumerates the registry."""
+    assert attacks.ATTACK_NAMES == tuple(attacks._ATTACKS)
+    assert "none" in attacks._ATTACKS
+    h = _honest()
+    out = attacks.apply_attack(
+        attacks.AttackConfig(name="none", num_byzantine=5), h, KEY)
+    np.testing.assert_array_equal(np.asarray(out["g"]), np.asarray(h["g"]))
+    with pytest.raises(ValueError) as e:
+        attacks.apply_attack(
+            attacks.AttackConfig(name="wat", num_byzantine=1), h, KEY)
+    for name in attacks._ATTACKS:
+        assert name in str(e.value)
