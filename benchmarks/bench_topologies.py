@@ -1,28 +1,39 @@
-"""Topology x aggregator x attack sweep for decentralized training.
+"""Topology x aggregator x attack x gossip x schedule sweep for
+decentralized training.
 
-For every (topology, aggregator, attack) cell this runs the simulated
-decentralized federation (``repro.topology.make_decentralized_step``,
-DESIGN.md Sec. 6) on the paper's logistic-regression workload, times the
-jitted per-step wall-clock, and records the final mean honest loss plus the
-honest consensus distance.  Emits ``BENCH_topologies.json`` and a markdown
-table on stdout; any cell that RAISES aborts the script with a non-zero
-exit, which is exactly how CI uses it (a registry aggregator that stops
-working on some graph fails the job, not just a test marker).
+For every cell this runs the simulated decentralized federation
+(``repro.topology.make_decentralized_step``, DESIGN.md Secs. 6-7) on the
+paper's logistic-regression workload, times the jitted per-step wall-clock,
+and records the final mean honest loss plus the honest consensus distance.
+Two grids are swept:
+
+* the PR-3 fixed-graph grid: (topology, aggregator, attack) with gradient
+  gossip on a static schedule;
+* the gossip grid: (gossip mode x graph schedule) -- gradient vs PARAMETER
+  gossip on static / cyclic / per-round-resampled erdos_renyi graphs,
+  geomed under sign_flip (the arXiv:2308.05292 setting).
+
+Emits ``BENCH_topologies.json`` and a markdown table on stdout; any cell
+that RAISES aborts the script with a non-zero exit, which is exactly how CI
+uses it (a registry aggregator or gossip mode that stops working on some
+graph/schedule fails the job, not just a test marker).
 
     PYTHONPATH=src python benchmarks/bench_topologies.py [--quick] \\
         [--steps N] [--reps R] [--out BENCH_topologies.json]
 
 ``--quick`` (the CI artifact setting) restricts to the structurally
 distinct corners: {ring, complete} x {geomed, krum, mean} x {none,
-sign_flip}.  The full sweep covers every registry aggregator on ring /
-torus2d / complete / erdos_renyi under none / sign_flip / alie.
+sign_flip}, plus both gossip modes on {static, erdos_renyi} schedules.
+The full sweep covers every registry aggregator on ring / torus2d /
+complete / erdos_renyi under none / sign_flip / alie, and both gossip
+modes on all three schedules.
 
 Reading the numbers: the star-free claims being validated are orderings --
 robust rules keep the final loss near the attack-free value on every
-connected graph while ``mean`` degrades, and consensus distance shrinks as
-the spectral gap grows (complete > torus2d > ring).  Wall-clock on this CPU
-container characterizes the dense (N, N, p) exchange + masked-rule compute,
-not network latency.
+connected graph while ``mean`` degrades, consensus distance shrinks as the
+(joint) spectral gap grows, and parameter gossip tracks gradient gossip's
+error floor under attack.  Wall-clock on this CPU container characterizes
+the dense (N, N, p) exchange + masked-rule compute, not network latency.
 """
 import argparse
 import json
@@ -33,11 +44,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AGGREGATOR_NAMES, RobustConfig, make_federated_step
+from repro.core.robust_step import resolve_schedule
 from repro.data import ijcnn1_like, logreg_loss, partition
 from repro.optim import get_optimizer
-from repro.topology import get_topology
 
-SCHEMA = "BENCH_topologies/v1"
+SCHEMA = "BENCH_topologies/v2"
 
 HONEST, BYZ = 10, 2
 TOPOLOGIES = ("ring", "torus2d", "complete", "erdos_renyi")
@@ -47,19 +58,31 @@ QUICK_TOPOLOGIES = ("ring", "complete")
 QUICK_AGGREGATORS = ("geomed", "krum", "mean")
 QUICK_ATTACKS = ("none", "sign_flip")
 
+# The gossip grid: (gossip mode x schedule) cells.  "cyclic" rotates the
+# named list; "erdos_renyi" resamples per round (period below).
+GOSSIP_MODES = ("gradient", "params")
+SCHEDULES = ("static", "cyclic", "erdos_renyi")
+QUICK_SCHEDULES = ("static", "erdos_renyi")
+SCHEDULE_PERIOD = 3
+SCHEDULE_TOPOLOGY = {"static": "ring", "cyclic": "ring,complete",
+                     "erdos_renyi": "ring"}
+
 
 def bench_cell(topo_name: str, agg: str, attack: str, *, steps: int,
-               reps: int, seed: int) -> dict:
+               reps: int, seed: int, gossip: str = "gradient",
+               schedule: str = "static") -> dict:
     data = ijcnn1_like(jax.random.PRNGKey(0), n=1200)
     wd = partition({"a": data.x, "b": data.y}, HONEST, seed=1)
     loss_fn = logreg_loss(0.01)
     b = BYZ if attack != "none" else 0
-    topo = get_topology(topo_name, HONEST + b, seed=seed)
     cfg = RobustConfig(aggregator=agg, vr="saga", attack=attack,
                        num_byzantine=b, weiszfeld_iters=32,
-                       topology=topo_name, topology_seed=seed)
+                       topology=topo_name, topology_seed=seed,
+                       gossip=gossip, schedule=schedule,
+                       schedule_period=SCHEDULE_PERIOD)
+    sched = resolve_schedule(cfg, HONEST + b)
     init_fn, step_fn = make_federated_step(
-        loss_fn, wd, cfg, get_optimizer("sgd", 0.02), topology=topo)
+        loss_fn, wd, cfg, get_optimizer("sgd", 0.02), schedule=sched)
     state = init_fn({"w": jnp.zeros((22,), jnp.float32)},
                     jax.random.PRNGKey(2))
     step = jax.jit(step_fn)
@@ -79,8 +102,10 @@ def bench_cell(topo_name: str, agg: str, attack: str, *, steps: int,
         for i in range(HONEST)]))
     return {
         "topology": topo_name, "aggregator": agg, "attack": attack,
+        "gossip": gossip, "schedule": schedule,
+        "schedule_period": sched.period,
         "num_nodes": HONEST + b, "num_byzantine": b, "steps": steps,
-        "reps": reps, "spectral_gap": topo.spectral_gap(),
+        "reps": reps, "spectral_gap": sched.joint_spectral_gap(),
         "wall_us_mean": sum(times) / len(times) * 1e6,
         "wall_us_min": min(times) * 1e6,
         "final_honest_loss": final_loss,
@@ -105,6 +130,7 @@ def main() -> None:
     topologies = QUICK_TOPOLOGIES if args.quick else TOPOLOGIES
     aggregators = QUICK_AGGREGATORS if args.quick else AGGREGATOR_NAMES
     attacks = QUICK_ATTACKS if args.quick else ATTACKS
+    schedules = QUICK_SCHEDULES if args.quick else SCHEDULES
 
     rows = []
     for topo_name in topologies:
@@ -117,6 +143,20 @@ def main() -> None:
                       f"{r['wall_us_mean']:9.0f} us/step "
                       f"loss={r['final_honest_loss']:.4f} "
                       f"consensus={r['consensus_dist']:.5f}")
+
+    # The gossip-mode x schedule grid (geomed under sign_flip): parameter
+    # gossip must hold an error floor comparable to gradient gossip on
+    # every schedule, and a raising cell fails CI like any other.
+    for gossip in GOSSIP_MODES:
+        for schedule in schedules:
+            r = bench_cell(SCHEDULE_TOPOLOGY[schedule], "geomed",
+                           "sign_flip", steps=args.steps, reps=args.reps,
+                           seed=args.seed, gossip=gossip, schedule=schedule)
+            rows.append(r)
+            print(f"  gossip={gossip:8s} schedule={schedule:12s} "
+                  f"{r['wall_us_mean']:9.0f} us/step "
+                  f"loss={r['final_honest_loss']:.4f} "
+                  f"consensus={r['consensus_dist']:.5f}")
 
     report = {
         "schema": SCHEMA,
@@ -131,10 +171,13 @@ def main() -> None:
         json.dump(report, f, indent=1)
     print(f"\nwrote {args.out} ({len(rows)} rows)\n")
 
-    print("| topology | aggregator | attack | us/step | final loss | consensus |")
-    print("|----------|------------|--------|---------|------------|-----------|")
+    print("| topology | aggregator | attack | gossip | schedule | us/step "
+          "| final loss | consensus |")
+    print("|----------|------------|--------|--------|----------|---------"
+          "|------------|-----------|")
     for r in rows:
         print(f"| {r['topology']} | {r['aggregator']} | {r['attack']} | "
+              f"{r['gossip']} | {r['schedule']} | "
               f"{r['wall_us_mean']:.0f} | {r['final_honest_loss']:.4f} | "
               f"{r['consensus_dist']:.5f} |")
 

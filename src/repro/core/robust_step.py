@@ -57,6 +57,19 @@ class RobustConfig:
     topology: str = "star"
     topology_seed: int = 0
     topology_p: float = 0.5
+    # What decentralized nodes EXCHANGE (DESIGN.md Sec. 7): "gradient"
+    # gossips (SAGA-corrected) gradient messages and applies the optimizer
+    # to the aggregate; "params" takes a local optimizer step first and
+    # robust-aggregates the neighbors' half-stepped MODELS
+    # (arXiv:2308.05292's setting).  Ignored on the master path.
+    gossip: str = "gradient"
+    # Time-varying graph schedule (repro.topology.schedule): "static" keeps
+    # one fixed graph (topology= above); "cyclic" rotates over a
+    # comma-separated topology list in `topology`; "erdos_renyi" resamples a
+    # seeded G(N, p) every round (period graphs, cycled).  "star" + "static"
+    # is the bit-exact master path.
+    schedule: str = "static"
+    schedule_period: int = 4
     minibatch_size: int = 50          # paper's BSGD batch size
     weiszfeld_iters: int = 64
     weiszfeld_tol: float = 1e-6
@@ -120,6 +133,41 @@ def resolve_topology(cfg: RobustConfig, num_nodes: int,
     return topology
 
 
+def resolve_schedule(cfg: RobustConfig, num_nodes: int,
+                     topology: Optional[Any] = None,
+                     schedule: Optional[Any] = None):
+    """Resolve the (topology, schedule) arguments of the step builders into
+    a :class:`repro.topology.GraphSchedule`, or ``None`` for the master
+    path.  An explicit ``GraphSchedule`` wins; else ``cfg.schedule`` is
+    built by name around the resolved topology.  ``None`` is returned
+    exactly for a STATIC schedule whose single graph is the star -- that
+    combination is the paper's master federation and the callers keep the
+    bit-exact master implementations (gossip mode included: star + static
+    always means master gradient semantics, DESIGN.md Sec. 7)."""
+    from repro import topology as topo_lib  # deferred: topology imports core
+    if isinstance(topology, topo_lib.GraphSchedule) and schedule is None:
+        schedule, topology = topology, None
+    if schedule is None:
+        schedule = cfg.schedule
+    if isinstance(schedule, topo_lib.GraphSchedule):
+        sched = schedule
+    elif schedule == "static":
+        topo = resolve_topology(cfg, num_nodes, topology)
+        if topo is None:
+            return None
+        sched = topo_lib.static_schedule(topo)
+    else:
+        if topology is None:
+            topology = cfg.topology
+        sched = topo_lib.get_schedule(
+            schedule, num_nodes, topology=topology,
+            period=cfg.schedule_period, seed=cfg.topology_seed,
+            p=cfg.topology_p)
+    if sched.is_static and sched.topologies[0].name == "star":
+        return None
+    return sched
+
+
 def make_federated_step(
     loss_fn: Callable[[Pytree, Pytree], jnp.ndarray],
     worker_data: Pytree,
@@ -127,6 +175,7 @@ def make_federated_step(
     optimizer: optim_lib.Optimizer,
     *,
     topology: Optional[Any] = None,
+    schedule: Optional[Any] = None,
 ):
     """Build ``(init_fn, step_fn, metrics_keys)`` for the simulated federation.
 
@@ -134,19 +183,22 @@ def make_federated_step(
     leading sample axis. ``worker_data``: leaves shaped (W_h, J, ...).
 
     ``topology``: a name from ``repro.topology.TOPOLOGY_NAMES`` or a built
-    :class:`repro.topology.Topology` (default: ``cfg.topology``).  The
-    default ``"star"`` IS this function's master path, unchanged and
-    bit-exact; any other graph delegates to
-    :func:`repro.topology.make_decentralized_step`, whose state carries a
-    leading per-node axis on every leaf (DESIGN.md Sec. 6).
+    :class:`repro.topology.Topology` (default: ``cfg.topology``).
+    ``schedule``: a name from ``repro.topology.SCHEDULE_NAMES`` or a built
+    :class:`repro.topology.GraphSchedule` for TIME-VARYING graphs (default:
+    ``cfg.schedule``).  The default ``"star"`` + ``"static"`` IS this
+    function's master path, unchanged and bit-exact; any other graph or
+    schedule delegates to :func:`repro.topology.make_decentralized_step`
+    (gossip mode per ``cfg.gossip``), whose state carries a leading
+    per-node axis on every leaf (DESIGN.md Secs. 6-7).
     """
     wh = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
     b = cfg.num_byzantine if cfg.attack != "none" else 0
-    topo = resolve_topology(cfg, wh + b, topology)
-    if topo is not None:
+    sched = resolve_schedule(cfg, wh + b, topology, schedule)
+    if sched is not None:
         from repro.topology import make_decentralized_step
         return make_decentralized_step(loss_fn, worker_data, cfg, optimizer,
-                                       topo)
+                                       sched)
     j = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
     grad_fn = jax.grad(loss_fn)
     attack_cfg = cfg.attack_config()

@@ -181,7 +181,7 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
 def make_decentralized_train_step(model: Model, robust: RobustConfig,
                                   train: TrainConfig, mesh, topology, *,
                                   saga_num_samples: int = 0):
-    """Server-free variant of :func:`make_train_step` (DESIGN.md Sec. 6):
+    """Server-free variant of :func:`make_train_step` (DESIGN.md Secs. 6-7):
     every worker-axis index is a graph NODE owning its own parameter /
     optimizer copy (state leaves grow a leading node axis sharded over the
     worker axes), gradients are computed at each node's own parameters, and
@@ -191,26 +191,40 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
     ``comm="gather"`` and ``comm="sharded"`` run on 1-axis and (pod, data)
     worker meshes.
 
+    ``topology`` may be a graph name, a :class:`repro.topology.Topology`,
+    or a :class:`repro.topology.GraphSchedule`; with ``robust.schedule``
+    != "static" the schedule is built around it and the state's step
+    counter selects each round's stacked mask/mixing constants inside the
+    compiled step (no per-round retrace).  ``robust.gossip`` picks the
+    message channel: ``"gradient"`` aggregates neighbor gradients then
+    applies the optimizer; ``"params"`` applies the optimizer locally first
+    and robust-aggregates the neighbors' half-stepped models.
+
     Returns ``(train_step, state_specs, make_state_structs)`` like
     :func:`make_train_step`; metrics add ``consensus_dist`` (mean squared
     drift of the honest nodes' parameters from their average).
     """
-    from repro.core.robust_step import resolve_topology
-    from repro.topology import decentralized_aggregate, validate_topology
+    from repro.core.robust_step import resolve_schedule
+    from repro.topology import (GOSSIP_MODES, decentralized_aggregate,
+                                validate_schedule)
 
     cfg = model.cfg
     if robust.comm not in ("gather", "sharded"):
         raise ValueError(f"RobustConfig.comm must be 'gather' or 'sharded', "
                          f"got {robust.comm!r}")
+    if robust.gossip not in GOSSIP_MODES:
+        raise ValueError(f"RobustConfig.gossip must be one of {GOSSIP_MODES}, "
+                         f"got {robust.gossip!r}")
     compat.require_distributed(what="decentralized topology training")
     wa = mesh_lib.worker_axes(mesh)
     w = mesh_lib.num_workers(mesh)
-    topo = resolve_topology(robust, w, topology)
-    if topo is None:
+    sched = resolve_schedule(robust, w, topology)
+    if sched is None:
         raise ValueError(
-            "topology 'star' is the master federation -- use "
-            "launch/steps.make_train_step (the bit-exact paper path)")
-    validate_topology(robust, topo, w)
+            "topology 'star' with a static schedule is the master "
+            "federation -- use launch/steps.make_train_step (the bit-exact "
+            "paper path)")
+    validate_schedule(robust, sched, w)  # fail at build time, not first jit
     optimizer = optim_lib.get_optimizer(train.optimizer, train.lr)
     use_saga = robust.vr == "saga" and saga_num_samples > 0
     b = robust.num_byzantine if robust.attack != "none" else 0
@@ -240,21 +254,39 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
         else:
             msgs, saga_state = grads, state.get("saga")
 
-        def agg_fn(local_msgs, k):
+        def agg_fn(local_msgs, t, k):
             local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
             out = decentralized_aggregate(
-                local, robust, topo, comm=robust.comm, worker_axes=wa,
-                model_axes=("model",), num_workers=w, key=k)
+                local, robust, sched, comm=robust.comm, worker_axes=wa,
+                model_axes=("model",), num_workers=w, key=k, round_index=t)
             return jax.tree_util.tree_map(lambda a: a[None], out)
 
-        agg = compat.shard_map(
-            agg_fn, mesh=mesh, in_specs=(node_specs, P()),
-            out_specs=node_specs, check_vma=False,
-        )(msgs, jax.random.fold_in(key, 2))
+        def gossip_agg(wire_msgs):
+            return compat.shard_map(
+                agg_fn, mesh=mesh, in_specs=(node_specs, P(), P()),
+                out_specs=node_specs, check_vma=False,
+            )(wire_msgs, state["step"], jax.random.fold_in(key, 2))
 
-        updates, opt_state = optimizer.update(agg, state["opt"], params,
-                                              state["step"])
-        params = optim_lib.apply_updates(params, updates)
+        if robust.gossip == "params":
+            # Local optimizer step with each node's own corrected gradient,
+            # then robust PARAMETER gossip: the wire carries half-stepped
+            # models and the aggregate IS the new iterate.  agg_norm keeps
+            # gradient-scale meaning across modes by reporting the per-step
+            # MOVEMENT (aggregate minus previous iterate), not the iterate.
+            updates, opt_state = optimizer.update(msgs, state["opt"], params,
+                                                  state["step"])
+            half = optim_lib.apply_updates(params, updates)
+            agg = gossip_agg(half)
+            agg_move = jax.tree_util.tree_map(
+                lambda a, p: a.astype(jnp.float32) - p.astype(jnp.float32),
+                agg, params)
+            params = agg
+        else:
+            agg = gossip_agg(msgs)
+            agg_move = agg
+            updates, opt_state = optimizer.update(agg, state["opt"], params,
+                                                  state["step"])
+            params = optim_lib.apply_updates(params, updates)
         new_state = {"params": params, "opt": opt_state,
                      "step": state["step"] + 1}
         if use_saga:
@@ -272,7 +304,7 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
             "consensus_dist": cons / wh,
             "agg_norm": jnp.sqrt(sum(
                 jnp.sum(jnp.square(g.astype(jnp.float32)))
-                for g in jax.tree_util.tree_leaves(agg)) / w),
+                for g in jax.tree_util.tree_leaves(agg_move)) / w),
         }
         return new_state, metrics
 

@@ -73,6 +73,19 @@ def main() -> None:
                     help="seed for erdos_renyi draws")
     ap.add_argument("--topology-p", type=float, default=0.5,
                     help="edge probability for erdos_renyi")
+    ap.add_argument("--gossip", default="gradient",
+                    choices=["gradient", "params"],
+                    help="decentralized message channel: gossip gradients "
+                    "(aggregate then step) or parameters (local step then "
+                    "robust model aggregation, arXiv:2308.05292)")
+    ap.add_argument("--schedule", default="static",
+                    choices=["static", "cyclic", "erdos_renyi"],
+                    help="time-varying graph schedule: static keeps "
+                    "--topology fixed; cyclic rotates a comma-separated "
+                    "--topology list; erdos_renyi resamples a seeded "
+                    "G(N, p) per round")
+    ap.add_argument("--schedule-period", type=int, default=4,
+                    help="rounds per erdos_renyi schedule period")
     ap.add_argument("--vr", default="sgd", choices=["sgd", "saga"])
     ap.add_argument("--saga-samples", type=int, default=4)
     ap.add_argument("--optimizer", default="adamw")
@@ -107,17 +120,18 @@ def main() -> None:
         aggregator=args.aggregator, vr=args.vr, attack=args.attack,
         num_byzantine=args.byzantine, comm=args.comm, weiszfeld_iters=16,
         topology=args.topology, topology_seed=args.topology_seed,
-        topology_p=args.topology_p)
+        topology_p=args.topology_p, gossip=args.gossip,
+        schedule=args.schedule, schedule_period=args.schedule_period)
     train = TrainConfig(optimizer=args.optimizer, lr=args.lr)
-    decentralized = args.topology != "star"
+    from repro.core.robust_step import resolve_schedule
+    sched = resolve_schedule(robust, w)
+    decentralized = sched is not None
     saga_samples = args.saga_samples if args.vr == "saga" else 0
     if decentralized:
-        from repro.topology import get_topology
-        topo = get_topology(args.topology, w, seed=args.topology_seed,
-                            p=args.topology_p)
-        print(f"topology: {topo.describe()}")  # incl. the spectral gap
+        # Schedule-level report: per-round spectral gaps + the joint gap.
+        print(f"schedule: {sched.describe()}")
         step_fn, sspecs, sstructs = steps_lib.make_decentralized_train_step(
-            model, robust, train, mesh, topo, saga_num_samples=saga_samples)
+            model, robust, train, mesh, sched, saga_num_samples=saga_samples)
     else:
         step_fn, sspecs, sstructs = steps_lib.make_train_step(
             model, robust, train, mesh, saga_num_samples=saga_samples)

@@ -1,5 +1,6 @@
-"""Decentralized topologies: network graphs, masked neighborhood
-aggregation, and the server-free training step (DESIGN.md Sec. 6)."""
+"""Decentralized topologies: network graphs, time-varying graph schedules,
+masked neighborhood aggregation, and the server-free training step with
+gradient or parameter gossip (DESIGN.md Secs. 6-7)."""
 from repro.topology.graphs import (
     TOPOLOGY_NAMES,
     Topology,
@@ -23,7 +24,18 @@ from repro.topology.masked import (
     masked_weiszfeld,
     masked_weiszfeld_segments,
 )
+from repro.topology.schedule import (
+    SCHEDULE_NAMES,
+    GraphSchedule,
+    as_schedule,
+    erdos_renyi_schedule,
+    get_schedule,
+    validate_schedule,
+)
+from repro.topology.schedule import cyclic as cyclic_schedule
+from repro.topology.schedule import static as static_schedule
 from repro.topology.decentralized_step import (
+    GOSSIP_MODES,
     build_exchange,
     decentralized_aggregate,
     make_decentralized_step,

@@ -1,20 +1,27 @@
 """Decentralized Byzantine-robust training over an explicit network graph.
 
-Server-free counterpart of :mod:`repro.core.robust_step` (DESIGN.md Sec. 6):
-there is no master -- every node keeps ITS OWN parameters, computes its own
-(SAGA-corrected) stochastic gradient, exchanges gradient messages only with
-its graph neighbors, and robustly aggregates its masked neighborhood with
-any registry aggregator (:mod:`repro.topology.masked`).  Byzantine nodes
-attack PER EDGE: the message a Byzantine sender injects toward receiver i
-is crafted from receiver i's own honest-neighborhood statistics, so two
-receivers see different poison (strictly stronger than the master-path
-attacks, which send one identical vector to the single aggregation point).
+Server-free counterpart of :mod:`repro.core.robust_step` (DESIGN.md
+Secs. 6-7): there is no master -- every node keeps ITS OWN parameters,
+computes its own (SAGA-corrected) stochastic gradient, exchanges messages
+only with its graph neighbors, and robustly aggregates its masked
+neighborhood with any registry aggregator (:mod:`repro.topology.masked`).
+The message channel is configurable (``cfg.gossip``): GRADIENTS (aggregate
+then apply the optimizer, PR-3 behaviour) or PARAMETERS (apply the
+optimizer locally, then robust-aggregate the neighbors' half-stepped
+models -- arXiv:2308.05292).  The graph itself may be time-varying: every
+path accepts a :class:`repro.topology.GraphSchedule` whose per-round
+mask/mixing constants are selected by the traced round counter
+(``topology/schedule.py``).  Byzantine nodes attack PER EDGE: the message
+a Byzantine sender injects toward receiver i is crafted from receiver i's
+own honest-neighborhood statistics, so two receivers see different poison
+(strictly stronger than the master-path attacks, which send one identical
+vector to the single aggregation point).
 
 Three execution paths share the math, mirroring the master layout:
 
 * :func:`make_decentralized_step` -- single-host simulation (dense
   (N, N, ...) exchange tensor), the path behind
-  ``make_federated_step(..., topology=...)``;
+  ``make_federated_step(..., topology=..., schedule=...)``;
 * :func:`decentralized_aggregate` with ``comm="gather"`` -- inside
   ``shard_map``: all_gather the worker axes, pick this node's mask row at
   its linear worker index, aggregate its own neighborhood (per-iteration
@@ -26,9 +33,10 @@ Three execution paths share the math, mirroring the master layout:
   (R, S)-shaped psums restoring global geometry, and a second all_to_all
   routes each receiver its own aggregate's slices.
 
-``topology="star"`` is deliberately NOT routed here: the training entry
-points special-case it onto the existing master implementations so the
-default path stays bit-exact with the paper reproduction.
+``topology="star"`` (with a static schedule) is deliberately NOT routed
+here: the training entry points special-case it onto the existing master
+implementations so the default path stays bit-exact with the paper
+reproduction.
 """
 from __future__ import annotations
 
@@ -45,8 +53,19 @@ from repro.core.robust_step import (FederatedState, _flatten_concat,
 from repro.optim import optimizers as optim_lib
 from repro.topology.graphs import Topology
 from repro.topology.masked import masked_aggregate, masked_weiszfeld_segments
+from repro.topology.schedule import as_schedule, validate_schedule
 
 Pytree = Any
+
+GOSSIP_MODES = ("gradient", "params")
+
+
+def _check_gossip(cfg) -> str:
+    gossip = getattr(cfg, "gossip", "gradient")
+    if gossip not in GOSSIP_MODES:
+        raise ValueError(f"RobustConfig.gossip must be one of {GOSSIP_MODES}, "
+                         f"got {gossip!r}")
+    return gossip
 
 
 def _bcast_rows(tree: Pytree, r: int) -> Pytree:
@@ -148,7 +167,7 @@ def build_exchange(
     return jax.tree_util.tree_map(select, msgs, byz)
 
 
-def _agg_opts(cfg, topo: Topology, mixing, axis_names=(), sync_axes=()):
+def _agg_opts(cfg, mixing, axis_names=(), sync_axes=()):
     return dict(
         max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
         num_groups=cfg.num_groups, trim=cfg.trim,
@@ -158,19 +177,11 @@ def _agg_opts(cfg, topo: Topology, mixing, axis_names=(), sync_axes=()):
 
 
 def validate_topology(cfg, topo: Topology, num_nodes: int) -> None:
-    """Static feasibility checks against the graph (trace-time, so they
-    raise with context instead of producing NaN aggregates)."""
-    if topo.num_nodes != num_nodes:
-        raise ValueError(
-            f"topology {topo.name!r} has {topo.num_nodes} nodes but the "
-            f"federation has {num_nodes}")
-    if not topo.is_connected():
-        raise ValueError(f"topology {topo.name!r} is disconnected")
-    if cfg.aggregator == "trimmed_mean" and topo.min_neighborhood <= 2 * cfg.trim:
-        raise ValueError(
-            f"trimmed_mean(trim={cfg.trim}) needs every neighborhood to "
-            f"have > {2 * cfg.trim} members; topology {topo.name!r} has a "
-            f"neighborhood of {topo.min_neighborhood}")
+    """Static feasibility checks against a FIXED graph (trace-time, so they
+    raise with context instead of producing NaN aggregates).  Delegates to
+    ``validate_schedule`` on the graph's static schedule, so the fixed and
+    time-varying validation paths cannot drift apart."""
+    validate_schedule(cfg, as_schedule(topo), num_nodes)
 
 
 # ---------------------------------------------------------------------------
@@ -182,12 +193,29 @@ def make_decentralized_step(
     worker_data: Pytree,
     cfg,
     optimizer: optim_lib.Optimizer,
-    topology: Topology,
+    topology,
 ):
     """Build ``(init_fn, step_fn)`` for the simulated decentralized
     federation; drop-in shaped like
     :func:`repro.core.robust_step.make_federated_step` but with PER-NODE
     parameters.
+
+    ``topology``: a fixed :class:`Topology` or a time-varying
+    :class:`GraphSchedule` (DESIGN.md Sec. 7) -- round ``t`` uses the
+    schedule's ``t % period`` graph, selected from stacked compile-time
+    mask/mixing constants by the traced step counter.
+
+    Gossip modes (``cfg.gossip``):
+
+    * ``"gradient"`` (PR-3 behaviour) -- nodes exchange (SAGA-corrected)
+      GRADIENT messages, robust-aggregate the masked neighborhood, and
+      apply the optimizer to the aggregate;
+    * ``"params"`` (arXiv:2308.05292's setting) -- each node first takes a
+      LOCAL optimizer step with its own corrected gradient, then the
+      half-stepped PARAMETERS are exchanged and each node's new iterate is
+      the robust aggregate of its neighborhood's models.  Byzantine nodes
+      poison the parameter channel per edge with the same receiver-local
+      constructions (``build_exchange`` is message-agnostic).
 
     Graph nodes are ``N = W_h + B``: the first W_h ids are the honest
     workers (rows of ``worker_data``), the LAST B are Byzantine (matching
@@ -198,15 +226,15 @@ def make_decentralized_step(
     ``consensus_dist`` in the metrics tracks how far the honest copies have
     drifted apart.
     """
+    sched = as_schedule(topology)
     wh = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
     j = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
     b = cfg.num_byzantine if cfg.attack != "none" else 0
     n = wh + b
-    validate_topology(cfg, topology, n)
+    validate_schedule(cfg, sched, n)
+    gossip = _check_gossip(cfg)
     grad_fn = jax.grad(loss_fn)
     attack_cfg = cfg.attack_config()
-    mask = jnp.asarray(topology.neighbor_mask, jnp.float32)
-    mixing = jnp.asarray(topology.mixing, jnp.float32)
     is_byz = jnp.arange(n) >= wh
 
     def sample_batch(data_w, idx):
@@ -232,6 +260,8 @@ def make_decentralized_step(
 
     def step_fn(state):
         key, k_idx, k_attack = jax.random.split(state.key, 3)
+        mask = sched.mask_at(state.step)
+        mixing = sched.mixing_at(state.step)
         honest_params = jax.tree_util.tree_map(lambda x: x[:wh], state.params)
 
         if cfg.vr == "minibatch":
@@ -261,14 +291,27 @@ def make_decentralized_step(
         msgs = jax.tree_util.tree_map(
             lambda g: jnp.zeros((n,) + g.shape[1:], g.dtype).at[:wh].set(g),
             honest)
-        exchange = build_exchange(msgs, attack_cfg, mask, is_byz, k_attack)
-        agg = masked_aggregate(
-            cfg.aggregator, exchange, mask,
-            **_agg_opts(cfg, topology, mixing * mask))
 
-        updates, opt_state = optimizer.update(
-            agg, state.opt_state, state.params, state.step)
-        params = optim_lib.apply_updates(state.params, updates)
+        if gossip == "params":
+            # Local step first, then robust PARAMETER gossip: the messages
+            # on the wire are each node's half-stepped model.
+            updates, opt_state = optimizer.update(
+                msgs, state.opt_state, state.params, state.step)
+            half = optim_lib.apply_updates(state.params, updates)
+            exchange = build_exchange(half, attack_cfg, mask, is_byz,
+                                      k_attack)
+            params = masked_aggregate(
+                cfg.aggregator, exchange, mask,
+                **_agg_opts(cfg, mixing * mask))
+        else:
+            exchange = build_exchange(msgs, attack_cfg, mask, is_byz,
+                                      k_attack)
+            agg = masked_aggregate(
+                cfg.aggregator, exchange, mask,
+                **_agg_opts(cfg, mixing * mask))
+            updates, opt_state = optimizer.update(
+                agg, state.opt_state, state.params, state.step)
+            params = optim_lib.apply_updates(state.params, updates)
 
         xh = jax.tree_util.tree_map(lambda x: x[:wh], params)
         cons = sum(
@@ -290,30 +333,42 @@ def make_decentralized_step(
 def decentralized_aggregate(
     grads: Pytree,
     cfg,
-    topology: Topology,
+    topology,
     *,
     comm: str = "gather",
     worker_axes: tuple[str, ...] = ("data",),
     model_axes: tuple[str, ...] = ("model",),
     num_workers: int,
     key: Optional[jax.Array] = None,
+    round_index: Optional[jax.Array] = None,
 ) -> Pytree:
     """Per-node robust neighborhood aggregation inside ``shard_map``.
 
-    ``grads``: this node's message (leaves are local model shards).  Nodes
-    are the linear worker-axis indices (row-major over ``worker_axes``,
-    the Sec. 2 convention); the FIRST ``cfg.num_byzantine`` nodes attack
-    per edge.  Returns THIS node's aggregate (same local-shard geometry as
-    the input) -- per-node results, unlike the master paths which return
-    one shared aggregate.
+    ``grads``: this node's message (leaves are local model shards) -- a
+    gradient in gradient-gossip mode, the half-stepped parameters in
+    params-gossip mode (the aggregation itself is message-agnostic).
+    ``topology``: a fixed :class:`Topology` or a :class:`GraphSchedule`; a
+    time-varying schedule needs the traced ``round_index`` to select the
+    round's stacked mask/mixing constants (``lax.dynamic_index_in_dim``, no
+    per-round retrace).  Nodes are the linear worker-axis indices
+    (row-major over ``worker_axes``, the Sec. 2 convention); the FIRST
+    ``cfg.num_byzantine`` nodes attack per edge.  Returns THIS node's
+    aggregate (same local-shard geometry as the input) -- per-node results,
+    unlike the master paths which return one shared aggregate.
     """
     if comm not in ("gather", "sharded"):
         raise ValueError(f"comm must be 'gather' or 'sharded', got {comm!r}")
     w = num_workers
-    validate_topology(cfg, topology, w)
+    sched = as_schedule(topology)
+    validate_schedule(cfg, sched, w)
+    if not sched.is_static and round_index is None:
+        raise ValueError(
+            f"schedule {sched.name!r} is time-varying (period "
+            f"{sched.period}); decentralized_aggregate needs round_index=")
+    t = 0 if round_index is None else round_index
     attack_cfg = cfg.attack_config()
-    mask_all = jnp.asarray(topology.neighbor_mask, jnp.float32)
-    mixing_all = jnp.asarray(topology.mixing, jnp.float32)
+    mask_all = sched.mask_at(t)                               # (S, S)
+    mixing_all = sched.mixing_at(t)
     is_byz = jnp.arange(w) < cfg.num_byzantine
     wid = compat.axis_index(worker_axes)
 
@@ -327,7 +382,7 @@ def decentralized_aggregate(
         exchange = build_exchange(stacked, attack_cfg, mask_row, is_byz, k)
         agg = masked_aggregate(
             cfg.aggregator, exchange, mask_row,
-            **_agg_opts(cfg, topology, mix_row * mask_row,
+            **_agg_opts(cfg, mix_row * mask_row,
                         axis_names=model_axes, sync_axes=worker_axes))
         return jax.tree_util.tree_map(lambda a: a[0], agg)
 
@@ -355,7 +410,7 @@ def decentralized_aggregate(
     else:
         agg = masked_aggregate(
             cfg.aggregator, exchange, mask_all,
-            **_agg_opts(cfg, topology, mixing_all * mask_all,
+            **_agg_opts(cfg, mixing_all * mask_all,
                         axis_names=comm_axes))["flat"]
     agg = agg.astype(jnp.float32)                             # (R, chunk)
     mine = compat.all_to_all(agg, worker_axes, split_axis=0,

@@ -180,12 +180,15 @@ def complete(num_nodes: int) -> Topology:
 
 
 def erdos_renyi(num_nodes: int, *, p: float = 0.5, seed: int = 0,
-                max_tries: int = 64) -> Topology:
+                max_tries: int = 64, require_connected: bool = True) -> Topology:
     """G(N, p) with each edge drawn i.i.d. Bernoulli(p) from a seeded numpy
     Generator.  Deterministic in (N, p, seed).  A disconnected draw is
     rejected and redrawn (fresh substream, same seed) up to ``max_tries``
     times; persistent disconnection (tiny p) raises with the fix spelled
-    out rather than silently densifying the graph."""
+    out rather than silently densifying the graph.  With
+    ``require_connected=False`` the FIRST draw is returned as-is -- the
+    time-varying schedules (``topology/schedule.py``) legitimately use
+    disconnected rounds and validate connectivity over a window instead."""
     _check_n("erdos_renyi", num_nodes)
     if not 0.0 <= p <= 1.0:
         raise ValueError(f"erdos_renyi: p must be in [0, 1], got {p}")
@@ -194,7 +197,7 @@ def erdos_renyi(num_nodes: int, *, p: float = 0.5, seed: int = 0,
         upper = rng.random((num_nodes, num_nodes)) < p
         adj = np.triu(upper, k=1)
         adj = adj | adj.T
-        if _connected(adj):
+        if not require_connected or _connected(adj):
             return Topology("erdos_renyi", num_nodes, adj)
     raise ValueError(
         f"erdos_renyi(N={num_nodes}, p={p}, seed={seed}): no connected draw "

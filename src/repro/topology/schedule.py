@@ -1,0 +1,305 @@
+"""Time-varying communication graphs for decentralized training.
+
+PR-3's :class:`repro.topology.Topology` is FIXED: one graph for the whole
+run.  Real gossip networks are not -- links drop, radios hop, clusters are
+rescheduled -- and the decentralized-SGD literature (Peng/Li/Ling 2023,
+arXiv:2308.05292; Nedic/Olshevsky on time-varying consensus) only needs the
+union graph over a bounded WINDOW of rounds to be connected, not any single
+round.  A :class:`GraphSchedule` is the compile-time object carrying that
+relaxation:
+
+* ``topologies`` -- a finite period of T graphs on the same node set, the
+  schedule repeating with round ``t`` using graph ``t % T``;
+* stacked ``(T, N, N)`` neighbor masks / mixing matrices, built ONCE in
+  numpy and entering jit as constants: per-round selection is a single
+  ``lax.dynamic_index_in_dim`` by the traced round counter, so a schedule
+  never rebuilds or retraces anything per round (the whole training step
+  stays one compiled program regardless of T);
+* connectivity over a WINDOW (:meth:`is_connected_over_window`): the union
+  of every length-``window`` run of consecutive rounds must be connected.
+  Individual rounds MAY be disconnected -- that is the point of the
+  abstraction (a per-round ``erdos_renyi`` draw with small p usually is);
+* a JOINT spectral gap (:meth:`joint_spectral_gap`): consensus over one
+  period contracts by the second-largest singular value of the product
+  ``W_{T-1} ... W_0`` of the per-round mixing matrices (the product is
+  doubly stochastic but no longer symmetric, hence singular values, not
+  eigenvalues).  For T = 1 this reduces exactly to
+  ``Topology.spectral_gap``.
+
+Constructors (registry-driven like the graph constructors):
+
+* ``static(topology)``                      -- T = 1, the PR-3 behaviour;
+* ``cyclic([topo_a, topo_b, ...])``         -- deterministic rotation over
+  an explicit list (e.g. alternate a cheap ring with an occasional
+  denser graph);
+* ``erdos_renyi_schedule(n, p, seed, T)``   -- T independent seeded
+  ``G(n, p)`` draws, the random-gossip model: each round is a fresh sparse
+  graph and only the window union has to be connected.
+
+``get_schedule(name, num_nodes, ...)`` builds by name ("static", "cyclic",
+"erdos_renyi"); for "cyclic" the ``topology`` argument is a comma-separated
+list of graph names (``"ring,complete"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.topology.graphs import Topology, _connected, erdos_renyi, get_topology
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSchedule:
+    """A periodic sequence of topologies on one node set."""
+
+    name: str
+    topologies: tuple[Topology, ...]
+
+    def __post_init__(self):
+        if not self.topologies:
+            raise ValueError("GraphSchedule needs at least one topology")
+        ns = {t.num_nodes for t in self.topologies}
+        if len(ns) != 1:
+            raise ValueError(
+                f"every topology in a schedule must share the node set; "
+                f"got node counts {sorted(ns)}")
+        object.__setattr__(self, "topologies", tuple(self.topologies))
+
+    @property
+    def num_nodes(self) -> int:
+        return self.topologies[0].num_nodes
+
+    @property
+    def period(self) -> int:
+        return len(self.topologies)
+
+    @property
+    def is_static(self) -> bool:
+        return self.period == 1
+
+    @property
+    def min_neighborhood(self) -> int:
+        """Smallest neighborhood (incl. self) over EVERY round: the bound
+        the per-round feasibility checks (trimmed_mean) must hold against."""
+        return min(t.min_neighborhood for t in self.topologies)
+
+    # -- stacked compile-time constants ------------------------------------
+
+    @functools.cached_property
+    def stacked_masks(self) -> np.ndarray:
+        """(T, N, N) float32 neighbor masks (with self-loops), plain numpy."""
+        return np.stack([t.neighbor_mask for t in self.topologies])
+
+    @functools.cached_property
+    def stacked_mixing(self) -> np.ndarray:
+        """(T, N, N) float64 Metropolis-Hastings mixing matrices."""
+        return np.stack([t.mixing for t in self.topologies])
+
+    def mask_at(self, t) -> jnp.ndarray:
+        """(N, N) neighbor mask of round ``t`` (``t`` may be traced): the
+        stacked constant indexed with one ``dynamic_index_in_dim`` -- never
+        a per-round rebuild/retrace."""
+        stack = jnp.asarray(self.stacked_masks, jnp.float32)
+        if self.is_static:
+            return stack[0]
+        idx = jnp.asarray(t, jnp.int32) % self.period
+        return jax.lax.dynamic_index_in_dim(stack, idx, axis=0,
+                                            keepdims=False)
+
+    def mixing_at(self, t) -> jnp.ndarray:
+        """(N, N) float32 mixing matrix of round ``t`` (``t`` may be traced)."""
+        stack = jnp.asarray(self.stacked_mixing, jnp.float32)
+        if self.is_static:
+            return stack[0]
+        idx = jnp.asarray(t, jnp.int32) % self.period
+        return jax.lax.dynamic_index_in_dim(stack, idx, axis=0,
+                                            keepdims=False)
+
+    # -- validation / reporting -------------------------------------------
+
+    def union_adjacency(self, start: int = 0,
+                        window: Optional[int] = None) -> np.ndarray:
+        """(N, N) bool union of the adjacencies of rounds ``start`` ..
+        ``start + window - 1`` (mod the period; default window = period)."""
+        w = self.period if window is None else window
+        adj = np.zeros((self.num_nodes, self.num_nodes), bool)
+        for k in range(w):
+            adj |= self.topologies[(start + k) % self.period].adjacency
+        return adj
+
+    def is_connected_over_window(self, window: Optional[int] = None) -> bool:
+        """True iff the union graph of EVERY length-``window`` run of
+        consecutive rounds is connected (default window = the full period).
+        This is the standard B-connectivity condition under which
+        time-varying gossip still reaches consensus; single rounds may be
+        disconnected."""
+        w = self.period if window is None else window
+        if not 1 <= w <= self.period:
+            raise ValueError(
+                f"window must be in [1, {self.period}], got {w}")
+        if w == self.period:
+            # Every start offset unions the same full topology set.
+            return _connected(self.union_adjacency(0, w))
+        return all(_connected(self.union_adjacency(s, w))
+                   for s in range(self.period))
+
+    def joint_spectral_gap(self) -> float:
+        """``1 - sigma_2(W_{T-1} ... W_0)``: one minus the second-largest
+        singular value of the period product of mixing matrices (the
+        disagreement contraction per period).  Equals
+        ``Topology.spectral_gap`` when T = 1; 0 for a window-disconnected
+        schedule."""
+        n = self.num_nodes
+        if n == 1:
+            return 1.0
+        prod = np.eye(n)
+        for t in self.topologies:
+            prod = t.mixing @ prod
+        # Remove the consensus direction (the all-ones left/right singular
+        # pair of any doubly stochastic product), then the top remaining
+        # singular value is the disagreement contraction factor.
+        disagree = prod - np.full((n, n), 1.0 / n)
+        sig = np.linalg.svd(disagree, compute_uv=False)
+        # A window-disconnected schedule has an exact singular value of 1;
+        # clamp the O(eps) SVD overshoot so the gap stays in [0, 1].
+        return float(max(0.0, 1.0 - sig[0]))
+
+    def describe(self) -> dict:
+        """The schedule-level report (demo / benchmark / log line): the
+        joint gap plus per-round summaries."""
+        return {
+            "name": self.name,
+            "num_nodes": self.num_nodes,
+            "period": self.period,
+            "window_connected": self.is_connected_over_window(),
+            "joint_spectral_gap": self.joint_spectral_gap(),
+            "min_neighborhood": self.min_neighborhood,
+            "rounds": [t.describe() for t in self.topologies],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+def static(topology: Topology) -> GraphSchedule:
+    """The fixed-graph schedule: round-independent, T = 1.  Training through
+    a static schedule is BIT-exact with the PR-3 fixed-topology path (the
+    mask/mixing constants are identical arrays and no round indexing is
+    emitted)."""
+    return GraphSchedule(f"static:{topology.name}", (topology,))
+
+
+def cyclic(topologies: Sequence[Topology], *,
+           name: Optional[str] = None) -> GraphSchedule:
+    """Deterministic rotation over an explicit topology list: round ``t``
+    uses ``topologies[t % len(topologies)]``."""
+    topos = tuple(topologies)
+    if name is None:
+        name = "cyclic:" + ",".join(t.name for t in topos)
+    return GraphSchedule(name, topos)
+
+
+def erdos_renyi_schedule(num_nodes: int, *, p: float = 0.5, seed: int = 0,
+                         period: int = 4) -> GraphSchedule:
+    """``period`` independent seeded G(N, p) draws, cycled: the random-gossip
+    model.  Per-round draws are NOT redrawn to connectivity -- a sparse
+    round is legitimate as long as the window union connects (checked by
+    ``validate_schedule`` at trace time; raise ``p`` or ``period`` if it
+    does not).  Deterministic in (N, p, seed, period)."""
+    if period < 1:
+        raise ValueError(f"erdos_renyi schedule needs period >= 1, got {period}")
+    rng = np.random.default_rng(np.random.SeedSequence([num_nodes, seed, period]))
+    round_seeds = rng.integers(0, 2**31 - 1, size=period)
+    topos = tuple(
+        erdos_renyi(num_nodes, p=p, seed=int(s), require_connected=False)
+        for s in round_seeds)
+    return GraphSchedule(f"erdos_renyi(p={p},seed={seed},T={period})", topos)
+
+
+def _build_static(num_nodes, topology, period, seed, p):
+    topo = (topology if isinstance(topology, Topology)
+            else get_topology(topology, num_nodes, seed=seed, p=p))
+    return static(topo)
+
+
+def _build_cyclic(num_nodes, topology, period, seed, p):
+    if isinstance(topology, Topology):
+        names = [topology]
+    elif isinstance(topology, str):
+        names = [n.strip() for n in topology.split(",") if n.strip()]
+    else:
+        names = list(topology)
+    topos = [t if isinstance(t, Topology)
+             else get_topology(t, num_nodes, seed=seed, p=p) for t in names]
+    return cyclic(topos)
+
+
+def _build_er(num_nodes, topology, period, seed, p):
+    return erdos_renyi_schedule(num_nodes, p=p, seed=seed, period=period)
+
+
+# name -> builder(num_nodes, topology, period, seed, p).  SCHEDULE_NAMES and
+# the unknown-name error derive from this dict (same pattern as the
+# topology/aggregator/attack registries).
+_SCHEDULES: dict[str, Callable[..., GraphSchedule]] = {
+    "static": _build_static,
+    "cyclic": _build_cyclic,
+    "erdos_renyi": _build_er,
+}
+
+SCHEDULE_NAMES = tuple(_SCHEDULES)
+
+
+def get_schedule(name: str, num_nodes: int, *,
+                 topology: Union[str, Topology, Sequence] = "ring",
+                 period: int = 4, seed: int = 0,
+                 p: float = 0.5) -> GraphSchedule:
+    """Build a schedule by name.  ``topology`` feeds "static" (one graph
+    name or object) and "cyclic" (comma-separated names, a list, or
+    objects); ``period``/``seed``/``p`` feed the "erdos_renyi" resampler."""
+    try:
+        build = _SCHEDULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown schedule {name!r}; known: "
+            f"{', '.join(sorted(_SCHEDULES))}") from None
+    return build(num_nodes, topology, period, seed, p)
+
+
+def as_schedule(obj: Union[Topology, GraphSchedule]) -> GraphSchedule:
+    """Normalize a fixed :class:`Topology` to its static schedule; pass
+    schedules through.  The shim that lets every aggregation path speak
+    schedules while the PR-3 entry points keep accepting plain graphs."""
+    if isinstance(obj, GraphSchedule):
+        return obj
+    if isinstance(obj, Topology):
+        return static(obj)
+    raise TypeError(f"expected Topology or GraphSchedule, got {type(obj)!r}")
+
+
+def validate_schedule(cfg: Any, sched: GraphSchedule, num_nodes: int) -> None:
+    """Trace-time feasibility checks of a schedule against the federation
+    (the schedule counterpart of ``validate_topology``): node count, window
+    connectivity (the union over one period must connect even when single
+    rounds do not), and the per-round aggregator bounds."""
+    if sched.num_nodes != num_nodes:
+        raise ValueError(
+            f"schedule {sched.name!r} has {sched.num_nodes} nodes but the "
+            f"federation has {num_nodes}")
+    if not sched.is_connected_over_window():
+        raise ValueError(
+            f"schedule {sched.name!r} is disconnected over its window of "
+            f"{sched.period} rounds -- gossip cannot reach consensus; raise "
+            "p / the period, or add a connected round to the cycle")
+    if cfg.aggregator == "trimmed_mean" and sched.min_neighborhood <= 2 * cfg.trim:
+        raise ValueError(
+            f"trimmed_mean(trim={cfg.trim}) needs every neighborhood in "
+            f"every round to have > {2 * cfg.trim} members; schedule "
+            f"{sched.name!r} has a round with a neighborhood of "
+            f"{sched.min_neighborhood}")

@@ -175,6 +175,52 @@ _DECENTRALIZED_CASE = """
         for x, y in zip(outs["gather"], outs["sharded"]):
             np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=5e-5)
         print("DECENTRALIZED_AGREE", tname, name)
+
+    # PARAMETER-channel messages over a TIME-VARYING schedule: the wire now
+    # carries half-stepped models and round_index=1 must select the cyclic
+    # schedule's SECOND graph inside shard_map in both comm modes, matching
+    # the dense masked reference built from that same round's mask.
+    from repro.topology import cyclic_schedule
+    sched = cyclic_schedule([get_topology("ring", 4),
+                             get_topology("torus2d", 4)])
+    h1 = g1 - 0.05 * jax.random.normal(jax.random.PRNGKey(3), g1.shape)
+    h2 = g2 - 0.05 * jax.random.normal(jax.random.PRNGKey(4), g2.shape)
+    cfg = RobustConfig(aggregator=name, weiszfeld_iters=100,
+                       weiszfeld_tol=1e-9, attack="sign_flip",
+                       num_byzantine=1, clip_radius=2.5, trim=1,
+                       gossip="params")
+    topo1 = sched.topologies[1]
+    M1 = jnp.asarray(topo1.neighbor_mask)
+    E1 = build_exchange({"a": h1, "b": h2}, cfg.attack_config(), M1,
+                        jnp.arange(4) < 1)
+    ref1 = masked_aggregate(name, E1, M1, max_iters=100, tol=1e-9,
+                            num_groups=4, trim=1, num_byzantine=1,
+                            clip_radius=2.5,
+                            mixing=jnp.asarray(topo1.mixing, jnp.float32) * M1)
+    # ... on the (pod, data) mesh AND a 1-axis (data,) worker mesh.
+    mesh1 = compat.make_mesh((4, 2), ("data", "model"))
+    sm1 = partial(compat.shard_map, mesh=mesh1,
+                  in_specs=(P("data", "model"), P("data", None, "model")),
+                  out_specs=(P("data", "model"), P("data", None, "model")),
+                  check_vma=False)
+    for axes_label, waxes, smap in (("pod-data", wa, sm),
+                                    ("data", ("data",), sm1)):
+        for comm in ("gather", "sharded"):
+            def agg_fn(a, b, comm=comm, waxes=waxes):
+                out = decentralized_aggregate(
+                    {"a": a[0], "b": b[0]}, cfg, sched, comm=comm,
+                    worker_axes=waxes, model_axes=("model",), num_workers=4,
+                    round_index=jnp.asarray(1, jnp.int32))
+                return out["a"][None], out["b"][None]
+            got = smap(agg_fn)(h1, h2)
+            tag = "params " + axes_label + " " + comm
+            np.testing.assert_allclose(np.asarray(got[0]),
+                                       np.asarray(ref1["a"]),
+                                       atol=5e-5, err_msg=tag + " a")
+            np.testing.assert_allclose(np.asarray(got[1]),
+                                       np.asarray(ref1["b"]),
+                                       atol=5e-5, err_msg=tag + " b")
+            print("PARAMS_SCHEDULE_AGREE", axes_label, comm, name)
 """
 
 
@@ -182,18 +228,25 @@ _DECENTRALIZED_CASE = """
 def test_every_aggregator_decentralized_on_pod_mesh(name):
     """Every registry aggregator aggregates decentralized on ring / torus2d
     / erdos_renyi in BOTH comm modes on a (2, 2, 2) multi-pod mesh, within
-    tolerance of the dense masked reference (the acceptance matrix)."""
+    tolerance of the dense masked reference (the acceptance matrix) -- for
+    gradient messages on fixed graphs AND parameter messages over a
+    time-varying cyclic schedule (round_index selection inside shard_map)."""
     out = run_py(f"    name = {name!r}\n" + _DECENTRALIZED_CASE, timeout=600)
     for tname in ("ring", "torus2d", "erdos_renyi"):
         assert f"DECENTRALIZED_AGREE {tname} {name}" in out
+    for axes_label in ("pod-data", "data"):
+        for comm in ("gather", "sharded"):
+            assert f"PARAMS_SCHEDULE_AGREE {axes_label} {comm} {name}" in out
 
 
 def test_decentralized_train_step_agrees_with_master_on_complete_graph():
-    """Cross-path consistency: on the complete graph with the mean rule and
-    no attack, every node's masked neighborhood is the whole federation
-    with uniform Metropolis weights, so ONE decentralized train step from a
-    replicated init must reproduce the master step's parameters on every
-    node (and keep the copies in exact consensus)."""
+    """Cross-path consistency for BOTH gossip modes: on the complete graph
+    with the mean rule and no attack, every node's masked neighborhood is
+    the whole federation with uniform Metropolis weights, so ONE
+    decentralized train step from a replicated init must reproduce the
+    master step's parameters on every node (and keep the copies in exact
+    consensus).  For params gossip this additionally needs the LINEAR sgd
+    optimizer: mean_i(x - lr*g_i) = x - lr*mean_i(g_i)."""
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from repro import compat
@@ -209,30 +262,89 @@ def test_decentralized_train_step_agrees_with_master_on_complete_graph():
         mesh = mesh_lib.make_host_mesh((4, 2), ("data", "model"))
         model = build_model(cfg, remat=False, q_chunk=32, kv_chunk=32, loss_chunk=32)
         train = TrainConfig(optimizer="sgd", lr=0.1)
-        robust = RobustConfig(aggregator="mean", vr="sgd", attack="none")
         with compat.use_mesh(mesh):
             params = model.init(jax.random.PRNGKey(0))
             batch = make_batch(jax.random.PRNGKey(5), cfg, 4, 2, 32)
             key = jax.random.PRNGKey(9)
+            robust = RobustConfig(aggregator="mean", vr="sgd", attack="none")
             mstep, _, _ = steps_lib.make_train_step(model, robust, train, mesh)
             mstate = {"params": params, "opt": (), "step": jnp.zeros((), jnp.int32)}
             mstate, _ = jax.jit(mstep)(mstate, batch, key)
-            dstep, _, _ = steps_lib.make_decentralized_train_step(
-                model, robust, train, mesh, get_topology("complete", 4))
-            nodes = jax.tree_util.tree_map(
-                lambda p: jnp.broadcast_to(p[None], (4,) + p.shape) + 0, params)
-            dstate = {"params": nodes, "opt": (), "step": jnp.zeros((), jnp.int32)}
-            dstate, dm = jax.jit(dstep)(dstate, batch, key)
-        assert float(dm["consensus_dist"]) < 1e-8, float(dm["consensus_dist"])
-        for m, d in zip(jax.tree_util.tree_leaves(mstate["params"]),
-                        jax.tree_util.tree_leaves(dstate["params"])):
-            dn = np.asarray(d, np.float32)
-            mn = np.asarray(m, np.float32)
-            for node in range(4):
-                np.testing.assert_allclose(dn[node], mn, rtol=2e-3, atol=2e-4)
-        print("COMPLETE_EQUALS_MASTER")
+            for gossip in ("gradient", "params"):
+                drobust = RobustConfig(aggregator="mean", vr="sgd",
+                                       attack="none", gossip=gossip)
+                dstep, _, _ = steps_lib.make_decentralized_train_step(
+                    model, drobust, train, mesh, get_topology("complete", 4))
+                nodes = jax.tree_util.tree_map(
+                    lambda p: jnp.broadcast_to(p[None], (4,) + p.shape) + 0, params)
+                dstate = {"params": nodes, "opt": (), "step": jnp.zeros((), jnp.int32)}
+                dstate, dm = jax.jit(dstep)(dstate, batch, key)
+                assert float(dm["consensus_dist"]) < 1e-8, (gossip, float(dm["consensus_dist"]))
+                for m, d in zip(jax.tree_util.tree_leaves(mstate["params"]),
+                                jax.tree_util.tree_leaves(dstate["params"])):
+                    dn = np.asarray(d, np.float32)
+                    mn = np.asarray(m, np.float32)
+                    for node in range(4):
+                        np.testing.assert_allclose(dn[node], mn, rtol=2e-3,
+                                                   atol=2e-4, err_msg=gossip)
+                print("COMPLETE_EQUALS_MASTER", gossip)
     """, timeout=600)
-    assert "COMPLETE_EQUALS_MASTER" in out
+    assert "COMPLETE_EQUALS_MASTER gradient" in out
+    assert "COMPLETE_EQUALS_MASTER params" in out
+
+
+def test_params_gossip_train_step_gather_vs_sharded_on_schedule():
+    """End-to-end params-gossip decentralized training over a time-varying
+    erdos_renyi schedule on a 1-axis worker mesh: the gather and sharded
+    comm modes must produce the same per-node parameters after two steps
+    (the schedule's round counter advances inside the compiled step)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
+        from repro.configs import get_config
+        from repro.configs.base import TrainConfig
+        from repro.core.robust_step import RobustConfig
+        from repro.launch import mesh as mesh_lib, steps as steps_lib
+        from repro.launch.train import make_batch
+        from repro.models.api import build_model
+
+        cfg = get_config("mamba2-130m").reduced()
+        mesh = mesh_lib.make_host_mesh((4, 2), ("data", "model"))
+        model = build_model(cfg, remat=False, q_chunk=32, kv_chunk=32, loss_chunk=32)
+        train = TrainConfig(optimizer="sgd", lr=0.05)
+        outs = {}
+        for comm in ("gather", "sharded"):
+            robust = RobustConfig(aggregator="geomed", vr="sgd",
+                                  attack="sign_flip", num_byzantine=1,
+                                  comm=comm, weiszfeld_iters=32,
+                                  weiszfeld_tol=1e-9, gossip="params",
+                                  topology="ring", schedule="erdos_renyi",
+                                  schedule_period=2, topology_p=0.7,
+                                  topology_seed=1)  # seed 0 draws a
+                                  # window-disconnected pair at N=4
+            step_fn, _, _ = steps_lib.make_decentralized_train_step(
+                model, robust, train, mesh, robust.topology)
+            with compat.use_mesh(mesh):
+                params = model.init(jax.random.PRNGKey(0))
+                nodes = jax.tree_util.tree_map(
+                    lambda p: jnp.broadcast_to(p[None], (4,) + p.shape) + 0,
+                    params)
+                state = {"params": nodes, "opt": (),
+                         "step": jnp.zeros((), jnp.int32)}
+                jstep = jax.jit(step_fn)
+                for i in range(2):
+                    batch = make_batch(jax.random.PRNGKey(5), cfg, 4, 2, 32)
+                    state, m = jstep(state, batch, jax.random.PRNGKey(9))
+                outs[comm] = state["params"]
+            assert np.isfinite(float(m["consensus_dist"]))
+        for a, b in zip(jax.tree_util.tree_leaves(outs["gather"]),
+                        jax.tree_util.tree_leaves(outs["sharded"])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-3, atol=2e-4)
+        print("PARAMS_SCHEDULE_TRAIN_EQUAL")
+    """, timeout=600)
+    assert "PARAMS_SCHEDULE_TRAIN_EQUAL" in out
 
 
 @pytest.mark.parametrize("attack", ATTACK_NAMES)

@@ -182,3 +182,79 @@ def test_saga_property(j, p, idx_frac, seed):
     want = ref.saga_correct(grad, table, avg, idx)
     for g, w_ in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w_), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("j,p", [(4, 512), (7, 300)])
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_saga_kernel_vs_core_scatter_cross_check(j, p, dt):
+    """ops.saga_correct (fused Pallas) against core/saga.saga_correct_scatter
+    (the production scatter path) DIRECTLY -- both are verified against
+    ref.py elsewhere, but nothing pinned them against each other.  Includes
+    the aliased table-row contract: msg/new_avg must read the OLD row of
+    the very row the update overwrites, the overwritten row must be the
+    fresh gradient bit-exactly, and every other row must be untouched."""
+    from repro.core import saga as core_saga
+    ks = jax.random.split(KEY, 3)
+    grad = jax.random.normal(ks[0], (p,)).astype(dt)
+    table = jax.random.normal(ks[1], (j, p)).astype(dt)
+    avg = jnp.mean(table.astype(jnp.float32), axis=0).astype(dt)
+    tol = _tol(dt)
+    for idx in (0, j // 2, j - 1):
+        k_msg, k_avg, k_tab = ops.saga_correct(grad, table, avg,
+                                               jnp.asarray(idx, jnp.int32))
+        st = core_saga.SagaState(table={"p": table[None]}, avg={"p": avg[None]})
+        msgs, new_st = core_saga.saga_correct_scatter(
+            st, {"p": grad[None]}, jnp.asarray([idx], jnp.int32))
+        np.testing.assert_allclose(np.asarray(k_msg, np.float32),
+                                   np.asarray(msgs["p"][0], np.float32),
+                                   **tol, err_msg=f"msg idx={idx}")
+        np.testing.assert_allclose(np.asarray(k_avg, np.float32),
+                                   np.asarray(new_st.avg["p"][0], np.float32),
+                                   **tol, err_msg=f"avg idx={idx}")
+        # Table updates agree BITWISE between the two implementations: the
+        # overwritten row is the cast gradient, the rest pass through.
+        np.testing.assert_array_equal(
+            np.asarray(k_tab, np.float32),
+            np.asarray(new_st.table["p"][0], np.float32),
+            err_msg=f"table idx={idx}")
+        np.testing.assert_array_equal(np.asarray(k_tab[idx], np.float32),
+                                      np.asarray(grad.astype(dt), np.float32))
+        keep = [r for r in range(j) if r != idx]
+        np.testing.assert_array_equal(
+            np.asarray(k_tab, np.float32)[keep],
+            np.asarray(table, np.float32)[keep])
+        # Aliasing: the message must be built from the OLD row (g - old +
+        # avg), not the row the kernel just overwrote (g - g + avg = avg).
+        old_based = (grad.astype(jnp.float32)
+                     - table[idx].astype(jnp.float32)
+                     + avg.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(k_msg, np.float32),
+                                   np.asarray(old_based), **tol)
+        assert not np.allclose(np.asarray(k_msg, np.float32),
+                               np.asarray(avg, np.float32), atol=1e-2)
+
+
+@pytest.mark.parametrize("dt", DTYPES, ids=["f32", "bf16"])
+def test_saga_kernel_vs_core_scatter_multiworker(dt):
+    """Stacked-worker agreement: vmapping the fused kernel over W workers
+    (each drawing its own table row) matches one saga_correct_scatter call
+    on the (W, J, p) state."""
+    from repro.core import saga as core_saga
+    w, j, p = 3, 5, 256
+    ks = jax.random.split(KEY, 3)
+    grads = jax.random.normal(ks[0], (w, p)).astype(dt)
+    tables = jax.random.normal(ks[1], (w, j, p)).astype(dt)
+    avgs = jnp.mean(tables.astype(jnp.float32), axis=1).astype(dt)
+    idx = jnp.asarray([0, 3, 4], jnp.int32)
+    k_msg, k_avg, k_tab = jax.vmap(
+        lambda g, t, a, i: ops.saga_correct(g, t, a, i))(grads, tables,
+                                                         avgs, idx)
+    st = core_saga.SagaState(table={"p": tables}, avg={"p": avgs})
+    msgs, new_st = core_saga.saga_correct_scatter(st, {"p": grads}, idx)
+    tol = _tol(dt)
+    np.testing.assert_allclose(np.asarray(k_msg, np.float32),
+                               np.asarray(msgs["p"], np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(k_avg, np.float32),
+                               np.asarray(new_st.avg["p"], np.float32), **tol)
+    np.testing.assert_array_equal(np.asarray(k_tab, np.float32),
+                                  np.asarray(new_st.table["p"], np.float32))
