@@ -1,0 +1,324 @@
+"""End-to-end train-step wall-clock: flat-packed vs per-leaf hot path.
+
+The DESIGN.md Sec. 8 claim made measurable: for every (aggregator, path)
+cell this times the FULL Byzantine-robust training step -- per-worker
+grads, SAGA correction, attack injection, robust aggregation, optimizer --
+with the flat-packed pipeline (``RobustConfig.packed=True``, the default)
+against the pre-refactor per-leaf pipeline (``packed=False``), and emits
+``BENCH_step.json`` plus a markdown ratio table.
+
+    PYTHONPATH=src python benchmarks/bench_step.py [--quick] [--gate] \\
+        [--steps N] [--reps R] [--out BENCH_step.json]
+
+Paths:
+
+* ``sim``     -- the single-host simulated federation
+  (``make_federated_step``) on a deep-MLP workload with MANY small
+  parameter blocks -- the regime the packing targets (per-leaf dispatch
+  multiplies kernel launches by num_leaves).
+* ``gather`` / ``sharded`` -- the distributed ``make_train_step`` on the
+  4x2 host mesh (8 forced devices), reduced mamba2 model.  The sharded
+  comm path re-shards by coordinate inside shard_map either way, so its
+  packed/per-leaf cells differ only in the attack/packing stage.
+
+``--gate`` turns the run into the STEP-LEVEL PERF GATE (wired into CI with
+``--quick``): it fails the job if any cell's packed path is slower than
+per-leaf beyond a noise margin (on ``wall_us_min``, the noise-robust
+statistic), or if the sim geomed/krum cells -- the aggregation-dominated
+ones -- fall short of the 1.3x speedup floor.
+
+Process layout: the sim cells run IN-PROCESS on the natural device count
+(one CPU device -- forcing 8 host devices splits the XLA threadpool and
+drowns the sim numbers in scheduler noise on small containers), while the
+gather/sharded cells run in a SUBPROCESS with 8 forced host devices
+(``--distributed-only``), whose rows are merged into the report.
+"""
+import argparse
+import json
+import math
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core import AGGREGATOR_NAMES, RobustConfig, make_federated_step
+from repro.data import ijcnn1_like, partition
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+from repro.optim import get_optimizer
+
+SCHEMA = "BENCH_step/v1"
+
+QUICK_AGGREGATORS = ("geomed", "krum", "mean")
+# The gate's speedup floor applies to the aggregation-dominated sim cells.
+GATE_SPEEDUP_CELLS = ("geomed", "krum")
+GATE_SPEEDUP_FLOOR = 1.3
+# "No slower" allows this much wall-clock noise on ~1.0x cells.
+GATE_NOISE_MARGIN = 1.15
+
+# Simulated-federation workload: a deep MLP with MANY small parameter
+# blocks (34 leaves) -- per-leaf dispatch cost scales with the block count,
+# packed cost does not.
+MLP_LAYERS, MLP_HIDDEN = 16, 16
+SIM_HONEST, SIM_BYZANTINE = 16, 4
+
+
+def mlp_params(key, din=22, h=MLP_HIDDEN):
+    p = {}
+    ks = jax.random.split(key, MLP_LAYERS + 1)
+    for i in range(MLP_LAYERS):
+        p[f"w{i}"] = 0.3 * jax.random.normal(ks[i], (din if i == 0 else h, h))
+        p[f"b{i}"] = jnp.zeros((h,))
+    p["wout"] = 0.3 * jax.random.normal(ks[-1], (h,))
+    p["bout"] = jnp.zeros(())
+    return p
+
+
+def mlp_loss(params, batch):
+    x, y = batch["a"], batch["b"]
+    for i in range(MLP_LAYERS):
+        x = jnp.tanh(x @ params[f"w{i}"] + params[f"b{i}"])
+    logit = x @ params["wout"] + params["bout"]
+    return jnp.mean(jnp.logaddexp(0.0, -y * logit))
+
+
+def sim_cfg(name: str, packed: bool) -> RobustConfig:
+    return RobustConfig(aggregator=name, vr="saga", attack="sign_flip",
+                        num_byzantine=SIM_BYZANTINE, weiszfeld_iters=32,
+                        num_groups=4, packed=packed)
+
+
+def time_steps(jstep, state, step_args, steps: int, reps: int) -> dict:
+    """Per-step wall-clock: ``reps`` measurements of ``steps`` steps each
+    (state threaded through, so donation works like the real loop)."""
+    state = jstep(state, *step_args)[0]  # compile + warm
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, _ = jstep(state, *step_args)
+        jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+        times.append((time.perf_counter() - t0) / steps)
+    return {"wall_us_mean": sum(times) / len(times) * 1e6,
+            "wall_us_min": min(times) * 1e6}
+
+
+def bench_sim(name: str, packed: bool, steps: int, reps: int, wd) -> dict:
+    cfg = sim_cfg(name, packed)
+    init_fn, step_fn = make_federated_step(mlp_loss, wd, cfg,
+                                           get_optimizer("sgd", 0.05))
+    state = init_fn(mlp_params(jax.random.PRNGKey(1)), jax.random.PRNGKey(3))
+    jstep = steps_lib.compile_train_step(step_fn)
+    t = time_steps(jstep, state, (), steps, reps)
+    p = mlp_params(jax.random.PRNGKey(1))
+    return {
+        "path": "sim", "aggregator": name, "packed": packed,
+        "num_workers": SIM_HONEST + SIM_BYZANTINE,
+        "num_byzantine": SIM_BYZANTINE, "vr": cfg.vr, "attack": cfg.attack,
+        "leaves": len(jax.tree_util.tree_leaves(p)),
+        "coords": sum(int(x.size) for x in jax.tree_util.tree_leaves(p)),
+        "steps": steps, "reps": reps, **t,
+    }
+
+
+def bench_distributed(name: str, comm: str, packed: bool, steps: int,
+                      reps: int, dist) -> dict:
+    from repro.configs.base import TrainConfig
+    from repro.launch.train import make_batch
+    model, mesh, cfg_model = dist
+    robust = RobustConfig(aggregator=name, vr="sgd", attack="sign_flip",
+                          num_byzantine=1, comm=comm, weiszfeld_iters=16,
+                          num_groups=2, packed=packed)
+    step_fn, _, _ = steps_lib.make_train_step(
+        model, robust, TrainConfig(optimizer="sgd", lr=0.05), mesh)
+    with compat.use_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        state = {"params": params, "opt": (),
+                 "step": jnp.zeros((), jnp.int32)}
+        batch = make_batch(jax.random.PRNGKey(5), cfg_model, 4, 1, 32)
+        jstep = steps_lib.compile_train_step(step_fn)
+        t = time_steps(jstep, state, (batch, jax.random.PRNGKey(9)),
+                       steps, reps)
+    leaves = jax.tree_util.tree_leaves(model.param_structs())
+    return {
+        "path": comm, "aggregator": name, "packed": packed,
+        "num_workers": 4, "num_byzantine": 1, "vr": "sgd",
+        "attack": "sign_flip", "leaves": len(leaves),
+        "coords": sum(math.prod(s.shape) for s in leaves),
+        "steps": steps, "reps": reps, **t,
+    }
+
+
+def run_gate(rows) -> list:
+    """The step-level perf gate: packed must never lose beyond noise, and
+    must beat the floor on the aggregation-dominated sim cells.  Gates on
+    ``wall_us_min`` -- the minimum over reps is the standard noise-robust
+    microbenchmark statistic (scheduler interference only ever ADDS
+    time)."""
+    by_key = {(r["path"], r["aggregator"], r["packed"]): r["wall_us_min"]
+              for r in rows}
+    failures = []
+    for (path, name, packed), us in sorted(by_key.items()):
+        if packed:
+            continue
+        packed_us = by_key.get((path, name, True))
+        if packed_us is None:
+            continue
+        ratio = us / packed_us
+        if packed_us > us * GATE_NOISE_MARGIN:
+            failures.append(
+                f"{path}/{name}: packed {packed_us:.0f}us is slower than "
+                f"per-leaf {us:.0f}us beyond the {GATE_NOISE_MARGIN}x margin")
+        if path == "sim" and name in GATE_SPEEDUP_CELLS and \
+                ratio < GATE_SPEEDUP_FLOOR:
+            failures.append(
+                f"sim/{name}: packed speedup {ratio:.2f}x is below the "
+                f"{GATE_SPEEDUP_FLOOR}x floor")
+    return failures
+
+
+def distributed_rows(names, steps: int, reps: int) -> list:
+    from repro.configs import get_config
+    from repro.models.api import build_model
+    cfg_model = get_config("mamba2-130m").reduced()
+    mesh = mesh_lib.make_host_mesh((4, 2), ("data", "model"))
+    model = build_model(cfg_model, remat=False, q_chunk=32, kv_chunk=32,
+                        loss_chunk=32)
+    dist = (model, mesh, cfg_model)
+    rows = []
+    for name in names:
+        for comm in ("gather", "sharded"):
+            for packed in (False, True):
+                r = bench_distributed(name, comm, packed,
+                                      max(steps // 5, 2), reps, dist)
+                rows.append(r)
+                print(f"  {comm:7s} {name:18s} packed={packed!s:5s} "
+                      f"{r['wall_us_mean']:10.0f} us/step")
+    return rows
+
+
+def spawn_distributed(args) -> list:
+    """Run the gather/sharded cells in a child process with 8 forced host
+    devices (the parent keeps its natural single device for the sim
+    cells), and merge its rows."""
+    out = tempfile.NamedTemporaryFile(suffix=".json", delete=False)
+    out.close()
+    cmd = [sys.executable, os.path.abspath(__file__), "--distributed-only",
+           "--steps", str(args.steps), "--reps", str(args.reps),
+           "--out", out.name]
+    if args.quick:
+        cmd.append("--quick")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    subprocess.run(cmd, check=True, env=env)
+    with open(out.name) as f:
+        rows = json.load(f)["rows"]
+    os.unlink(out.name)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help=f"only {QUICK_AGGREGATORS} (the CI artifact setting)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail (exit 1) on packed-path perf regressions")
+    ap.add_argument("--steps", type=int, default=30,
+                    help="steps per timing rep (sim; distributed uses 1/5)")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--skip-distributed", action="store_true",
+                    help="simulation cells only (no 8-device mesh)")
+    ap.add_argument("--distributed-only", action="store_true",
+                    help="(internal) gather/sharded cells; needs >= 8 "
+                    "devices (XLA_FLAGS=--xla_force_host_platform_device_"
+                    "count=8)")
+    ap.add_argument("--out", default="BENCH_step.json")
+    args = ap.parse_args()
+
+    names = QUICK_AGGREGATORS if args.quick else AGGREGATOR_NAMES
+    rows = []
+    if args.distributed_only:
+        if jax.device_count() < 8:
+            raise SystemExit(
+                "--distributed-only needs 8 devices; set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=8 before jax init")
+        rows += distributed_rows(names, args.steps, args.reps)
+    else:
+        data = ijcnn1_like(jax.random.PRNGKey(0), n=400)
+        wd = partition({"a": data.x, "b": data.y}, SIM_HONEST, seed=1)
+        for name in names:
+            for packed in (False, True):
+                r = bench_sim(name, packed, args.steps, args.reps, wd)
+                rows.append(r)
+                print(f"  sim     {name:18s} packed={packed!s:5s} "
+                      f"{r['wall_us_mean']:10.0f} us/step")
+        if not args.skip_distributed:
+            rows += spawn_distributed(args)
+
+    report = {
+        "schema": SCHEMA,
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "sim_workers": [SIM_HONEST, SIM_BYZANTINE],
+        "gate": {"speedup_cells": list(GATE_SPEEDUP_CELLS),
+                 "speedup_floor": GATE_SPEEDUP_FLOOR,
+                 "noise_margin": GATE_NOISE_MARGIN},
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"\nwrote {args.out} ({len(rows)} rows)\n")
+
+    print("| path | aggregator | per-leaf us | packed us | speedup |")
+    print("|------|------------|-------------|-----------|---------|")
+    by_key = {(r["path"], r["aggregator"], r["packed"]): r["wall_us_mean"]
+              for r in rows}
+    for (path, name, packed), us in sorted(by_key.items()):
+        if packed:
+            continue
+        pk = by_key[(path, name, True)]
+        print(f"| {path} | {name} | {us:.0f} | {pk:.0f} | {us / pk:.2f}x |")
+
+    if args.gate:
+        failures = run_gate(rows)
+        if failures and not args.distributed_only:
+            # One retry for the sim cells: on a loaded 2-core container a
+            # background burst during either side's timing window can fake
+            # a regression; a fresh measurement of JUST the failing pairs
+            # settles it (min-of-both-runs).  The retried rows are folded
+            # back into the report and the JSON is re-dumped, so the
+            # uploaded artifact always matches the gate verdict.
+            sim_names = {r["aggregator"] for r in rows if r["path"] == "sim"}
+            failing = {f.split(":")[0].split("/")[-1] for f in failures}
+            retried = False
+            for name in sorted(failing & sim_names):
+                for packed in (False, True):
+                    fresh = bench_sim(name, packed, args.steps, args.reps, wd)
+                    for r in rows:
+                        if (r["path"], r["aggregator"], r["packed"]) == \
+                                ("sim", name, packed) and \
+                                fresh["wall_us_min"] < r["wall_us_min"]:
+                            r.update(wall_us_min=fresh["wall_us_min"],
+                                     wall_us_mean=fresh["wall_us_mean"])
+                            retried = True
+            if retried:
+                with open(args.out, "w") as f:
+                    json.dump(report, f, indent=1)
+                print(f"rewrote {args.out} with retried sim cells")
+            failures = run_gate(rows)
+        if failures:
+            print("\nSTEP PERF GATE FAILED:")
+            for fmsg in failures:
+                print(" ", fmsg)
+            raise SystemExit(1)
+        print("\nstep perf gate OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -46,11 +46,13 @@ def run_algorithm(loss, wd, cfg: RobustConfig, lr: float, steps: int = STEPS):
     st = init_fn({"w": jnp.zeros((p,), jnp.float32)}, jax.random.PRNGKey(11))
     jstep = jax.jit(step_fn)
     st, metrics = jstep(st)  # compile
-    t0 = time.time()
+    # perf_counter, not time.time: monotonic and ns-resolution, so µs-scale
+    # steps are not swamped by clock quantization or NTP steps.
+    t0 = time.perf_counter()
     for _ in range(steps - 1):
         st, metrics = jstep(st)
     jax.block_until_ready(st.params["w"])
-    us = (time.time() - t0) / (steps - 1) * 1e6
+    us = (time.perf_counter() - t0) / (steps - 1) * 1e6
     return st, metrics, us
 
 

@@ -58,10 +58,10 @@ def main(steps: int = 500) -> None:
                              jax.random.PRNGKey(5))
                 jstep = jax.jit(step_fn)
                 import time
-                t0 = time.time()
+                t0 = time.perf_counter()
                 for _ in range(steps):
                     st, _ = jstep(st)
-                us = (time.time() - t0) / steps * 1e6
+                us = (time.perf_counter() - t0) / steps * 1e6
                 common.emit(f"table1/{attack}/{label}-{agg}", us,
                             accuracy(st.params, test_batch))
 

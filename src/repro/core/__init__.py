@@ -5,6 +5,7 @@ from repro.core.aggregators import (
     geomed_blockwise_agg,
     geomed_groups_agg,
     get_aggregator,
+    get_flat_aggregator,
     krum_agg,
     krum_scores,
     mean_agg,
@@ -16,9 +17,11 @@ from repro.core.geomed import (
     geomed_objective,
     weiszfeld,
     weiszfeld_blockwise_sharded,
+    weiszfeld_flat,
     weiszfeld_pytree,
     weiszfeld_sharded,
 )
+from repro.core.packing import PackSpec, pack_spec
 from repro.core.robust_step import (
     GATHER_AGGREGATORS,
     SHARDED_AGGREGATORS,

@@ -12,66 +12,80 @@ Every aggregator consumes a pytree whose leaves carry a leading worker axis
 * ``krum``          -- Krum selection [14]; needs B in advance (as noted in
                        the paper, Sec. III-B).
 
+Since the flat-packed refactor (DESIGN.md Sec. 8) the ENGINE of every rule
+operates on one packed ``(W, D)`` message matrix (:mod:`repro.core.packing`)
+-- one kernel per reduction instead of one per pytree leaf -- and the
+pytree API above is a thin ``pack -> flat rule -> unpack`` shim, so the
+registry, the launch layer and the tests are unchanged.  The flat rules
+are exposed directly via :func:`get_flat_aggregator` for callers that
+already hold packed buffers (the packed train steps).  The pre-refactor
+per-leaf implementations are retained under ``get_aggregator(name,
+perleaf=True)``: they are the baseline that ``benchmarks/bench_step.py``
+times the packed path against, and the tolerance anchor for the
+refactor-regression tests.
+
 A registry (``_REGISTRY`` / :func:`get_aggregator`) builds
 ``fn(stacked_tree) -> tree`` from a name + options so the training loop
 composes them freely; ``AGGREGATOR_NAMES`` and the unknown-name error are
-derived from the registry, so adding an entry updates both.  Every
-registered rule also runs on BOTH distributed comm paths
+derived from the registry, so adding an entry updates both (a flat rule is
+required for every entry -- the registries are pinned against each other).
+Every registered rule also runs on BOTH distributed comm paths
 (``comm="gather"`` and ``comm="sharded"``, see
 :mod:`repro.core.robust_step` and DESIGN.md Sec. 2).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.geomed import weiszfeld_pytree
+from repro import compat
+from repro.core import packing
+from repro.core.geomed import weiszfeld_flat, weiszfeld_pytree
 
 Pytree = Any
 Aggregator = Callable[[Pytree], Pytree]
+FlatAggregator = Callable[[jnp.ndarray], jnp.ndarray]  # (W, D) -> (D,) f32
 
 
-def _per_leaf(fn):
-    def agg(stacked: Pytree) -> Pytree:
-        return jax.tree_util.tree_map(fn, stacked)
-    return agg
+# ---------------------------------------------------------------------------
+# Flat engine: every rule on one packed (W, D) message matrix.
+# Contract: input is the packed buffer (any float dtype); output is the
+# (D,) float32 aggregate (callers unpack/cast).  ``axis_names``/``sync_axes``
+# follow the weiszfeld_pytree convention for shard_map execution.
+# ---------------------------------------------------------------------------
+
+def mean_flat(buf: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(buf.astype(jnp.float32), axis=0)
 
 
-def mean_agg(stacked: Pytree) -> Pytree:
-    return jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0), stacked)
+def median_flat(buf: jnp.ndarray) -> jnp.ndarray:
+    return jnp.median(buf.astype(jnp.float32), axis=0)
 
 
-def median_agg(stacked: Pytree) -> Pytree:
-    """Coordinate-wise median over the worker axis."""
-    return jax.tree_util.tree_map(lambda z: jnp.median(z, axis=0).astype(z.dtype), stacked)
+def trimmed_mean_flat(buf: jnp.ndarray, *, trim: int) -> jnp.ndarray:
+    w = buf.shape[0]
+    if 2 * trim >= w:
+        raise ValueError(f"trim={trim} too large for W={w}")
+    s = jnp.sort(buf.astype(jnp.float32), axis=0)
+    return jnp.mean(s[trim : w - trim], axis=0)
 
 
-def trimmed_mean_agg(stacked: Pytree, *, trim: int) -> Pytree:
-    """Coordinate-wise trimmed mean: drop the ``trim`` largest and smallest
-    entries per coordinate, average the rest."""
-
-    def leaf(z):
-        w = z.shape[0]
-        if 2 * trim >= w:
-            raise ValueError(f"trim={trim} too large for W={w}")
-        s = jnp.sort(z, axis=0)
-        kept = s[trim : w - trim]
-        return jnp.mean(kept, axis=0).astype(z.dtype)
-
-    return jax.tree_util.tree_map(leaf, stacked)
-
-
-def geomed_agg(stacked: Pytree, *, max_iters: int = 64, tol: float = 1e-6) -> Pytree:
-    return weiszfeld_pytree(stacked, max_iters=max_iters, tol=tol)
+def geomed_flat(buf: jnp.ndarray, *, max_iters: int = 64, tol: float = 1e-6,
+                axis_names: Sequence[str] = (),
+                sync_axes: Sequence[str] = ()) -> jnp.ndarray:
+    return weiszfeld_flat(buf, max_iters=max_iters, tol=tol,
+                          axis_names=axis_names, sync_axes=sync_axes)
 
 
 def group_means(z: jnp.ndarray, num_groups: int) -> jnp.ndarray:
     """Contiguous-block group means over the worker axis (the worker
     partition of [10]/[18]); tolerates W not divisible by num_groups
-    (block sizes differ by at most one)."""
+    (block sizes differ by at most one).  Works on any (W, ...) leaf --
+    including the packed (W, D) buffer, where it IS the flat group
+    reduction."""
     w = z.shape[0]
     ids = (jnp.arange(w) * num_groups) // w
     flat = z.reshape(w, -1).astype(jnp.float32)
@@ -81,30 +95,26 @@ def group_means(z: jnp.ndarray, num_groups: int) -> jnp.ndarray:
     return (sums / counts[:, None]).reshape((num_groups,) + z.shape[1:]).astype(z.dtype)
 
 
-def geomed_groups_agg(
-    stacked: Pytree, *, num_groups: int, max_iters: int = 64, tol: float = 1e-6
-) -> Pytree:
-    """Geometric median of group means.
-
-    Workers are split into ``num_groups`` round-robin groups; each group is
-    mean-reduced (cheap: an all-reduce over the sub-axis when distributed),
-    and the geometric median is taken across the group means.  Reduces both
-    the collective volume (W*p -> G*p) and the inner variation fed to the
-    geomed (variance / group_size), at the price of a lower breakdown point
-    (one Byzantine worker poisons its whole group, so tolerance drops to
-    num_groups/2 poisoned groups).
-    """
-    grouped = jax.tree_util.tree_map(
-        functools.partial(group_means, num_groups=num_groups), stacked)
-    return weiszfeld_pytree(grouped, max_iters=max_iters, tol=tol)
+def geomed_groups_flat(buf: jnp.ndarray, *, num_groups: int,
+                       max_iters: int = 64, tol: float = 1e-6,
+                       axis_names: Sequence[str] = (),
+                       sync_axes: Sequence[str] = ()) -> jnp.ndarray:
+    grouped = group_means(buf.astype(jnp.float32), num_groups)  # (G, D)
+    return weiszfeld_flat(grouped, max_iters=max_iters, tol=tol,
+                          axis_names=axis_names, sync_axes=sync_axes)
 
 
-def _pairwise_sq_dists(stacked: Pytree) -> jnp.ndarray:
-    """(W, W) matrix of squared distances over full concatenated messages."""
-    leaves = [z.reshape(z.shape[0], -1).astype(jnp.float32) for z in jax.tree_util.tree_leaves(stacked)]
-    flat = jnp.concatenate(leaves, axis=-1)
-    sq = jnp.sum(flat**2, axis=-1)
+def flat_sq_dists(flat: jnp.ndarray,
+                  axis_names: Sequence[str] = ()) -> jnp.ndarray:
+    """(W, W) pairwise squared distances of packed (W, D) messages.  When
+    the rows are coordinate shards inside shard_map, the Gram partials are
+    psum'd over ``axis_names`` (squared distances are separable over any
+    coordinate partition)."""
+    flat = flat.astype(jnp.float32)
+    sq = jnp.sum(flat ** 2, axis=-1)
     d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)
+    if axis_names:
+        d2 = compat.psum(d2, tuple(axis_names))
     return jnp.maximum(d2, 0.0)
 
 
@@ -120,21 +130,152 @@ def krum_scores(d2: jnp.ndarray, num_byzantine: int) -> jnp.ndarray:
     return jnp.sum(jnp.sort(d2, axis=1)[:, :n_near], axis=1)
 
 
+def krum_flat(buf: jnp.ndarray, *, num_byzantine: int,
+              axis_names: Sequence[str] = ()) -> jnp.ndarray:
+    """Krum [14] on the packed buffer: score = sum of squared distances to
+    the W-B-2 nearest other messages; output the winning row."""
+    scores = krum_scores(flat_sq_dists(buf, axis_names), num_byzantine)
+    return buf.astype(jnp.float32)[jnp.argmin(scores)]
+
+
+def centered_clip_flat(buf: jnp.ndarray, *, radius: float = 1.0,
+                       iters: int = 3,
+                       axis_names: Sequence[str] = ()) -> jnp.ndarray:
+    """Centered clipping (Karimireddy et al. 2021) on the packed buffer:
+    v <- v + mean_w clip(m_w - v, radius) iterated from the coordinate
+    median; one fused residual-norm reduction per iteration (psum'd over
+    ``axis_names`` when the rows are coordinate shards)."""
+    b32 = buf.astype(jnp.float32)
+    v = jnp.median(b32, axis=0)
+    for _ in range(iters):
+        diffs = b32 - v[None]
+        sq = jnp.sum(diffs * diffs, axis=-1)
+        if axis_names:
+            sq = compat.psum(sq, tuple(axis_names))
+        scale = jnp.minimum(1.0, radius / jnp.maximum(jnp.sqrt(sq), 1e-12))
+        v = v + jnp.mean(diffs * scale[:, None], axis=0)
+    return v
+
+
+def geomed_blockwise_flat(buf: jnp.ndarray, *, spec: packing.PackSpec,
+                          max_iters: int = 64, tol: float = 1e-6,
+                          axis_names: Sequence[str] = (),
+                          sync_axes: Sequence[str] = ()) -> jnp.ndarray:
+    """Per-leaf geometric median on the packed buffer: each leaf's
+    coordinate slice runs its OWN Weiszfeld loop (independent iteration
+    counts, matching the per-leaf semantics -- an attacker can spend its
+    budget per block, see the pytree docstring).  The slices are static
+    ``spec.boundaries``, so this is trace-time slicing of the one buffer,
+    not a re-materialized pytree; padding coordinates aggregate to zero."""
+    b32 = buf.astype(jnp.float32)
+    parts = [
+        weiszfeld_flat(b32[:, a:b], max_iters=max_iters, tol=tol,
+                       axis_names=axis_names, sync_axes=sync_axes)
+        for a, b in spec.boundaries
+    ]
+    return packing.assemble(parts, pad=spec.pad)
+
+
+# name -> builder(spec, opts) -> FlatAggregator.  In bijection with
+# _REGISTRY below (enforced at import time), so a new rule must land in
+# both or the module fails loudly.
+_FLAT_REGISTRY: dict[str, Callable[[packing.PackSpec, dict], FlatAggregator]] = {
+    "mean": lambda spec, o: mean_flat,
+    "median": lambda spec, o: median_flat,
+    "trimmed_mean": lambda spec, o: functools.partial(
+        trimmed_mean_flat, trim=o.get("trim", 1)),
+    "geomed": lambda spec, o: functools.partial(
+        geomed_flat, max_iters=o.get("max_iters", 64), tol=o.get("tol", 1e-6),
+        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ())),
+    "geomed_groups": lambda spec, o: functools.partial(
+        geomed_groups_flat, num_groups=o["num_groups"],
+        max_iters=o.get("max_iters", 64), tol=o.get("tol", 1e-6),
+        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ())),
+    "krum": lambda spec, o: functools.partial(
+        krum_flat, num_byzantine=o.get("num_byzantine", 0),
+        axis_names=o.get("axis_names", ())),
+    "centered_clip": lambda spec, o: functools.partial(
+        centered_clip_flat, radius=o.get("clip_radius", 1.0),
+        axis_names=o.get("axis_names", ())),
+    "geomed_blockwise": lambda spec, o: functools.partial(
+        geomed_blockwise_flat, spec=spec,
+        max_iters=o.get("max_iters", 64), tol=o.get("tol", 1e-6),
+        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ())),
+}
+
+
+def get_flat_aggregator(name: str, spec: packing.PackSpec,
+                        **opts) -> FlatAggregator:
+    """Build a flat aggregator ``fn(buf (W, D)) -> (D,) f32`` by name.
+
+    Options mirror :func:`get_aggregator`, plus ``axis_names``/``sync_axes``
+    for shard_map execution (rows as coordinate shards)."""
+    try:
+        build = _FLAT_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregator {name!r}; known: "
+            f"{', '.join(sorted(_FLAT_REGISTRY))}") from None
+    return build(spec, opts)
+
+
+# ---------------------------------------------------------------------------
+# Pytree API: thin pack -> flat rule -> unpack shims over the engine.
+# ---------------------------------------------------------------------------
+
+def _via_flat(name: str, stacked: Pytree, opts: dict) -> Pytree:
+    spec = packing.pack_spec(stacked)
+    out = get_flat_aggregator(name, spec, **opts)(spec.pack(stacked))
+    return spec.unpack(out, batch_ndim=0)
+
+
+def mean_agg(stacked: Pytree) -> Pytree:
+    return _via_flat("mean", stacked, {})
+
+
+def median_agg(stacked: Pytree) -> Pytree:
+    """Coordinate-wise median over the worker axis."""
+    return _via_flat("median", stacked, {})
+
+
+def trimmed_mean_agg(stacked: Pytree, *, trim: int) -> Pytree:
+    """Coordinate-wise trimmed mean: drop the ``trim`` largest and smallest
+    entries per coordinate, average the rest."""
+    return _via_flat("trimmed_mean", stacked, {"trim": trim})
+
+
+def geomed_agg(stacked: Pytree, *, max_iters: int = 64, tol: float = 1e-6) -> Pytree:
+    return _via_flat("geomed", stacked, {"max_iters": max_iters, "tol": tol})
+
+
+def geomed_groups_agg(
+    stacked: Pytree, *, num_groups: int, max_iters: int = 64, tol: float = 1e-6
+) -> Pytree:
+    """Geometric median of group means.
+
+    Workers are split into ``num_groups`` contiguous-block groups; each
+    group is mean-reduced (cheap: an all-reduce over the sub-axis when
+    distributed), and the geometric median is taken across the group means.
+    Reduces both the collective volume (W*p -> G*p) and the inner variation
+    fed to the geomed (variance / group_size), at the price of a lower
+    breakdown point (one Byzantine worker poisons its whole group, so
+    tolerance drops to num_groups/2 poisoned groups).
+    """
+    return _via_flat("geomed_groups", stacked,
+                     {"num_groups": num_groups, "max_iters": max_iters,
+                      "tol": tol})
+
+
 def krum_agg(stacked: Pytree, *, num_byzantine: int) -> Pytree:
     """Krum [14]: score(w) = sum of squared distances to the W-B-2 nearest
     other messages; output the message with the minimal score."""
-    best = jnp.argmin(krum_scores(_pairwise_sq_dists(stacked), num_byzantine))
-    return jax.tree_util.tree_map(lambda z: z[best], stacked)
+    return _via_flat("krum", stacked, {"num_byzantine": num_byzantine})
 
 
 def centered_clip_agg(stacked: Pytree, *, radius: float = 1.0,
                       iters: int = 3,
                       axis_names: tuple = ()) -> Pytree:
-    """Centered clipping (Karimireddy et al. 2021) — beyond-paper baseline.
-
-    v <- v + mean_w clip(m_w - v, radius), iterated from the coordinate
-    median; clips the *influence* of any single worker to ``radius`` per
-    iteration, giving a breakdown point of 1/2 with O(W p) work and no sort.
+    """Centered clipping (Karimireddy et al. 2021) -- beyond-paper baseline.
 
     ``axis_names``: mesh axes over which the per-worker squared residual
     partials are psum'd when the leaves are coordinate shards inside a
@@ -143,10 +284,84 @@ def centered_clip_agg(stacked: Pytree, *, radius: float = 1.0,
     paths.  The iterate stays float32 and is cast to the leaf dtypes once at
     the end (see DESIGN.md Sec. 2 on the f32-iterate policy).
     """
+    spec = packing.pack_spec(stacked)
+    out = centered_clip_flat(spec.pack(stacked), radius=radius, iters=iters,
+                             axis_names=axis_names)
+    return spec.unpack(out, batch_ndim=0)
+
+
+def geomed_blockwise_agg(stacked: Pytree, *, max_iters: int = 64,
+                         tol: float = 1e-6) -> Pytree:
+    """Per-leaf geometric median (norms per parameter block, not global).
+
+    Weaker guarantee than full-vector geomed (an attacker can spend its
+    budget per block), but each block aggregates independently -- which is
+    what makes ZeRO/FSDP-sharded robust aggregation possible at >=100B
+    params (no global norm psum across the full gradient).  Beyond-paper.
+    """
+    return _via_flat("geomed_blockwise", stacked,
+                     {"max_iters": max_iters, "tol": tol})
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor per-leaf implementations: the bench baseline + regression
+# anchor (benchmarks/bench_step.py, tests/test_packing.py).  Selected via
+# ``get_aggregator(name, perleaf=True)`` / ``RobustConfig.packed=False``.
+# ---------------------------------------------------------------------------
+
+def mean_agg_perleaf(stacked: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0), stacked)
+
+
+def median_agg_perleaf(stacked: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda z: jnp.median(z, axis=0).astype(z.dtype), stacked)
+
+
+def trimmed_mean_agg_perleaf(stacked: Pytree, *, trim: int) -> Pytree:
+    def leaf(z):
+        w = z.shape[0]
+        if 2 * trim >= w:
+            raise ValueError(f"trim={trim} too large for W={w}")
+        s = jnp.sort(z, axis=0)
+        kept = s[trim : w - trim]
+        return jnp.mean(kept, axis=0).astype(z.dtype)
+
+    return jax.tree_util.tree_map(leaf, stacked)
+
+
+def geomed_agg_perleaf(stacked: Pytree, *, max_iters: int = 64,
+                       tol: float = 1e-6) -> Pytree:
+    return weiszfeld_pytree(stacked, max_iters=max_iters, tol=tol)
+
+
+def geomed_groups_agg_perleaf(
+    stacked: Pytree, *, num_groups: int, max_iters: int = 64, tol: float = 1e-6
+) -> Pytree:
+    grouped = jax.tree_util.tree_map(
+        functools.partial(group_means, num_groups=num_groups), stacked)
+    return weiszfeld_pytree(grouped, max_iters=max_iters, tol=tol)
+
+
+def _pairwise_sq_dists(stacked: Pytree) -> jnp.ndarray:
+    """(W, W) matrix of squared distances over full concatenated messages."""
+    leaves = [z.reshape(z.shape[0], -1).astype(jnp.float32)
+              for z in jax.tree_util.tree_leaves(stacked)]
+    flat = jnp.concatenate(leaves, axis=-1)
+    return flat_sq_dists(flat)
+
+
+def krum_agg_perleaf(stacked: Pytree, *, num_byzantine: int) -> Pytree:
+    best = jnp.argmin(krum_scores(_pairwise_sq_dists(stacked), num_byzantine))
+    return jax.tree_util.tree_map(lambda z: z[best], stacked)
+
+
+def centered_clip_agg_perleaf(stacked: Pytree, *, radius: float = 1.0,
+                              iters: int = 3,
+                              axis_names: tuple = ()) -> Pytree:
     stacked32 = jax.tree_util.tree_map(lambda z: z.astype(jnp.float32), stacked)
 
     def clip_tree(v):
-        # clip scale from the *global* per-worker residual norms (all leaves)
         diffs = jax.tree_util.tree_map(
             lambda zl, vl: zl - vl[None], stacked32, v)
         sq = None
@@ -161,28 +376,22 @@ def centered_clip_agg(stacked: Pytree, *, radius: float = 1.0,
                 dl * scale.reshape((-1,) + (1,) * (dl.ndim - 1)), axis=0),
             v, diffs)
 
-    v = median_agg(stacked32)
+    v = median_agg_perleaf(stacked32)
     for _ in range(iters):
         v = clip_tree(v)
     return jax.tree_util.tree_map(lambda vl, z: vl.astype(z.dtype), v, stacked)
 
 
-def geomed_blockwise_agg(stacked: Pytree, *, max_iters: int = 64,
-                         tol: float = 1e-6) -> Pytree:
-    """Per-leaf geometric median (norms per parameter block, not global).
-
-    Weaker guarantee than full-vector geomed (an attacker can spend its
-    budget per block), but each block aggregates independently -- which is
-    what makes ZeRO/FSDP-sharded robust aggregation possible at >=100B
-    params (no global norm psum across the full gradient).  Beyond-paper.
-    """
+def geomed_blockwise_agg_perleaf(stacked: Pytree, *, max_iters: int = 64,
+                                 tol: float = 1e-6) -> Pytree:
     return jax.tree_util.tree_map(
         lambda z: weiszfeld_pytree(z, max_iters=max_iters, tol=tol), stacked)
 
 
 # name -> builder(opts) -> Aggregator.  AGGREGATOR_NAMES and the
 # unknown-name error below derive from this dict: registering here is the
-# ONE place a new rule is added.
+# ONE place a new rule is added (a matching _FLAT_REGISTRY entry is
+# required; the import-time assertion below keeps the engines in lockstep).
 _REGISTRY: dict[str, Callable[[dict], Aggregator]] = {
     "mean": lambda opts: mean_agg,
     "median": lambda opts: median_agg,
@@ -206,21 +415,48 @@ _REGISTRY: dict[str, Callable[[dict], Aggregator]] = {
         max_iters=opts.get("max_iters", 64), tol=opts.get("tol", 1e-6)),
 }
 
+_PERLEAF_REGISTRY: dict[str, Callable[[dict], Aggregator]] = {
+    "mean": lambda opts: mean_agg_perleaf,
+    "median": lambda opts: median_agg_perleaf,
+    "geomed": lambda opts: functools.partial(
+        geomed_agg_perleaf,
+        max_iters=opts.get("max_iters", 64), tol=opts.get("tol", 1e-6)),
+    "geomed_groups": lambda opts: functools.partial(
+        geomed_groups_agg_perleaf,
+        num_groups=opts["num_groups"],
+        max_iters=opts.get("max_iters", 64), tol=opts.get("tol", 1e-6)),
+    "trimmed_mean": lambda opts: functools.partial(
+        trimmed_mean_agg_perleaf, trim=opts.get("trim", 1)),
+    "krum": lambda opts: functools.partial(
+        krum_agg_perleaf, num_byzantine=opts.get("num_byzantine", 0)),
+    "centered_clip": lambda opts: functools.partial(
+        centered_clip_agg_perleaf, radius=opts.get("clip_radius", 1.0)),
+    "geomed_blockwise": lambda opts: functools.partial(
+        geomed_blockwise_agg_perleaf,
+        max_iters=opts.get("max_iters", 64), tol=opts.get("tol", 1e-6)),
+}
+
+assert set(_REGISTRY) == set(_FLAT_REGISTRY) == set(_PERLEAF_REGISTRY), (
+    "aggregator registries out of sync: every rule needs a pytree shim, a "
+    "flat engine entry, and a per-leaf baseline")
+
 AGGREGATOR_NAMES = tuple(_REGISTRY)
 
 
-def get_aggregator(name: str, **opts) -> Aggregator:
+def get_aggregator(name: str, *, perleaf: bool = False, **opts) -> Aggregator:
     """Build an aggregator by name.
 
     Options: ``geomed``/``geomed_groups``/``geomed_blockwise`` accept
     ``max_iters``/``tol`` (and ``num_groups``); ``trimmed_mean`` accepts
     ``trim``; ``krum`` accepts ``num_byzantine``; ``centered_clip`` accepts
-    ``clip_radius``.
+    ``clip_radius``.  ``perleaf=True`` selects the pre-refactor per-leaf
+    implementation (the bench baseline) instead of the packed engine.
     """
+    registry = _PERLEAF_REGISTRY if perleaf else _REGISTRY
     try:
-        build = _REGISTRY[name]
+        build = registry[name]
     except KeyError:
         raise ValueError(
             f"unknown aggregator {name!r}; known: "
-            f"{', '.join(sorted(_REGISTRY))}") from None
+            f"{', '.join(sorted(registry))}") from None
     return build(opts)

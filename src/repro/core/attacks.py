@@ -21,6 +21,16 @@ Beyond-paper attacks (used to stress the aggregators harder):
                        -eps * mean(honest), a negatively-aligned small
                        perturbation.
 * ``none``          -- no Byzantine rows appended (W = W_h).
+
+Flat-packed execution (DESIGN.md Sec. 8): every attack is a composition of
+axis-0 reductions over the worker axis and elementwise ops, so the SAME
+code runs on a packed ``(W, D)`` message buffer (a single-leaf pytree) --
+the packed train steps pass the buffer straight through.  The one
+layout-dependent piece is the ``gaussian`` attack's draws: pass the
+buffer's :class:`repro.core.packing.PackSpec` as ``spec=`` and the noise
+is drawn PER ORIGINAL LEAF (same key split, same shapes) and packed, so
+packed and per-leaf trajectories stay bit-identical even under the random
+attack.
 """
 from __future__ import annotations
 
@@ -30,6 +40,8 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import packing
 
 Pytree = Any
 Attack = Callable[[Pytree, jax.Array], Pytree]  # (honest_stacked, key) -> full_stacked
@@ -62,9 +74,31 @@ def _broadcast_rows(tree: Pytree, b: int) -> Pytree:
     )
 
 
-def gaussian_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
+def packed_gaussian_noise(spec: packing.PackSpec, key: jax.Array,
+                          batch_shape: tuple[int, ...],
+                          std) -> jnp.ndarray:
+    """Gaussian noise for a packed buffer that mirrors the per-leaf draws
+    bit-for-bit: one key per ORIGINAL leaf (same ``jax.random.split``
+    count), each drawn in the leaf's ``batch_shape + leaf_shape`` layout,
+    then raveled and concatenated like :meth:`PackSpec.pack`.  Padding
+    coordinates get zero noise.  Keeps packed and per-leaf gaussian-attack
+    trajectories identical (module docstring)."""
+    keys = jax.random.split(key, max(spec.num_leaves, 1))
+    parts = [
+        (std * jax.random.normal(k, batch_shape + shape, jnp.float32)
+         ).reshape(batch_shape + (-1,))
+        for k, shape in zip(keys, spec.shapes)
+    ]
+    return packing.assemble(parts, pad=spec.pad, batch_shape=batch_shape)
+
+
+def gaussian_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array,
+                    spec: Optional[packing.PackSpec] = None) -> Pytree:
     mean = _honest_mean(honest)
     std = jnp.sqrt(cfg.gaussian_variance)
+    if spec is not None:
+        noise = packed_gaussian_noise(spec, key, (cfg.num_byzantine,), std)
+        return _append(honest, mean[None] + noise)
     leaves, treedef = jax.tree_util.tree_flatten(mean)
     keys = jax.random.split(key, len(leaves))
     byz = [
@@ -133,15 +167,23 @@ def _check_attack_name(name: str) -> None:
                          f"{', '.join(sorted(_ATTACKS))}")
 
 
-def apply_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
-    """Return the full W-message set seen by the master."""
+def apply_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array,
+                 *, spec: Optional[packing.PackSpec] = None) -> Pytree:
+    """Return the full W-message set seen by the master.
+
+    ``spec``: when ``honest`` is a packed ``(W_h, D)`` buffer, pass its
+    PackSpec so the ``gaussian`` attack mirrors the per-leaf draws (module
+    docstring); deterministic attacks ignore it."""
     _check_attack_name(cfg.name)
     if cfg.num_byzantine == 0:
         return honest
+    if cfg.name == "gaussian":
+        return gaussian_attack(cfg, honest, key, spec)
     return _ATTACKS[cfg.name](cfg, honest, key)
 
 
-def apply_attack_stacked(cfg: AttackConfig, msgs: Pytree, key: jax.Array) -> Pytree:
+def apply_attack_stacked(cfg: AttackConfig, msgs: Pytree, key: jax.Array,
+                         *, spec: Optional[packing.PackSpec] = None) -> Pytree:
     """Variant for the distributed data-parallel path: ``msgs`` holds ALL W
     workers' messages stacked (leading axis W); the first B rows are
     *replaced* by the attack (their honest compute is discarded), leaving
@@ -185,11 +227,16 @@ def apply_attack_stacked(cfg: AttackConfig, msgs: Pytree, key: jax.Array) -> Pyt
             mean, sq)
     elif name == "gaussian":
         std = jnp.sqrt(cfg.gaussian_variance)
-        leaves, treedef = jax.tree_util.tree_flatten(mean)
-        keys = jax.random.split(key, len(leaves))
-        byz = jax.tree_util.tree_unflatten(treedef, [
-            m[None] + std * jax.random.normal(k, (w,) + m.shape, jnp.float32)
-            for m, k in zip(leaves, keys)])
+        if spec is not None:
+            byz = jax.tree_util.tree_map(
+                lambda m: m[None] + packed_gaussian_noise(spec, key, (w,), std),
+                mean)
+        else:
+            leaves, treedef = jax.tree_util.tree_flatten(mean)
+            keys = jax.random.split(key, len(leaves))
+            byz = jax.tree_util.tree_unflatten(treedef, [
+                m[None] + std * jax.random.normal(k, (w,) + m.shape, jnp.float32)
+                for m, k in zip(leaves, keys)])
     else:  # pragma: no cover - guarded by the _ATTACKS check above
         raise ValueError(f"unknown attack {name!r}")
 

@@ -12,6 +12,11 @@ stopped after ``max_iters`` iterations or when the iterate moves less than
 Three entry points:
 
 * :func:`weiszfeld`           -- dense ``(W, p)`` stacked messages.
+* :func:`weiszfeld_flat`      -- one packed ``(W, D)`` message matrix
+                                 (:mod:`repro.core.packing`): the flat
+                                 engine behind the pytree aggregator shims
+                                 (DESIGN.md Sec. 8); one fused distance
+                                 reduction and one psum per iteration.
 * :func:`weiszfeld_pytree`    -- messages are pytrees with a leading worker
                                  axis on every leaf (norms taken over the full
                                  concatenated vector, NOT per-leaf).
@@ -180,6 +185,31 @@ def weiszfeld_pytree(
     state0 = (y0, jnp.asarray(jnp.inf, jnp.float32), 0)
     y, _, _ = jax.lax.while_loop(cond, body, state0)
     return jax.tree_util.tree_map(lambda yl, z: yl.astype(z.dtype), y, stacked)
+
+
+def weiszfeld_flat(
+    buf: jnp.ndarray,
+    *,
+    max_iters: int = 64,
+    tol: float = 1e-6,
+    axis_names: Sequence[str] = (),
+    sync_axes: Sequence[str] = (),
+) -> jnp.ndarray:
+    """Weiszfeld on one packed ``(W, D)`` message matrix -- the flat engine
+    behind the pytree shims (DESIGN.md Sec. 8).
+
+    A 2-D array is the single-leaf case of :func:`weiszfeld_pytree`, so the
+    math is shared: per iteration ONE fused squared-distance reduction over
+    the packed coordinate axis (instead of one per pytree leaf), one fused
+    weighted mean, and -- under ``shard_map`` -- one ``psum`` of W floats
+    over ``axis_names`` (instead of per-leaf collectives).  Returns the
+    ``(D,)`` float32 geometric median; callers unpack/cast.
+    """
+    if buf.ndim != 2:
+        raise ValueError(f"weiszfeld_flat expects (W, D), got {buf.shape}")
+    return weiszfeld_pytree(
+        buf.astype(jnp.float32), max_iters=max_iters, tol=tol,
+        axis_names=axis_names, sync_axes=sync_axes)
 
 
 def weiszfeld_sharded(

@@ -1,0 +1,187 @@
+"""Flat-packed message layout: one (W, D) buffer for the whole federation.
+
+Every hot-path consumer of worker messages -- the robust aggregators, the
+Byzantine attacks, the SAGA correction, the masked topology rules -- is
+mathematically a function of the *concatenated* p-dimensional message
+vector (the paper's master aggregates the whole gradient, eq. (6)), yet
+the original implementation walked the gradient pytree leaf-by-leaf,
+multiplying kernel launches, collectives and HBM sweeps by ``num_leaves``.
+This module provides the static layout that lets the hot path operate on a
+single ``(W, D)`` matrix end-to-end:
+
+* :class:`PackSpec` -- built once per model from the per-message leaf
+  shapes/dtypes: flat sizes, cumulative offsets, the raveled dimension
+  ``D``, an optional pad to a multiple (``pad_to``), and the on-wire
+  ``message_dtype`` (``float32``, or ``bfloat16`` to halve communication
+  volume -- robust rules still accumulate in f32, DESIGN.md Sec. 8).
+* :meth:`PackSpec.pack` -- pytree with any number of leading batch axes
+  (worker axis, (receiver, sender) exchange axes, SAGA (W, J) table axes)
+  ``->`` one ``(*batch, D_padded)`` buffer.  Pure reshape+concat+cast at
+  trace time: no data-dependent work, jit-free.
+* :meth:`PackSpec.unpack` -- the inverse (slice+reshape+cast back to the
+  original leaf dtypes; padding is dropped).
+* :meth:`PackSpec.seg_ids` -- per-coordinate leaf id (padding coordinates
+  get the dummy id ``num_leaves``), the segment map used by blockwise
+  (per-leaf-norm) rules on packed buffers.
+
+The spec is deterministic in the tree structure alone, so independently
+built specs for the same model agree (pinned by ``tests/test_packing.py``),
+and the pytree aggregator API can stay a thin ``pack -> flat rule ->
+unpack`` shim with zero layout ambiguity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def assemble(parts, *, pad: int = 0, batch_shape: tuple[int, ...] = (),
+             dtype: Any = jnp.float32) -> jnp.ndarray:
+    """Concatenate pre-raveled per-leaf pieces (each ``(*batch, n_i)``)
+    into one packed ``(*batch, sum(n_i) + pad)`` buffer, zero-filling the
+    padding tail.
+
+    The ONE implementation of packed-layout assembly -- ``PackSpec.pack``,
+    the spec-mirrored gaussian noise, and the blockwise flat rules all
+    route here, so the empty-tree / single-leaf / padding edge cases can
+    never drift between them.
+    """
+    parts = list(parts)
+    if pad:
+        parts.append(jnp.zeros(batch_shape + (pad,), dtype))
+    if not parts:
+        return jnp.zeros(batch_shape + (0,), dtype)
+    return jnp.concatenate(parts, axis=-1) if len(parts) > 1 else parts[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Static layout of a packed message buffer.
+
+    ``shapes``/``dtypes`` describe ONE message (no batch axes): leaf ``i``
+    occupies the contiguous coordinate range ``offsets[i]:offsets[i] +
+    sizes[i]`` of the packed vector.  ``dim`` is the unpadded raveled
+    dimension; ``padded_dim`` rounds it up to a multiple of ``pad_to``
+    (padding coordinates are zero-filled on pack and dropped on unpack).
+    """
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    sizes: tuple[int, ...]
+    offsets: tuple[int, ...]
+    dim: int
+    padded_dim: int
+    message_dtype: Any = jnp.float32
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.shapes)
+
+    @property
+    def boundaries(self) -> tuple[tuple[int, int], ...]:
+        """Static (start, stop) coordinate range of every leaf."""
+        return tuple((o, o + s) for o, s in zip(self.offsets, self.sizes))
+
+    @property
+    def pad(self) -> int:
+        return self.padded_dim - self.dim
+
+    def pack(self, tree: Pytree, *, batch_ndim: int = 1) -> jnp.ndarray:
+        """Ravel ``tree`` into one ``(*batch, padded_dim)`` buffer.
+
+        Every leaf must carry ``batch_ndim`` leading batch axes followed by
+        its spec shape.  Cast to ``message_dtype`` happens here (the single
+        point where the f32->bf16 wire quantization can occur).
+        """
+        leaves = self.treedef.flatten_up_to(tree)
+        if not leaves:
+            return jnp.zeros((self.padded_dim,), self.message_dtype)
+        batch = leaves[0].shape[:batch_ndim]
+        parts = []
+        for leaf, shape in zip(leaves, self.shapes):
+            if tuple(leaf.shape[batch_ndim:]) != shape:
+                raise ValueError(
+                    f"leaf shape {tuple(leaf.shape)} does not match spec "
+                    f"message shape {shape} under batch_ndim={batch_ndim}")
+            parts.append(jnp.reshape(leaf, batch + (-1,)).astype(
+                self.message_dtype))
+        return assemble(parts, pad=self.pad, batch_shape=batch,
+                        dtype=self.message_dtype)
+
+    def unpack(self, buf: jnp.ndarray, *, batch_ndim: int | None = None
+               ) -> Pytree:
+        """Inverse of :meth:`pack`: restore leaf shapes AND dtypes.
+
+        ``batch_ndim`` defaults to ``buf.ndim - 1`` (everything but the
+        packed coordinate axis is batch).
+        """
+        if batch_ndim is None:
+            batch_ndim = buf.ndim - 1
+        batch = buf.shape[:batch_ndim]
+        if buf.shape[batch_ndim] != self.padded_dim:
+            raise ValueError(
+                f"buffer coordinate axis {buf.shape[batch_ndim]} != "
+                f"spec padded_dim {self.padded_dim}")
+        out = []
+        for (a, b), shape, dtype in zip(self.boundaries, self.shapes,
+                                        self.dtypes):
+            piece = buf[(slice(None),) * batch_ndim + (slice(a, b),)]
+            out.append(jnp.reshape(piece, batch + shape).astype(dtype))
+        return self.treedef.unflatten(out)
+
+    def seg_ids(self) -> jnp.ndarray:
+        """(padded_dim,) int32 leaf id per packed coordinate; padding
+        coordinates carry the dummy id ``num_leaves`` so they join no real
+        block in segmented (blockwise) rules."""
+        ids = np.full((self.padded_dim,), self.num_leaves, np.int32)
+        for i, (a, b) in enumerate(self.boundaries):
+            ids[a:b] = i
+        return jnp.asarray(ids)
+
+    def struct(self, *, batch: tuple[int, ...] = ()) -> jax.ShapeDtypeStruct:
+        """ShapeDtypeStruct of the packed buffer with leading ``batch``."""
+        return jax.ShapeDtypeStruct(batch + (self.padded_dim,),
+                                    self.message_dtype)
+
+
+def pack_spec(tree: Pytree, *, batch_ndim: int = 1,
+              message_dtype: Any = jnp.float32, pad_to: int = 1) -> PackSpec:
+    """Build the :class:`PackSpec` of ``tree``.
+
+    ``tree`` leaves may be arrays or ShapeDtypeStructs; their first
+    ``batch_ndim`` axes are treated as batch (worker/exchange axes) and the
+    rest as the per-message shape.  ``pad_to`` rounds the packed dimension
+    up to a multiple (e.g. the worker count for all_to_all resharding).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(l.shape[batch_ndim:]) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    sizes = tuple(int(math.prod(s)) for s in shapes)
+    offsets = tuple(int(o) for o in np.concatenate(
+        [[0], np.cumsum(sizes)]))[:-1] if sizes else ()
+    dim = int(sum(sizes))
+    padded = dim + ((-dim) % max(pad_to, 1))
+    return PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    sizes=sizes, offsets=offsets, dim=dim, padded_dim=padded,
+                    message_dtype=jnp.dtype(message_dtype))
+
+
+def resolve_message_dtype(name: str | Any) -> Any:
+    """Map a RobustConfig.message_dtype string to a jnp dtype."""
+    if isinstance(name, str):
+        allowed = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+        try:
+            return allowed[name]
+        except KeyError:
+            raise ValueError(
+                f"message_dtype must be one of {sorted(allowed)}, "
+                f"got {name!r}") from None
+    return jnp.dtype(name)

@@ -35,8 +35,10 @@ import numpy as np
 from repro import compat
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
+from repro.core import packing
 from repro.core import saga as saga_lib
-from repro.core.geomed import weiszfeld_blockwise_sharded, weiszfeld_pytree
+from repro.core.geomed import (weiszfeld_blockwise_sharded, weiszfeld_flat,
+                               weiszfeld_pytree)
 from repro.optim import optimizers as optim_lib
 
 Pytree = Any
@@ -77,6 +79,15 @@ class RobustConfig:
     trim: int = 1                     # for trimmed_mean
     clip_radius: float = 1.0          # for centered_clip
     comm: str = "gather"              # gather | sharded (distributed path only)
+    # Flat-packed hot path (DESIGN.md Sec. 8): True (default) packs the
+    # worker messages into one (W, D) buffer once per step and runs SAGA,
+    # attacks and aggregation on it end-to-end; False keeps the pre-refactor
+    # per-leaf pipeline (the benchmarks' baseline).
+    packed: bool = True
+    # On-wire dtype of the packed messages: "float32", or "bfloat16" to
+    # halve communication volume (robust rules still accumulate in f32).
+    # Only honoured on the packed path.
+    message_dtype: str = "float32"
     # Attack knobs (paper defaults).
     gaussian_variance: float = 30.0
     sign_flip_magnitude: float = -3.0
@@ -93,9 +104,14 @@ class RobustConfig:
             ipm_eps=self.ipm_eps,
         )
 
-    def aggregator_fn(self) -> agg_lib.Aggregator:
+    def aggregator_fn(self, *, perleaf: Optional[bool] = None
+                      ) -> agg_lib.Aggregator:
+        """Pytree aggregator for this config.  ``perleaf`` defaults to
+        ``not self.packed`` (the packed path's shim vs the pre-refactor
+        per-leaf baseline)."""
         return agg_lib.get_aggregator(
             self.aggregator,
+            perleaf=(not self.packed) if perleaf is None else perleaf,
             max_iters=self.weiszfeld_iters,
             tol=self.weiszfeld_tol,
             num_groups=self.num_groups,
@@ -103,6 +119,26 @@ class RobustConfig:
             num_byzantine=self.num_byzantine,
             clip_radius=self.clip_radius,
         )
+
+    def message_spec(self, tree: Pytree, *, batch_ndim: int = 1,
+                     pad_to: int = 1) -> packing.PackSpec:
+        """PackSpec of this config's wire messages for ``tree``."""
+        return packing.pack_spec(
+            tree, batch_ndim=batch_ndim, pad_to=pad_to,
+            message_dtype=packing.resolve_message_dtype(self.message_dtype))
+
+    def flat_aggregator_fn(self, spec: packing.PackSpec,
+                           axis_names: Sequence[str] = (),
+                           sync_axes: Sequence[str] = ()
+                           ) -> agg_lib.FlatAggregator:
+        """Flat aggregator ``(W, D) -> (D,) f32`` for this config (the
+        packed hot path; ``axis_names``/``sync_axes`` for shard_map)."""
+        return agg_lib.get_flat_aggregator(
+            self.aggregator, spec,
+            max_iters=self.weiszfeld_iters, tol=self.weiszfeld_tol,
+            num_groups=self.num_groups, trim=self.trim,
+            num_byzantine=self.num_byzantine, clip_radius=self.clip_radius,
+            axis_names=tuple(axis_names), sync_axes=tuple(sync_axes))
 
 
 class FederatedState(NamedTuple):
@@ -202,7 +238,6 @@ def make_federated_step(
     j = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
     grad_fn = jax.grad(loss_fn)
     attack_cfg = cfg.attack_config()
-    aggregate = cfg.aggregator_fn()
 
     def sample_batch(data_w, idx):
         """Select samples ``idx`` (vector) of one worker -> batch pytree."""
@@ -211,54 +246,95 @@ def make_federated_step(
     def per_worker_grad(params, data_w, idx):
         return grad_fn(params, sample_batch(data_w, idx))
 
+    def per_sample_table(params):
+        """Alg. 1 init: table[j] = f'_{w,j}(x^0) for all j -> (W, J, ...)."""
+        def worker_tab(data_w):
+            return jax.vmap(
+                lambda jj: grad_fn(params, sample_batch(data_w, jj[None]))
+            )(jnp.arange(j))
+        return jax.vmap(worker_tab)(worker_data)
+
     def init_fn(params, key) -> FederatedState:
         opt_state = optimizer.init(params)
         saga_state = None
         if cfg.vr == "saga":
-            # Alg. 1 init: table[j] = f'_{w,j}(x^0) for all j.
-            def worker_tab(data_w):
-                return jax.vmap(
-                    lambda jj: grad_fn(params, sample_batch(data_w, jj[None]))
-                )(jnp.arange(j))
-            per_sample = jax.vmap(worker_tab)(worker_data)  # (W, J, ...)
+            per_sample = per_sample_table(params)  # (W, J, ...)
+            if cfg.packed:
+                # The SAGA memory lives packed for the whole run: one
+                # (W, J, D) table, one (W, D) running average.
+                spec = cfg.message_spec(per_sample, batch_ndim=2)
+                per_sample = spec.pack(per_sample, batch_ndim=2)
             saga_state = saga_lib.saga_init(per_sample)
         return FederatedState(params, opt_state, saga_state,
                               jnp.zeros((), jnp.int32), key)
 
-    def step_fn(state: FederatedState):
-        key, k_idx, k_attack = jax.random.split(state.key, 3)
+    def honest_grads(state, k_idx):
+        """Per-worker (SAGA-corrected) honest messages + new SAGA state.
+        Returned leaves are pytrees; the packed step packs BEFORE the SAGA
+        correction so the table scatter is one fused op."""
         params = state.params
-
         if cfg.vr == "minibatch":
             idx = jax.random.randint(k_idx, (wh, cfg.minibatch_size), 0, j)
             honest = jax.vmap(functools.partial(per_worker_grad, params))(worker_data, idx)
-            saga_state = state.saga
-        else:
-            idx = jax.random.randint(k_idx, (wh,), 0, j)
-            honest = jax.vmap(
-                lambda d, i: per_worker_grad(params, d, i[None])
-            )(worker_data, idx)
-            if cfg.vr == "saga":
-                honest, saga_state = saga_lib.saga_correct_scatter(state.saga, honest, idx)
-            else:
-                saga_state = state.saga
+            return honest, idx, state.saga
+        idx = jax.random.randint(k_idx, (wh,), 0, j)
+        honest = jax.vmap(
+            lambda d, i: per_worker_grad(params, d, i[None])
+        )(worker_data, idx)
+        return honest, idx, state.saga
+
+    def step_fn_perleaf(state: FederatedState):
+        """Pre-refactor per-leaf hot path (cfg.packed=False): the bench
+        baseline, byte-for-byte the original pipeline."""
+        key, k_idx, k_attack = jax.random.split(state.key, 3)
+        params = state.params
+        honest, idx, saga_state = honest_grads(state, k_idx)
+        if cfg.vr == "saga":
+            honest, saga_state = saga_lib.saga_correct_scatter(state.saga, honest, idx)
 
         # Honest-message variance (reported in the paper's figures, bottom rows).
-        hm = agg_lib.mean_agg(honest)
+        hm = agg_lib.mean_agg_perleaf(honest)
         var = sum(
             jnp.sum((z.astype(jnp.float32) - m.astype(jnp.float32)[None]) ** 2)
             for z, m in zip(jax.tree_util.tree_leaves(honest), jax.tree_util.tree_leaves(hm))
         ) / wh
 
         msgs = attack_lib.apply_attack(attack_cfg, honest, k_attack)
-        agg = aggregate(msgs)
+        agg = cfg.aggregator_fn(perleaf=True)(msgs)
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
         params = optim_lib.apply_updates(params, updates)
         new_state = FederatedState(params, opt_state, saga_state, state.step + 1, key)
         metrics = {"honest_variance": var}
         return new_state, metrics
 
-    return init_fn, step_fn
+    def step_fn_packed(state: FederatedState):
+        """Flat-packed hot path (DESIGN.md Sec. 8): grads are packed into
+        ONE (W_h, D) buffer right after the per-worker grad vmap; SAGA
+        correction, attack injection, aggregation and the variance metric
+        all run on the buffer; a single unpack feeds the optimizer."""
+        key, k_idx, k_attack = jax.random.split(state.key, 3)
+        params = state.params
+        honest_tree, idx, saga_state = honest_grads(state, k_idx)
+        spec = cfg.message_spec(honest_tree, batch_ndim=1)
+        honest = spec.pack(honest_tree)                       # (W_h, D)
+        if cfg.vr == "saga":
+            honest, saga_state = saga_lib.saga_correct_scatter(
+                state.saga, honest, idx)
+
+        h32 = honest.astype(jnp.float32)
+        var = jnp.sum((h32 - jnp.mean(h32, axis=0)[None]) ** 2) / wh
+
+        msgs = attack_lib.apply_attack(attack_cfg, honest, k_attack,
+                                       spec=spec)             # (W, D)
+        agg_vec = cfg.flat_aggregator_fn(spec)(msgs)          # (D,) f32
+        agg = spec.unpack(agg_vec, batch_ndim=0)
+        updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
+        params = optim_lib.apply_updates(params, updates)
+        new_state = FederatedState(params, opt_state, saga_state, state.step + 1, key)
+        metrics = {"honest_variance": var}
+        return new_state, metrics
+
+    return init_fn, (step_fn_packed if cfg.packed else step_fn_perleaf)
 
 
 # ---------------------------------------------------------------------------
@@ -272,21 +348,11 @@ def _flatten_concat(
 ) -> tuple[jnp.ndarray, Callable[[jnp.ndarray], Pytree], list[int]]:
     """Ravel a pytree into one fp32 vector + inverse (restoring dtypes) +
     the per-leaf flat sizes (the block boundaries sharded geomed_blockwise
-    needs)."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    shapes = [l.shape for l in leaves]
-    dtypes = [l.dtype for l in leaves]
-    sizes = [int(functools.reduce(lambda a, b: a * b, s, 1)) for s in shapes]
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves]) if leaves else jnp.zeros((0,), jnp.float32)
-
-    def unflatten(vec: jnp.ndarray) -> Pytree:
-        out, off = [], 0
-        for s, d, n in zip(shapes, dtypes, sizes):
-            out.append(vec[off : off + n].reshape(s).astype(d))
-            off += n
-        return jax.tree_util.tree_unflatten(treedef, out)
-
-    return flat, unflatten, sizes
+    needs).  Thin wrapper over :mod:`repro.core.packing` so the sharded
+    comm path and the PackSpec layout can never drift apart."""
+    spec = packing.pack_spec(tree, batch_ndim=0)
+    flat = spec.pack(tree, batch_ndim=0)
+    return flat, lambda vec: spec.unpack(vec, batch_ndim=0), list(spec.sizes)
 
 
 def _local_leaf_ids(leaf_sizes: Sequence[int], pad: int, num_workers: int,
@@ -315,7 +381,20 @@ def distributed_aggregate(
     """Paper-faithful ``gather`` master: all_gather every worker's (model-
     sharded) gradient over the worker axes, then run the robust rule
     redundantly on every device.  Collective volume: W * p_shard bytes
-    gathered per device -- the cost the Sec-Perf hillclimb attacks."""
+    gathered per device -- the cost the Sec-Perf hillclimb attacks.
+
+    With ``cfg.packed`` (default) the local shard is packed into ONE
+    vector first, so the gather is a single collective (instead of one per
+    leaf) and the rule runs on the packed (W, D_shard) matrix with one
+    norm psum per iteration (DESIGN.md Sec. 8); ``packed=False`` keeps the
+    pre-refactor per-leaf pipeline."""
+    if cfg.packed:
+        spec = cfg.message_spec(grads, batch_ndim=0)
+        buf = spec.pack(grads, batch_ndim=0)                  # (D_shard,)
+        stacked = compat.all_gather(buf, worker_axes, axis=0, tiled=False)
+        agg_vec = cfg.flat_aggregator_fn(
+            spec, axis_names=model_axes, sync_axes=worker_axes)(stacked)
+        return spec.unpack(agg_vec, batch_ndim=0)
     # Multi-axis all_gather already collapses the worker axes into ONE
     # leading (W_total,) axis in row-major worker order (compat.all_gather),
     # so single- and multi-pod meshes land on the same stacked layout.
@@ -324,11 +403,11 @@ def distributed_aggregate(
     )
     name = cfg.aggregator
     if name == "mean":
-        return agg_lib.mean_agg(stacked)
+        return agg_lib.mean_agg_perleaf(stacked)
     if name == "median":
-        return agg_lib.median_agg(stacked)
+        return agg_lib.median_agg_perleaf(stacked)
     if name == "trimmed_mean":
-        return agg_lib.trimmed_mean_agg(stacked, trim=cfg.trim)
+        return agg_lib.trimmed_mean_agg_perleaf(stacked, trim=cfg.trim)
     if name in ("geomed", "geomed_groups"):
         if name == "geomed_groups":
             stacked = jax.tree_util.tree_map(
@@ -351,7 +430,7 @@ def distributed_aggregate(
     if name == "centered_clip":
         # Full-vector residual norms need a psum over the model axes only
         # (the worker axis is materialized by the all_gather above).
-        return agg_lib.centered_clip_agg(
+        return agg_lib.centered_clip_agg_perleaf(
             stacked, radius=cfg.clip_radius, axis_names=tuple(model_axes))
     raise ValueError(f"unsupported distributed aggregator {name!r}; "
                      f"supported: {GATHER_AGGREGATORS}")
@@ -441,14 +520,14 @@ def sharded_aggregate(
         zz = z_local
         if name == "geomed_groups":
             zz = agg_lib.group_means(zz, cfg.num_groups)
-        slice_agg = weiszfeld_pytree(
+        slice_agg = weiszfeld_flat(
             zz, max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
             axis_names=comm_axes,
         )
     elif name == "centered_clip":
         # Same psum trick as the distributed Weiszfeld: full-vector residual
         # norms are restored by a psum of W floats over worker+model axes.
-        slice_agg = agg_lib.centered_clip_agg(
+        slice_agg = agg_lib.centered_clip_flat(
             z_local, radius=cfg.clip_radius, axis_names=comm_axes)
     elif name == "krum":
         # Pairwise-distance resharding: the (W, W) Gram partials of the

@@ -23,6 +23,15 @@ makes the subsequent robust aggregation effective (Lemma 1 / Thm 1).
 The functions below operate on *stacked-worker* pytrees (leading axis W) so
 they vectorize the whole federation in one call, and equally work inside
 ``shard_map`` where the worker axis is a mesh axis (W=1 locally).
+
+Flat-packed execution (DESIGN.md Sec. 8): every SAGA op is elementwise or
+a gather/scatter along the worker/sample axes, so the same functions run
+unchanged when ``table``/``avg``/``grads`` are packed buffers (``(W, J,
+D)`` / ``(W, D)`` single-array "pytrees", :mod:`repro.core.packing`) --
+one fused correction + one table scatter per step instead of one per
+parameter leaf.  The packed simulation step keeps its SagaState packed for
+the whole run; :func:`pack_saga_state` / :func:`unpack_saga_state` convert
+between the layouts (bit-exact for float32 messages).
 """
 from __future__ import annotations
 
@@ -30,6 +39,8 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import packing
 
 Pytree = Any
 
@@ -71,6 +82,19 @@ def saga_init_zeros(params: Pytree, num_workers: int, num_samples: int,
     table = jax.tree_util.tree_map(lambda p: zeros(p, (num_samples,)), params)
     avg = jax.tree_util.tree_map(lambda p: zeros(p, ()), params)
     return SagaState(table=table, avg=avg)
+
+
+def pack_saga_state(spec: packing.PackSpec, state: SagaState) -> SagaState:
+    """Pytree-layout SagaState -> packed layout (table (W, J, D), avg
+    (W, D)) under ``spec`` (the per-message PackSpec of the model)."""
+    return SagaState(table=spec.pack(state.table, batch_ndim=2),
+                     avg=spec.pack(state.avg, batch_ndim=1))
+
+
+def unpack_saga_state(spec: packing.PackSpec, state: SagaState) -> SagaState:
+    """Inverse of :func:`pack_saga_state`."""
+    return SagaState(table=spec.unpack(state.table),
+                     avg=spec.unpack(state.avg))
 
 
 def saga_correct(

@@ -15,6 +15,15 @@ step of DESIGN.md Sec. 2:
          DESIGN.md Sec. 2);
   5. optimizer update (paper update is plain SGD, eq. (11)).
 
+With ``robust.packed`` (default) steps 3-4 run on ONE packed (W, D)
+message buffer (DESIGN.md Sec. 8) -- a single sharding constraint, a
+single attack pass, and the flat aggregation engine -- instead of walking
+the gradient pytree leaf-by-leaf; ``packed=False`` keeps the pre-refactor
+per-leaf pipeline (the ``benchmarks/bench_step.py`` baseline).  Compile
+the returned step with :func:`compile_train_step` to DONATE the train
+state (params + opt moments + SAGA table): the input buffers are reused
+for the outputs instead of holding two state generations live.
+
 Worker axes may be a single ``data`` axis or multi-pod ``(pod, data)``
 (``launch/mesh.py``); the step builder is agnostic -- it forwards
 ``mesh_lib.worker_axes(mesh)`` everywhere.
@@ -91,6 +100,14 @@ def _saga_structs_like(ps: Pytree, w: int, saga_num_samples: int) -> saga_lib.Sa
             lambda s: jax.ShapeDtypeStruct((w,) + s.shape, s.dtype), ps))
 
 
+# The auto-jit gather master packs only the rules that need FULL-VECTOR
+# message geometry (and therefore replicate the (W, p) matrix anyway);
+# coordinate-separable and per-leaf rules stay leaf-sharded (see the
+# dispatch comment inside make_train_step).
+PACKED_GATHER_RULES = frozenset(
+    {"geomed", "geomed_groups", "krum", "centered_clip"})
+
+
 def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
                     mesh, *, saga_num_samples: int = 0):
     """Returns (train_step, state_specs, make_state_structs).
@@ -133,13 +150,37 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
         else:
             msgs, saga_state = grads, state.get("saga")
 
-        msgs = attack_lib.apply_attack_stacked(
-            attack_cfg, msgs, jax.random.fold_in(key, 2))
-
-        if robust.comm == "sharded":
-            agg = _sharded_agg(msgs, robust, mesh, pspecs)
+        if robust.packed and robust.comm == "gather" and \
+                robust.aggregator in PACKED_GATHER_RULES:
+            # Flat-packed hot path (DESIGN.md Sec. 8): one (W, D) buffer
+            # carries the messages through attack + aggregation.  Only the
+            # FULL-VECTOR rules route here -- they replicate the message
+            # matrix anyway (the Weiszfeld/Gram needs global norms), so
+            # packing collapses their per-leaf launches for free.  The
+            # SAGA state stays per-leaf so its tables keep their
+            # model-axis sharding (DESIGN.md Sec. 4).
+            spec = robust.message_spec(msgs, batch_ndim=1)
+            buf = jax.lax.with_sharding_constraint(
+                spec.pack(msgs), jax.sharding.NamedSharding(mesh, P(waxes)))
+            buf = attack_lib.apply_attack_stacked(
+                attack_cfg, buf, jax.random.fold_in(key, 2), spec=spec)
+            agg = spec.unpack(robust.flat_aggregator_fn(spec)(buf),
+                              batch_ndim=0)
         else:
-            agg = _gather_agg(msgs, robust)
+            # Everything else keeps per-leaf messages: comm="sharded" is
+            # ALREADY coordinate-packed internally (it flattens each
+            # device's leaf shards before the all_to_all, DESIGN.md
+            # Sec. 2), and the coordinate-separable rules (mean/median/
+            # trimmed_mean; geomed_blockwise is per-leaf by definition)
+            # act shard-locally under the auto-sharded jit -- packing them
+            # into one replicated buffer would DESTROY their model-axis
+            # sharding for zero algorithmic gain.
+            msgs = attack_lib.apply_attack_stacked(
+                attack_cfg, msgs, jax.random.fold_in(key, 2))
+            if robust.comm == "sharded":
+                agg = _sharded_agg(msgs, robust, mesh, pspecs)
+            else:
+                agg = _gather_agg(msgs, robust)
 
         updates, opt_state = optimizer.update(agg, state["opt"], params,
                                               state["step"])
@@ -331,11 +372,13 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
 
 
 def _gather_agg(msgs: Pytree, robust: RobustConfig) -> Pytree:
-    """Paper-faithful master: plain stacked aggregation; under jit the
-    Weiszfeld forces an all-gather of the worker axis on every device."""
+    """Paper-faithful master, per-leaf baseline (robust.packed=False):
+    plain stacked aggregation; under jit the Weiszfeld forces an
+    all-gather of the worker axis on every device."""
     name = robust.aggregator
     agg = agg_lib.get_aggregator(
-        name, max_iters=robust.weiszfeld_iters, tol=robust.weiszfeld_tol,
+        name, perleaf=True,
+        max_iters=robust.weiszfeld_iters, tol=robust.weiszfeld_tol,
         num_groups=robust.num_groups, trim=robust.trim,
         num_byzantine=robust.num_byzantine, clip_radius=robust.clip_radius)
     return agg(msgs)
@@ -365,6 +408,29 @@ def _sharded_agg(msgs: Pytree, robust: RobustConfig, mesh,
         is_leaf=lambda x: isinstance(x, P))
     return compat.shard_map(agg_fn, mesh=mesh, in_specs=(in_specs,),
                             out_specs=param_specs, check_vma=False)(msgs)
+
+
+def compile_train_step(step_fn, *, donate_state: bool = True):
+    """jit a train step with the TRAIN STATE DONATED (arg 0).
+
+    The state -- params, optimizer moments, the SAGA table/avg (the largest
+    buffer in the federation: W x J x p), and per-node copies on the
+    decentralized path -- is consumed and re-emitted every step, so
+    donating it lets XLA reuse the input buffers for the outputs instead
+    of holding both generations live (halves peak state memory; in-place
+    updates on backends that support donation).  Works for both state
+    conventions: the dict state of the distributed steps
+    (``step(state, batch, key)``) and the :class:`FederatedState` of the
+    simulation steps (``step(state)``).
+
+    CONTRACT: after calling the compiled step, the caller must treat the
+    passed-in state as dead (its buffers may be deleted) and continue from
+    the returned state -- the standard training-loop pattern.  Never feed
+    the same state object twice (``tests/test_donation.py`` pins the
+    re-use-after-donation behaviour), and batches/keys are NOT donated
+    (callers may reuse them across steps).
+    """
+    return jax.jit(step_fn, donate_argnums=(0,) if donate_state else ())
 
 
 # ---------------------------------------------------------------------------

@@ -86,6 +86,14 @@ def main() -> None:
                     "G(N, p) per round")
     ap.add_argument("--schedule-period", type=int, default=4,
                     help="rounds per erdos_renyi schedule period")
+    ap.add_argument("--per-leaf", action="store_true",
+                    help="disable the flat-packed hot path (DESIGN.md "
+                    "Sec. 8) and run the pre-refactor per-leaf pipeline")
+    ap.add_argument("--message-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="on-wire dtype of the packed worker messages; "
+                    "bfloat16 halves communication volume (robust rules "
+                    "still accumulate in f32)")
     ap.add_argument("--vr", default="sgd", choices=["sgd", "saga"])
     ap.add_argument("--saga-samples", type=int, default=4)
     ap.add_argument("--optimizer", default="adamw")
@@ -121,7 +129,8 @@ def main() -> None:
         num_byzantine=args.byzantine, comm=args.comm, weiszfeld_iters=16,
         topology=args.topology, topology_seed=args.topology_seed,
         topology_p=args.topology_p, gossip=args.gossip,
-        schedule=args.schedule, schedule_period=args.schedule_period)
+        schedule=args.schedule, schedule_period=args.schedule_period,
+        packed=not args.per_leaf, message_dtype=args.message_dtype)
     train = TrainConfig(optimizer=args.optimizer, lr=args.lr)
     from repro.core.robust_step import resolve_schedule
     sched = resolve_schedule(robust, w)
@@ -160,7 +169,9 @@ def main() -> None:
             if step0 is not None:
                 start = step0
                 print(f"resumed full train state from step {step0}")
-        jstep = jax.jit(step_fn, donate_argnums=(0,))
+        # State donation lives in the step compiler (launch/steps.py):
+        # params, opt moments and the SAGA table are all in arg 0.
+        jstep = steps_lib.compile_train_step(step_fn)
         t0 = time.time()
         for i in range(start, args.steps):
             bkey = jax.random.fold_in(key, 1000 + i)

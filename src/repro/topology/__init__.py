@@ -14,6 +14,7 @@ from repro.topology.graphs import (
 from repro.topology.masked import (
     MASKED_AGGREGATOR_NAMES,
     masked_aggregate,
+    masked_aggregate_flat,
     masked_centered_clip,
     masked_geomed_blockwise,
     masked_geomed_groups,

@@ -47,12 +47,14 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core import attacks as attack_lib
+from repro.core import packing
 from repro.core import saga as saga_lib
 from repro.core.robust_step import (FederatedState, _flatten_concat,
                                     _local_leaf_ids)
 from repro.optim import optimizers as optim_lib
 from repro.topology.graphs import Topology
-from repro.topology.masked import masked_aggregate, masked_weiszfeld_segments
+from repro.topology.masked import (masked_aggregate, masked_aggregate_flat,
+                                   masked_weiszfeld_segments)
 from repro.topology.schedule import as_schedule, validate_schedule
 
 Pytree = Any
@@ -81,6 +83,8 @@ def build_exchange(
     mask: jnp.ndarray,
     is_byz: jnp.ndarray,
     key: Optional[jax.Array] = None,
+    *,
+    spec: Optional[packing.PackSpec] = None,
 ) -> Pytree:
     """Materialize the per-edge message exchange.
 
@@ -93,9 +97,12 @@ def build_exchange(
     threat model of DESIGN.md Sec. 1 already grants attackers these stats).
 
     All rules are coordinate-separable, so the same construction runs on
-    full messages (simulation), model shards (gather) and coordinate slices
-    (sharded) with no communication; only the ``gaussian`` attack's draws
-    are layout-dependent (same caveat as the master-path attack variants).
+    full messages (simulation), model shards (gather), coordinate slices
+    (sharded) AND the packed (S, D) message buffer of DESIGN.md Sec. 8
+    with no communication; only the ``gaussian`` attack's draws are
+    layout-dependent -- pass the buffer's PackSpec as ``spec=`` and they
+    mirror the per-leaf draws bit-for-bit (same caveat/fix as the
+    master-path attack variants).
     """
     r = mask.shape[0]
     if cfg.name not in attack_lib.ATTACK_NAMES:
@@ -138,13 +145,18 @@ def build_exchange(
         if key is None:
             raise ValueError("gaussian attack needs a key")
         std = jnp.sqrt(cfg.gaussian_variance)
-        leaves, treedef = jax.tree_util.tree_flatten(mean)
-        keys = jax.random.split(key, len(leaves))
         s = mask.shape[1]
-        byz = jax.tree_util.tree_unflatten(treedef, [
-            m[:, None] + std * jax.random.normal(
-                k, (r, s) + m.shape[1:], jnp.float32)
-            for m, k in zip(leaves, keys)])
+        if spec is not None:
+            byz = jax.tree_util.tree_map(
+                lambda m: m[:, None] + attack_lib.packed_gaussian_noise(
+                    spec, key, (r, s), std), mean)
+        else:
+            leaves, treedef = jax.tree_util.tree_flatten(mean)
+            keys = jax.random.split(key, len(leaves))
+            byz = jax.tree_util.tree_unflatten(treedef, [
+                m[:, None] + std * jax.random.normal(
+                    k, (r, s) + m.shape[1:], jnp.float32)
+                for m, k in zip(leaves, keys)])
     else:
         # Reachable for a name that IS in the registry: every attack needs
         # an explicit per-edge generalization here (receiver-local stats),
@@ -254,30 +266,46 @@ def make_decentralized_step(
                     lambda jj: grad_fn(params, sample_batch(data_w, jj[None]))
                 )(jnp.arange(j))
             per_sample = jax.vmap(worker_tab)(worker_data)
+            if cfg.packed:
+                # Packed SAGA memory, same as the master path (Sec. 8).
+                spec = cfg.message_spec(per_sample, batch_ndim=2)
+                per_sample = spec.pack(per_sample, batch_ndim=2)
             saga_state = saga_lib.saga_init(per_sample)
         return FederatedState(nodes, opt_state, saga_state,
                               jnp.zeros((), jnp.int32), key)
 
-    def step_fn(state):
-        key, k_idx, k_attack = jax.random.split(state.key, 3)
-        mask = sched.mask_at(state.step)
-        mixing = sched.mixing_at(state.step)
+    def honest_grads(state, k_idx):
         honest_params = jax.tree_util.tree_map(lambda x: x[:wh], state.params)
-
         if cfg.vr == "minibatch":
             idx = jax.random.randint(k_idx, (wh, cfg.minibatch_size), 0, j)
             honest = jax.vmap(per_worker_grad)(honest_params, worker_data, idx)
-            saga_state = state.saga
+            return honest, idx
+        idx = jax.random.randint(k_idx, (wh,), 0, j)
+        honest = jax.vmap(
+            lambda p, d, i: per_worker_grad(p, d, i[None])
+        )(honest_params, worker_data, idx)
+        return honest, idx
+
+    def consensus(params):
+        xh = jax.tree_util.tree_map(lambda x: x[:wh], params)
+        return sum(
+            jnp.sum((x.astype(jnp.float32)
+                     - jnp.mean(x.astype(jnp.float32), axis=0)[None]) ** 2)
+            for x in jax.tree_util.tree_leaves(xh)
+        ) / wh
+
+    def step_fn_perleaf(state):
+        """Pre-refactor per-leaf pipeline (cfg.packed=False): the bench
+        baseline."""
+        key, k_idx, k_attack = jax.random.split(state.key, 3)
+        mask = sched.mask_at(state.step)
+        mixing = sched.mixing_at(state.step)
+        honest, idx = honest_grads(state, k_idx)
+        if cfg.vr == "saga":
+            honest, saga_state = saga_lib.saga_correct_scatter(
+                state.saga, honest, idx)
         else:
-            idx = jax.random.randint(k_idx, (wh,), 0, j)
-            honest = jax.vmap(
-                lambda p, d, i: per_worker_grad(p, d, i[None])
-            )(honest_params, worker_data, idx)
-            if cfg.vr == "saga":
-                honest, saga_state = saga_lib.saga_correct_scatter(
-                    state.saga, honest, idx)
-            else:
-                saga_state = state.saga
+            saga_state = state.saga
 
         # Honest-message variance (same metric as the master path).
         hm = jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0), honest)
@@ -301,29 +329,71 @@ def make_decentralized_step(
             exchange = build_exchange(half, attack_cfg, mask, is_byz,
                                       k_attack)
             params = masked_aggregate(
-                cfg.aggregator, exchange, mask,
+                cfg.aggregator, exchange, mask, perleaf=True,
                 **_agg_opts(cfg, mixing * mask))
         else:
             exchange = build_exchange(msgs, attack_cfg, mask, is_byz,
                                       k_attack)
             agg = masked_aggregate(
-                cfg.aggregator, exchange, mask,
+                cfg.aggregator, exchange, mask, perleaf=True,
                 **_agg_opts(cfg, mixing * mask))
             updates, opt_state = optimizer.update(
                 agg, state.opt_state, state.params, state.step)
             params = optim_lib.apply_updates(state.params, updates)
 
-        xh = jax.tree_util.tree_map(lambda x: x[:wh], params)
-        cons = sum(
-            jnp.sum((x.astype(jnp.float32)
-                     - jnp.mean(x.astype(jnp.float32), axis=0)[None]) ** 2)
-            for x in jax.tree_util.tree_leaves(xh)
-        ) / wh
         new_state = FederatedState(params, opt_state, saga_state,
                                    state.step + 1, key)
-        return new_state, {"honest_variance": var, "consensus_dist": cons}
+        return new_state, {"honest_variance": var,
+                           "consensus_dist": consensus(params)}
 
-    return init_fn, step_fn
+    def step_fn_packed(state):
+        """Flat-packed pipeline (DESIGN.md Sec. 8): one (N, D) message
+        buffer feeds the per-edge attack and the masked flat engine; the
+        dense (N, N, D) exchange replaces the per-leaf exchange tensors."""
+        key, k_idx, k_attack = jax.random.split(state.key, 3)
+        mask = sched.mask_at(state.step)
+        mixing = sched.mixing_at(state.step)
+        honest_tree, idx = honest_grads(state, k_idx)
+        spec = cfg.message_spec(honest_tree, batch_ndim=1)
+        honest = spec.pack(honest_tree)                        # (W_h, D)
+        if cfg.vr == "saga":
+            honest, saga_state = saga_lib.saga_correct_scatter(
+                state.saga, honest, idx)
+        else:
+            saga_state = state.saga
+
+        h32 = honest.astype(jnp.float32)
+        var = jnp.sum((h32 - jnp.mean(h32, axis=0)[None]) ** 2) / wh
+
+        # Byzantine node rows carry zeros until the attack replaces them.
+        msgs = jnp.zeros((n,) + honest.shape[1:], honest.dtype).at[:wh].set(honest)
+
+        def flat_gossip(wire_buf):
+            exchange = build_exchange(wire_buf, attack_cfg, mask, is_byz,
+                                      k_attack, spec=spec)     # (N, N, D)
+            out = masked_aggregate_flat(
+                cfg.aggregator, exchange, mask, spec=spec,
+                **_agg_opts(cfg, mixing * mask))               # (N, D) f32
+            return spec.unpack(out, batch_ndim=1)
+
+        if gossip == "params":
+            updates, opt_state = optimizer.update(
+                spec.unpack(msgs, batch_ndim=1), state.opt_state,
+                state.params, state.step)
+            half = optim_lib.apply_updates(state.params, updates)
+            params = flat_gossip(spec.pack(half))
+        else:
+            agg = flat_gossip(msgs)
+            updates, opt_state = optimizer.update(
+                agg, state.opt_state, state.params, state.step)
+            params = optim_lib.apply_updates(state.params, updates)
+
+        new_state = FederatedState(params, opt_state, saga_state,
+                                   state.step + 1, key)
+        return new_state, {"honest_variance": var,
+                           "consensus_dist": consensus(params)}
+
+    return init_fn, (step_fn_packed if cfg.packed else step_fn_perleaf)
 
 
 # ---------------------------------------------------------------------------
@@ -341,6 +411,7 @@ def decentralized_aggregate(
     num_workers: int,
     key: Optional[jax.Array] = None,
     round_index: Optional[jax.Array] = None,
+    use_topology_kernel: Optional[bool] = None,
 ) -> Pytree:
     """Per-node robust neighborhood aggregation inside ``shard_map``.
 
@@ -355,6 +426,17 @@ def decentralized_aggregate(
     ``cfg.num_byzantine`` nodes attack per edge.  Returns THIS node's
     aggregate (same local-shard geometry as the input) -- per-node results,
     unlike the master paths which return one shared aggregate.
+
+    ``cfg.packed`` (default) packs the local shard once so the gather mode
+    runs ONE collective + the flat masked engine on the (S, D) buffer; the
+    sharded mode operates on coordinate slices either way (DESIGN.md
+    Sec. 8).  ``use_topology_kernel`` routes the coordinate-separable
+    masked trimmed-mean reduction of the SHARDED branch through the fused
+    Pallas kernel ``kernels/topology.py`` (one HBM sweep, no sort; the
+    mixing-weighted mean keeps the jnp path since the kernel reduces
+    uniformly); default: on for TPU backends only, off elsewhere -- on
+    CPU the interpret-mode kernel is slower than the jnp rules (it still
+    runs under ``interpret=True`` when the flag is forced, for tests).
     """
     if comm not in ("gather", "sharded"):
         raise ValueError(f"comm must be 'gather' or 'sharded', got {comm!r}")
@@ -371,17 +453,31 @@ def decentralized_aggregate(
     mixing_all = sched.mixing_at(t)
     is_byz = jnp.arange(w) < cfg.num_byzantine
     wid = compat.axis_index(worker_axes)
+    packed = getattr(cfg, "packed", True)
 
     if comm == "gather":
-        stacked = jax.tree_util.tree_map(
-            lambda g: compat.all_gather(g, worker_axes, axis=0, tiled=False),
-            grads)
         mask_row = jnp.take(mask_all, wid, axis=0)[None]      # (1, S)
         mix_row = jnp.take(mixing_all, wid, axis=0)[None]
         k = jax.random.fold_in(key, wid) if key is not None else None
+        if packed:
+            # One collective: pack the local shard, gather the (S, D_shard)
+            # buffer, run the flat masked engine on this node's row.
+            spec = cfg.message_spec(grads, batch_ndim=0)
+            buf = spec.pack(grads, batch_ndim=0)
+            stacked = compat.all_gather(buf, worker_axes, axis=0, tiled=False)
+            exchange = build_exchange(stacked, attack_cfg, mask_row, is_byz,
+                                      k, spec=spec)           # (1, S, D)
+            agg = masked_aggregate_flat(
+                cfg.aggregator, exchange, mask_row, spec=spec,
+                **_agg_opts(cfg, mix_row * mask_row,
+                            axis_names=model_axes, sync_axes=worker_axes))
+            return spec.unpack(agg[0], batch_ndim=0)
+        stacked = jax.tree_util.tree_map(
+            lambda g: compat.all_gather(g, worker_axes, axis=0, tiled=False),
+            grads)
         exchange = build_exchange(stacked, attack_cfg, mask_row, is_byz, k)
         agg = masked_aggregate(
-            cfg.aggregator, exchange, mask_row,
+            cfg.aggregator, exchange, mask_row, perleaf=True,
             **_agg_opts(cfg, mix_row * mask_row,
                         axis_names=model_axes, sync_axes=worker_axes))
         return jax.tree_util.tree_map(lambda a: a[0], agg)
@@ -399,20 +495,40 @@ def decentralized_aggregate(
     z_local = z_local.reshape(w, -1)                          # (S, chunk)
     comm_axes = tuple(worker_axes) + tuple(model_axes)
     k = jax.random.fold_in(key, wid) if key is not None else None
-    exchange = build_exchange({"flat": z_local}, attack_cfg, mask_all,
-                              is_byz, k)
+    exchange = build_exchange(z_local, attack_cfg, mask_all,
+                              is_byz, k)                      # (S, S, chunk)
     if cfg.aggregator == "geomed_blockwise":
         seg = _local_leaf_ids(leaf_sizes, pad, w, worker_axes)
         agg = masked_weiszfeld_segments(
-            exchange["flat"], mask_all, seg, len(leaf_sizes) + 1,
+            exchange, mask_all, seg, len(leaf_sizes) + 1,
             axis_names=comm_axes, max_iters=cfg.weiszfeld_iters,
             tol=cfg.weiszfeld_tol)
+    elif _use_topology_kernel(use_topology_kernel) and (
+            cfg.aggregator == "trimmed_mean"):
+        # PR-3 leftover closed: the fused Pallas masked-neighborhood
+        # reduction runs the coordinate-separable trimmed mean on the
+        # (R, S, chunk) exchange slab in ONE HBM sweep -- no sort, no mask
+        # broadcast materialization.  Slice-local (no psums needed:
+        # coordinate-separable), so it drops straight into shard_map.
+        from repro.kernels import ops as kernel_ops
+        agg = kernel_ops.masked_neighbor_reduce(
+            exchange, mask_all, trim=cfg.trim)
     else:
-        agg = masked_aggregate(
+        agg = masked_aggregate_flat(
             cfg.aggregator, exchange, mask_all,
             **_agg_opts(cfg, mixing_all * mask_all,
-                        axis_names=comm_axes))["flat"]
+                        axis_names=comm_axes))
     agg = agg.astype(jnp.float32)                             # (R, chunk)
     mine = compat.all_to_all(agg, worker_axes, split_axis=0,
                              concat_axis=0, tiled=False).reshape(-1)
     return unflatten(mine[:p])
+
+
+def _use_topology_kernel(flag: Optional[bool]) -> bool:
+    """Resolve the fused-kernel routing default: explicit flag wins; else
+    on TPU only -- the Mosaic backend the kernel is shaped for.  On CPU
+    the interpret-mode kernel is a correctness harness, not a speedup,
+    and other backends (GPU/Triton) have never lowered it."""
+    if flag is not None:
+        return flag
+    return jax.default_backend() == "tpu"

@@ -26,6 +26,17 @@ mesh axes (the decentralized analogue of the Sec. 2 comm layouts), and
 ``sync_axes`` pmax-synchronizes the Weiszfeld stopping statistic so every
 device's ``while_loop`` stays in collective lockstep (gather mode, where
 each device iterates its own receiver's masked Weiszfeld).
+
+Flat-packed execution (DESIGN.md Sec. 8): every rule here is generic over
+the exchange "pytree", so passing the packed ``(R, S, D)`` buffer of
+:mod:`repro.core.packing` runs the SAME code with ONE fused reduction per
+step instead of one per leaf -- that is the flat masked engine behind
+:func:`masked_aggregate_flat`, and the pytree :func:`masked_aggregate` is
+a thin pack -> flat -> unpack shim over it.  The only rule that needs the
+leaf layout is ``geomed_blockwise`` (per-leaf norms), which slices the
+buffer at the spec's static block boundaries.  ``masked_aggregate(...,
+perleaf=True)`` keeps the pre-refactor leaf-by-leaf dispatch (the bench
+baseline).
 """
 from __future__ import annotations
 
@@ -36,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro.core import packing
 
 Pytree = Any
 
@@ -355,6 +367,10 @@ def masked_weiszfeld_segments(
 # name -> masked rule.  Kept in bijection with the aggregator registry
 # (tests/test_topology.py pins the key sets against each other), so a new
 # registry aggregator fails loudly until its masked counterpart exists.
+# Every rule is generic over the exchange pytree, so the same entry serves
+# the per-leaf dispatch (pytree exchange) and the flat engine (packed
+# (R, S, D) buffer) -- except geomed_blockwise, whose flat form needs the
+# block boundaries (see masked_aggregate_flat).
 _MASKED: dict[str, Any] = {
     "mean": lambda ex, m, o: masked_mean(ex, m, mixing=o.get("mixing")),
     "median": lambda ex, m, o: masked_median(ex, m),
@@ -381,18 +397,64 @@ _MASKED: dict[str, Any] = {
 MASKED_AGGREGATOR_NAMES = tuple(_MASKED)
 
 
+def _check_masked_name(name: str) -> None:
+    if name not in _MASKED:
+        raise ValueError(
+            f"unknown masked aggregator {name!r}; known: "
+            f"{', '.join(sorted(_MASKED))}")
+
+
+def masked_aggregate_flat(name: str, buf: jnp.ndarray, mask: jnp.ndarray,
+                          *, spec: Optional[packing.PackSpec] = None,
+                          **opts) -> jnp.ndarray:
+    """Flat masked engine: packed ``(R, S, D)`` exchange buffer -> ``(R,
+    D)`` float32 per-receiver aggregates.  One fused sender-axis reduction
+    (and, sharded, one psum) per step instead of one per leaf.
+
+    ``spec`` is required only by ``geomed_blockwise``: its per-leaf norms
+    come from slicing the buffer at the spec's static block boundaries,
+    each block running its own lockstep masked Weiszfeld like the per-leaf
+    dispatch did.  Padding coordinates aggregate to zero.
+    """
+    _check_masked_name(name)
+    b32 = buf.astype(jnp.float32)
+    if name == "geomed_blockwise":
+        if spec is None:
+            raise ValueError(
+                "masked_aggregate_flat('geomed_blockwise') needs spec= for "
+                "the block boundaries (or use masked_weiszfeld_segments on "
+                "coordinate slices)")
+        parts = [
+            masked_weiszfeld(
+                b32[:, :, a:b], mask,
+                max_iters=opts.get("max_iters", 64), tol=opts.get("tol", 1e-6),
+                axis_names=opts.get("axis_names", ()),
+                sync_axes=opts.get("sync_axes", ()))
+            for a, b in spec.boundaries
+        ]
+        return packing.assemble(parts, pad=spec.pad,
+                                batch_shape=buf.shape[:1])
+    return _MASKED[name](b32, mask, opts)
+
+
 def masked_aggregate(name: str, exchange: Pytree, mask: jnp.ndarray,
-                     **opts) -> Pytree:
+                     *, perleaf: bool = False, **opts) -> Pytree:
     """Dispatch a masked neighborhood aggregation by registry name.
 
     Options mirror :func:`repro.core.aggregators.get_aggregator` plus
     ``mixing`` (mean only), ``axis_names`` and ``sync_axes`` (sharded
-    execution, see module docstring).
+    execution, see module docstring).  The pytree API is a pack -> flat
+    rule -> unpack shim over :func:`masked_aggregate_flat`;
+    ``perleaf=True`` keeps the pre-refactor leaf-by-leaf dispatch (the
+    bench baseline).  An exchange that is already a single array is
+    treated as a packed buffer and returned as one.
     """
-    try:
-        rule = _MASKED[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown masked aggregator {name!r}; known: "
-            f"{', '.join(sorted(_MASKED))}") from None
-    return rule(exchange, mask, opts)
+    _check_masked_name(name)
+    if isinstance(exchange, jnp.ndarray):
+        return masked_aggregate_flat(name, exchange, mask, **opts)
+    if perleaf:
+        return _MASKED[name](exchange, mask, opts)
+    spec = packing.pack_spec(exchange, batch_ndim=2)
+    out = masked_aggregate_flat(name, spec.pack(exchange, batch_ndim=2),
+                                mask, spec=spec, **opts)
+    return spec.unpack(out, batch_ndim=1)

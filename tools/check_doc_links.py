@@ -6,7 +6,11 @@ link targets and backticked tokens ending in a known file extension (or a
 trailing slash for directories) -- and fails if the referenced path exists
 neither relative to the repo root nor to src/repro/ (docstrings habitually
 cite module paths like ``core/robust_step.py``).  Generated artifacts
-(``BENCH_*.json``, anything under ``experiments/``) are exempt.
+(``BENCH_*.json``, anything under ``experiments/``) are exempt from the
+path check, but every ``BENCH_*.json`` schema named in
+``benchmarks/README.md`` must have a PRODUCING SCRIPT under benchmarks/
+(a .py file that mentions the artifact by name), so documented bench
+schemas can't outlive their producers.
 
     python tools/check_doc_links.py [files...]     # default: the doc set
 
@@ -51,6 +55,28 @@ def resolves(tok: str, doc_dir: str) -> bool:
     return any(os.path.exists(os.path.join(b, tok)) for b in bases)
 
 
+BENCH_ARTIFACT = re.compile(r"\bBENCH_[\w.-]+?\.json\b")
+
+
+def bench_producer_gaps(doc: str, text: str) -> list:
+    """Every BENCH_*.json artifact named in the benchmarks README must be
+    produced by a script in benchmarks/ -- i.e. some .py file there
+    mentions the artifact name (default --out value or schema writer)."""
+    bench_dir = os.path.join(REPO, "benchmarks")
+    scripts = {}
+    for fname in sorted(os.listdir(bench_dir)):
+        if fname.endswith(".py"):
+            with open(os.path.join(bench_dir, fname)) as f:
+                scripts[fname] = f.read()
+    gaps = []
+    for artifact in sorted(set(BENCH_ARTIFACT.findall(text))):
+        producers = [s for s, body in scripts.items() if artifact in body]
+        if not producers:
+            gaps.append(f"{doc}: bench artifact {artifact!r} has no "
+                        "producing script under benchmarks/")
+    return gaps
+
+
 def main(argv) -> int:
     docs = argv[1:] or DEFAULT_DOCS
     missing = []
@@ -66,6 +92,8 @@ def main(argv) -> int:
                 continue
             if not resolves(tok, os.path.dirname(path)):
                 missing.append(f"{doc}: dangling reference {tok!r}")
+        if os.path.normpath(doc) == os.path.join("benchmarks", "README.md"):
+            missing.extend(bench_producer_gaps(doc, text))
     if missing:
         print("doc-link check FAILED:")
         for m in missing:
