@@ -2,10 +2,14 @@
 
 The DESIGN.md Sec. 8 claim made measurable: for every (aggregator, path)
 cell this times the FULL Byzantine-robust training step -- per-worker
-grads, SAGA correction, attack injection, robust aggregation, optimizer --
-with the flat-packed pipeline (``RobustConfig.packed=True``, the default)
-against the pre-refactor per-leaf pipeline (``packed=False``), and emits
-``BENCH_step.json`` plus a markdown ratio table.
+grads, variance-reduction correction, attack injection, robust
+aggregation, optimizer -- with the flat-packed pipeline
+(``RobustConfig.packed=True``, the default) against the pre-refactor
+per-leaf pipeline (``packed=False``), and emits ``BENCH_step.json`` plus a
+markdown ratio table.  Since schema v2 the sim rows also carry the
+resident variance-reduction state bytes, and a saga-vs-lsvrg trade-off
+pair at fixed (W, J, D) quantifies the O((J+1)D)-table vs O(2D)-snapshot
+memory/step story (DESIGN.md Sec. 9).
 
     PYTHONPATH=src python benchmarks/bench_step.py [--quick] [--gate] \\
         [--steps N] [--reps R] [--out BENCH_step.json]
@@ -52,10 +56,15 @@ from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
 from repro.optim import get_optimizer
 
-SCHEMA = "BENCH_step/v1"
+SCHEMA = "BENCH_step/v2"
 
 QUICK_AGGREGATORS = ("geomed", "krum", "mean")
-# The gate's speedup floor applies to the aggregation-dominated sim cells.
+# The memory/step trade-off cells (schema v2): saga vs lsvrg at the SAME
+# (W, J, D) on the sim geomed workload, reporting resident VR-state bytes
+# next to wall-clock (the O((J+1)D) table vs O(2D) snapshot story).
+VR_TRADEOFF_VRS = ("saga", "lsvrg")
+# The gate's speedup floor applies to the aggregation-dominated sim cells
+# (vr=saga -- the lsvrg cells are a trade-off readout, not a packing claim).
 GATE_SPEEDUP_CELLS = ("geomed", "krum")
 GATE_SPEEDUP_FLOOR = 1.3
 # "No slower" allows this much wall-clock noise on ~1.0x cells.
@@ -87,10 +96,10 @@ def mlp_loss(params, batch):
     return jnp.mean(jnp.logaddexp(0.0, -y * logit))
 
 
-def sim_cfg(name: str, packed: bool) -> RobustConfig:
-    return RobustConfig(aggregator=name, vr="saga", attack="sign_flip",
+def sim_cfg(name: str, packed: bool, vr: str = "saga") -> RobustConfig:
+    return RobustConfig(aggregator=name, vr=vr, attack="sign_flip",
                         num_byzantine=SIM_BYZANTINE, weiszfeld_iters=32,
-                        num_groups=4, packed=packed)
+                        num_groups=4, packed=packed, lsvrg_p=0.05)
 
 
 def time_steps(jstep, state, step_args, steps: int, reps: int) -> dict:
@@ -108,20 +117,31 @@ def time_steps(jstep, state, step_args, steps: int, reps: int) -> dict:
             "wall_us_min": min(times) * 1e6}
 
 
-def bench_sim(name: str, packed: bool, steps: int, reps: int, wd) -> dict:
-    cfg = sim_cfg(name, packed)
+def bench_sim(name: str, packed: bool, steps: int, reps: int, wd,
+              vr: str = "saga") -> dict:
+    cfg = sim_cfg(name, packed, vr)
     init_fn, step_fn = make_federated_step(mlp_loss, wd, cfg,
                                            get_optimizer("sgd", 0.05))
     state = init_fn(mlp_params(jax.random.PRNGKey(1)), jax.random.PRNGKey(3))
+    # Resident VR-state bytes (the schema-v2 memory column of the saga vs
+    # lsvrg trade-off), cross-checked against the reducer's own accounting.
+    vr_leaves = jax.tree_util.tree_leaves(state.vr)
+    vr_bytes = sum(int(l.size) * l.dtype.itemsize for l in vr_leaves)
+    p = mlp_params(jax.random.PRNGKey(1))
+    coords = sum(int(x.size) for x in jax.tree_util.tree_leaves(p))
+    j = jax.tree_util.tree_leaves(wd)[0].shape[1]
+    expect = cfg.reducer().memory_elems(SIM_HONEST, j, coords)
+    got = sum(int(l.size) for l in vr_leaves)
+    assert got == expect, f"memory_elems drift for {vr}: {got} != {expect}"
     jstep = steps_lib.compile_train_step(step_fn)
     t = time_steps(jstep, state, (), steps, reps)
-    p = mlp_params(jax.random.PRNGKey(1))
     return {
         "path": "sim", "aggregator": name, "packed": packed,
         "num_workers": SIM_HONEST + SIM_BYZANTINE,
         "num_byzantine": SIM_BYZANTINE, "vr": cfg.vr, "attack": cfg.attack,
+        "num_samples": j, "vr_state_bytes": vr_bytes,
         "leaves": len(jax.tree_util.tree_leaves(p)),
-        "coords": sum(int(x.size) for x in jax.tree_util.tree_leaves(p)),
+        "coords": coords,
         "steps": steps, "reps": reps, **t,
     }
 
@@ -148,6 +168,7 @@ def bench_distributed(name: str, comm: str, packed: bool, steps: int,
     return {
         "path": comm, "aggregator": name, "packed": packed,
         "num_workers": 4, "num_byzantine": 1, "vr": "sgd",
+        "vr_state_bytes": 0,
         "attack": "sign_flip", "leaves": len(leaves),
         "coords": sum(math.prod(s.shape) for s in leaves),
         "steps": steps, "reps": reps, **t,
@@ -159,26 +180,29 @@ def run_gate(rows) -> list:
     must beat the floor on the aggregation-dominated sim cells.  Gates on
     ``wall_us_min`` -- the minimum over reps is the standard noise-robust
     microbenchmark statistic (scheduler interference only ever ADDS
-    time)."""
-    by_key = {(r["path"], r["aggregator"], r["packed"]): r["wall_us_min"]
-              for r in rows}
+    time).  Cells are keyed by (path, aggregator, vr, packed) since v2
+    (the lsvrg trade-off cells must not collide with the saga sweep); the
+    speedup floor stays a vr=saga claim."""
+    by_key = {(r["path"], r["aggregator"], r["vr"], r["packed"]):
+              r["wall_us_min"] for r in rows}
     failures = []
-    for (path, name, packed), us in sorted(by_key.items()):
+    for (path, name, vr, packed), us in sorted(by_key.items()):
         if packed:
             continue
-        packed_us = by_key.get((path, name, True))
+        packed_us = by_key.get((path, name, vr, True))
         if packed_us is None:
             continue
         ratio = us / packed_us
         if packed_us > us * GATE_NOISE_MARGIN:
             failures.append(
-                f"{path}/{name}: packed {packed_us:.0f}us is slower than "
-                f"per-leaf {us:.0f}us beyond the {GATE_NOISE_MARGIN}x margin")
-        if path == "sim" and name in GATE_SPEEDUP_CELLS and \
-                ratio < GATE_SPEEDUP_FLOOR:
+                f"{path}/{name}/{vr}: packed {packed_us:.0f}us is slower "
+                f"than per-leaf {us:.0f}us beyond the "
+                f"{GATE_NOISE_MARGIN}x margin")
+        if path == "sim" and vr == "saga" and name in GATE_SPEEDUP_CELLS \
+                and ratio < GATE_SPEEDUP_FLOOR:
             failures.append(
-                f"sim/{name}: packed speedup {ratio:.2f}x is below the "
-                f"{GATE_SPEEDUP_FLOOR}x floor")
+                f"sim/{name}/{vr}: packed speedup {ratio:.2f}x is below "
+                f"the {GATE_SPEEDUP_FLOOR}x floor")
     return failures
 
 
@@ -257,6 +281,16 @@ def main() -> None:
                 rows.append(r)
                 print(f"  sim     {name:18s} packed={packed!s:5s} "
                       f"{r['wall_us_mean']:10.0f} us/step")
+        # Memory/step trade-off cells (v2): lsvrg on the geomed workload at
+        # the same (W, J, D) as the saga sweep above -- BENCH_step.json then
+        # holds both VRs' resident state bytes and wall-clock side by side.
+        for packed in (False, True):
+            r = bench_sim("geomed", packed, args.steps, args.reps, wd,
+                          vr="lsvrg")
+            rows.append(r)
+            print(f"  sim     geomed/lsvrg      packed={packed!s:5s} "
+                  f"{r['wall_us_mean']:10.0f} us/step "
+                  f"(state {r['vr_state_bytes']} B)")
         if not args.skip_distributed:
             rows += spawn_distributed(args)
 
@@ -275,15 +309,18 @@ def main() -> None:
         json.dump(report, f, indent=1)
     print(f"\nwrote {args.out} ({len(rows)} rows)\n")
 
-    print("| path | aggregator | per-leaf us | packed us | speedup |")
-    print("|------|------------|-------------|-----------|---------|")
-    by_key = {(r["path"], r["aggregator"], r["packed"]): r["wall_us_mean"]
+    print("| path | aggregator | vr | per-leaf us | packed us | speedup | state bytes |")
+    print("|------|------------|----|-------------|-----------|---------|-------------|")
+    by_key = {(r["path"], r["aggregator"], r["vr"], r["packed"]): r
               for r in rows}
-    for (path, name, packed), us in sorted(by_key.items()):
+    for (path, name, vr, packed), r in sorted(by_key.items()):
         if packed:
             continue
-        pk = by_key[(path, name, True)]
-        print(f"| {path} | {name} | {us:.0f} | {pk:.0f} | {us / pk:.2f}x |")
+        pk = by_key[(path, name, vr, True)]
+        print(f"| {path} | {name} | {vr} | {r['wall_us_mean']:.0f} | "
+              f"{pk['wall_us_mean']:.0f} | "
+              f"{r['wall_us_mean'] / pk['wall_us_mean']:.2f}x | "
+              f"{pk.get('vr_state_bytes', 0)} |")
 
     if args.gate:
         failures = run_gate(rows)
@@ -294,16 +331,19 @@ def main() -> None:
             # settles it (min-of-both-runs).  The retried rows are folded
             # back into the report and the JSON is re-dumped, so the
             # uploaded artifact always matches the gate verdict.
-            sim_names = {r["aggregator"] for r in rows if r["path"] == "sim"}
-            failing = {f.split(":")[0].split("/")[-1] for f in failures}
+            failing = {tuple(f.split(":")[0].split("/"))
+                       for f in failures}                 # (path, name, vr)
             retried = False
-            for name in sorted(failing & sim_names):
+            for path, name, vr in sorted(failing):
+                if path != "sim":
+                    continue
                 for packed in (False, True):
-                    fresh = bench_sim(name, packed, args.steps, args.reps, wd)
+                    fresh = bench_sim(name, packed, args.steps, args.reps,
+                                      wd, vr=vr)
                     for r in rows:
-                        if (r["path"], r["aggregator"], r["packed"]) == \
-                                ("sim", name, packed) and \
-                                fresh["wall_us_min"] < r["wall_us_min"]:
+                        if (r["path"], r["aggregator"], r["vr"],
+                                r["packed"]) == ("sim", name, vr, packed) \
+                                and fresh["wall_us_min"] < r["wall_us_min"]:
                             r.update(wall_us_min=fresh["wall_us_min"],
                                      wall_us_mean=fresh["wall_us_mean"])
                             retried = True

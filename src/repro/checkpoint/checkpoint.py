@@ -1,9 +1,11 @@
 """Dependency-free pytree checkpointing (npz + JSON treedef).
 
-Saves any pytree of arrays (params, optimizer state, SAGA tables, step
-counters) to a single ``.npz`` with a JSON sidecar describing the tree
-structure, and restores it bit-exactly.  Supports atomic writes and a
-rolling ``keep`` window for periodic training checkpoints.
+Saves any pytree of arrays (params, optimizer state, variance-reduction
+state -- SAGA tables, lsvrg snapshots/anchors, whatever the configured
+:class:`repro.core.variance.VarianceReducer` carries -- and step counters)
+to a single ``.npz`` with a JSON sidecar describing the tree structure,
+and restores it bit-exactly.  Supports atomic writes and a rolling
+``keep`` window for periodic training checkpoints.
 """
 from __future__ import annotations
 
@@ -121,11 +123,13 @@ class CheckpointManager:
     # -- full-train-state convenience -----------------------------------
     #
     # The train state is WHOLE-state by contract: params + optimizer state
-    # + SAGA table/avg + step counter (+ PRNG key for the simulation
+    # + the generic variance-reduction state (SAGA table/avg, lsvrg
+    # snapshot/anchor, ...) + step counter (+ PRNG key for the simulation
     # path), exactly the dict/NamedTuple the step builders hand back.
     # Saving anything less makes resumed runs silently diverge (a fresh
-    # Adam moment or a cold SAGA table changes the trajectory);
-    # tests/test_system.py pins resume bit-exactness for both paths.
+    # Adam moment, a cold SAGA table or a stale lsvrg snapshot changes the
+    # trajectory); tests/test_system.py pins resume bit-exactness for both
+    # paths.
 
     def save_train_state(self, step: int, state: Pytree) -> str:
         """Checkpoint the COMPLETE train state at ``step``.  ``state`` must

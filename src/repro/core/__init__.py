@@ -33,3 +33,9 @@ from repro.core.robust_step import (
     sharded_aggregate,
 )
 from repro.core.saga import SagaState, saga_correct, saga_correct_scatter, saga_init, saga_init_zeros
+from repro.core.variance import (
+    VR_NAMES,
+    LsvrgState,
+    VarianceReducer,
+    get_reducer,
+)

@@ -19,8 +19,12 @@ Two execution paths share the same math:
   geomed_blockwise (DESIGN.md Sec. 2).  EVERY registry aggregator runs on
   both paths.
 
-Variance-reduction modes: ``sgd`` (one sample), ``minibatch`` (mean of a
-random minibatch), ``saga`` (corrected gradients + table, Alg. 1).
+Variance-reduction modes come from the :mod:`repro.core.variance`
+registry: ``sgd`` (one sample), ``minibatch`` (mean of a random
+minibatch), ``saga`` (corrected gradients + table, Alg. 1), ``lsvrg``
+(loopless-SVRG snapshots, O(D) state).  This module never branches on the
+``cfg.vr`` string -- every path dispatches through the
+:class:`repro.core.variance.VarianceReducer` built by ``cfg.reducer()``.
 """
 from __future__ import annotations
 
@@ -36,7 +40,7 @@ from repro import compat
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
 from repro.core import packing
-from repro.core import saga as saga_lib
+from repro.core import variance as vr_lib
 from repro.core.geomed import (weiszfeld_blockwise_sharded, weiszfeld_flat,
                                weiszfeld_pytree)
 from repro.optim import optimizers as optim_lib
@@ -49,7 +53,7 @@ class RobustConfig:
     """Everything that defines the robust training loop of the paper."""
 
     aggregator: str = "geomed"        # mean | median | geomed | geomed_groups | trimmed_mean | krum
-    vr: str = "saga"                  # sgd | minibatch | saga
+    vr: str = "saga"                  # repro.core.variance.VR_NAMES: sgd | minibatch | saga | lsvrg
     attack: str = "none"
     num_byzantine: int = 0
     # Communication graph (repro.topology).  "star" is the paper's implicit
@@ -60,7 +64,7 @@ class RobustConfig:
     topology_seed: int = 0
     topology_p: float = 0.5
     # What decentralized nodes EXCHANGE (DESIGN.md Sec. 7): "gradient"
-    # gossips (SAGA-corrected) gradient messages and applies the optimizer
+    # gossips (variance-reduced) gradient messages and applies the optimizer
     # to the aggregate; "params" takes a local optimizer step first and
     # robust-aggregates the neighbors' half-stepped MODELS
     # (arXiv:2308.05292's setting).  Ignored on the master path.
@@ -73,6 +77,11 @@ class RobustConfig:
     schedule: str = "static"
     schedule_period: int = 4
     minibatch_size: int = 50          # paper's BSGD batch size
+    # Snapshot-refresh probability for vr="lsvrg" (arXiv:2303.04560): each
+    # worker redraws its reference point/anchor with this per-step Bernoulli
+    # probability.  1/J matches SAGA's expected table staleness; larger p
+    # trades extra full-gradient passes for a tighter anchor.
+    lsvrg_p: float = 0.1
     weiszfeld_iters: int = 64
     weiszfeld_tol: float = 1e-6
     num_groups: int = 4               # for geomed_groups
@@ -93,6 +102,11 @@ class RobustConfig:
     sign_flip_magnitude: float = -3.0
     alie_z: float = 1.0
     ipm_eps: float = 0.5
+
+    def reducer(self) -> vr_lib.VarianceReducer:
+        """The :class:`repro.core.variance.VarianceReducer` named by
+        ``self.vr`` -- the ONE dispatch point for variance reduction."""
+        return vr_lib.get_reducer(self)
 
     def attack_config(self) -> attack_lib.AttackConfig:
         return attack_lib.AttackConfig(
@@ -144,7 +158,9 @@ class RobustConfig:
 class FederatedState(NamedTuple):
     params: Pytree
     opt_state: Pytree
-    saga: Optional[saga_lib.SagaState]
+    # Variance-reduction state (reducer-specific: SagaState, LsvrgState, or
+    # None for the stateless reducers).
+    vr: Optional[Any]
     step: jnp.ndarray
     key: jax.Array
 
@@ -238,6 +254,7 @@ def make_federated_step(
     j = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
     grad_fn = jax.grad(loss_fn)
     attack_cfg = cfg.attack_config()
+    reducer = cfg.reducer()
 
     def sample_batch(data_w, idx):
         """Select samples ``idx`` (vector) of one worker -> batch pytree."""
@@ -254,43 +271,85 @@ def make_federated_step(
             )(jnp.arange(j))
         return jax.vmap(worker_tab)(worker_data)
 
+    def full_local_grads(params_per_worker):
+        """Per-worker FULL local gradient at per-worker params -> (W, ...).
+        (The lsvrg anchor oracle: one vectorized pass over each worker's
+        whole shard.)"""
+        return jax.vmap(grad_fn)(params_per_worker, worker_data)
+
+    def broadcast_params(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p[None], (wh,) + p.shape), params)
+
+    pack_fn = None
+    if cfg.packed:
+        def pack_fn(tree, batch_ndim):
+            spec = cfg.message_spec(tree, batch_ndim=batch_ndim)
+            return spec.pack(tree, batch_ndim=batch_ndim)
+
     def init_fn(params, key) -> FederatedState:
         opt_state = optimizer.init(params)
-        saga_state = None
-        if cfg.vr == "saga":
-            per_sample = per_sample_table(params)  # (W, J, ...)
-            if cfg.packed:
-                # The SAGA memory lives packed for the whole run: one
-                # (W, J, D) table, one (W, D) running average.
-                spec = cfg.message_spec(per_sample, batch_ndim=2)
-                per_sample = spec.pack(per_sample, batch_ndim=2)
-            saga_state = saga_lib.saga_init(per_sample)
-        return FederatedState(params, opt_state, saga_state,
+        # Reducer state lives in the message layout for the whole run
+        # (packed: one (W, J, D) SAGA table / (W, D) lsvrg buffers).
+        vr_state = reducer.init_sim(
+            params,
+            per_sample_grads_fn=lambda: per_sample_table(params),
+            full_grads_fn=lambda p: full_local_grads(broadcast_params(p)),
+            num_workers=wh, pack_fn=pack_fn)
+        return FederatedState(params, opt_state, vr_state,
                               jnp.zeros((), jnp.int32), key)
 
     def honest_grads(state, k_idx):
-        """Per-worker (SAGA-corrected) honest messages + new SAGA state.
-        Returned leaves are pytrees; the packed step packs BEFORE the SAGA
-        correction so the table scatter is one fused op."""
+        """Per-worker raw honest gradients + the drawn indices.  Returned
+        leaves are pytrees; the packed step packs BEFORE the VR correction
+        so the table scatter / snapshot select is one fused op."""
         params = state.params
-        if cfg.vr == "minibatch":
-            idx = jax.random.randint(k_idx, (wh, cfg.minibatch_size), 0, j)
+        idx = reducer.draw_indices(k_idx, wh, j)
+        if idx.ndim == 2:       # minibatch layout: (W, B) sample draws
             honest = jax.vmap(functools.partial(per_worker_grad, params))(worker_data, idx)
-            return honest, idx, state.saga
-        idx = jax.random.randint(k_idx, (wh,), 0, j)
-        honest = jax.vmap(
-            lambda d, i: per_worker_grad(params, d, i[None])
-        )(worker_data, idx)
-        return honest, idx, state.saga
+        else:
+            honest = jax.vmap(
+                lambda d, i: per_worker_grad(params, d, i[None])
+            )(worker_data, idx)
+        return honest, idx
+
+    def correct(state, honest, idx, k_idx, *, spec=None):
+        """Route the raw gradients through the reducer.  The snapshot
+        oracles are bound lazily (closures) so stateless/table reducers
+        trace none of them; ``spec`` converts between the packed buffer
+        layout and the per-leaf pytrees the grad vmaps consume."""
+        if not reducer.stateful:
+            return honest, state.vr, {}
+        k_vr = jax.random.fold_in(k_idx, 1)   # DCE'd unless the reducer draws
+
+        def as_tree(x):
+            return spec.unpack(x) if spec is not None else x
+
+        def as_msgs(tree, batch_ndim=1):
+            return (spec.pack(tree, batch_ndim=batch_ndim)
+                    if spec is not None else tree)
+
+        def grads_at(snapshot):
+            snap = as_tree(snapshot)
+            return as_msgs(jax.vmap(
+                lambda p_w, d, i: per_worker_grad(p_w, d, i[None])
+            )(snap, worker_data, idx))
+
+        def full_grads_at(p):
+            return as_msgs(full_local_grads(as_tree(p)))
+
+        return reducer.correct(
+            state.vr, honest, idx, k_vr,
+            params=as_msgs(broadcast_params(state.params)),
+            grads_at=grads_at, full_grads_at=full_grads_at)
 
     def step_fn_perleaf(state: FederatedState):
         """Pre-refactor per-leaf hot path (cfg.packed=False): the bench
         baseline, byte-for-byte the original pipeline."""
         key, k_idx, k_attack = jax.random.split(state.key, 3)
         params = state.params
-        honest, idx, saga_state = honest_grads(state, k_idx)
-        if cfg.vr == "saga":
-            honest, saga_state = saga_lib.saga_correct_scatter(state.saga, honest, idx)
+        honest, idx = honest_grads(state, k_idx)
+        honest, vr_state, vr_metrics = correct(state, honest, idx, k_idx)
 
         # Honest-message variance (reported in the paper's figures, bottom rows).
         hm = agg_lib.mean_agg_perleaf(honest)
@@ -303,23 +362,22 @@ def make_federated_step(
         agg = cfg.aggregator_fn(perleaf=True)(msgs)
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
         params = optim_lib.apply_updates(params, updates)
-        new_state = FederatedState(params, opt_state, saga_state, state.step + 1, key)
-        metrics = {"honest_variance": var}
+        new_state = FederatedState(params, opt_state, vr_state, state.step + 1, key)
+        metrics = {"honest_variance": var, **vr_metrics}
         return new_state, metrics
 
     def step_fn_packed(state: FederatedState):
         """Flat-packed hot path (DESIGN.md Sec. 8): grads are packed into
-        ONE (W_h, D) buffer right after the per-worker grad vmap; SAGA
+        ONE (W_h, D) buffer right after the per-worker grad vmap; VR
         correction, attack injection, aggregation and the variance metric
         all run on the buffer; a single unpack feeds the optimizer."""
         key, k_idx, k_attack = jax.random.split(state.key, 3)
         params = state.params
-        honest_tree, idx, saga_state = honest_grads(state, k_idx)
+        honest_tree, idx = honest_grads(state, k_idx)
         spec = cfg.message_spec(honest_tree, batch_ndim=1)
         honest = spec.pack(honest_tree)                       # (W_h, D)
-        if cfg.vr == "saga":
-            honest, saga_state = saga_lib.saga_correct_scatter(
-                state.saga, honest, idx)
+        honest, vr_state, vr_metrics = correct(state, honest, idx, k_idx,
+                                               spec=spec)
 
         h32 = honest.astype(jnp.float32)
         var = jnp.sum((h32 - jnp.mean(h32, axis=0)[None]) ** 2) / wh
@@ -330,8 +388,8 @@ def make_federated_step(
         agg = spec.unpack(agg_vec, batch_ndim=0)
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
         params = optim_lib.apply_updates(params, updates)
-        new_state = FederatedState(params, opt_state, saga_state, state.step + 1, key)
-        metrics = {"honest_variance": var}
+        new_state = FederatedState(params, opt_state, vr_state, state.step + 1, key)
+        metrics = {"honest_variance": var, **vr_metrics}
         return new_state, metrics
 
     return init_fn, (step_fn_packed if cfg.packed else step_fn_perleaf)

@@ -1,0 +1,372 @@
+"""Pluggable variance reduction: the :class:`VarianceReducer` strategy layer.
+
+The paper's core claim is that VARIANCE REDUCTION is what lets geometric-
+median aggregation tell Byzantine messages from honest noise (Lemma 1 /
+Thm 1): as the iterates converge, honest messages concentrate while
+attacks cannot.  SAGA (Alg. 1) is one way to get that property; loopless
+SVRG (arXiv:2303.04560) is another with O(D) instead of O(J*D) per-client
+state, and the stochastic-ADMM variant (arXiv:2106.06891) shows a second
+optimizer family wants the same plug-in point.  This module makes the
+reduction method a first-class strategy so every execution path --
+simulation master, decentralized sim, shard_map gather and sharded comm,
+every topology/gossip mode -- dispatches through ONE registry instead of
+scattering ``cfg.vr`` string comparisons across the layers.
+
+Registry contract (mirrors the aggregator/attack registries): ``_REDUCERS``
+is the single source of truth; ``VR_NAMES`` and the unknown-name error are
+derived from it, so adding a reducer is one entry here plus its class.
+
+The reducer interface (see :class:`VarianceReducer`):
+
+* ``draw_indices(key, w, j)``     -- the per-step sample draw (reproduces the
+  historical shapes bit-exactly: ``(W,)`` for single-sample reducers,
+  ``(W, B)`` for minibatch).
+* ``correct(state, grads, sample_idx, key, ...)`` -- turn raw stochastic
+  gradients into variance-reduced messages + the new state + metrics.
+  Layout-agnostic: ``grads``/state leaves may be per-leaf pytrees
+  (``(W, *shape)``) or the packed ``(W, D)`` buffer of DESIGN.md Sec. 8 --
+  every reducer op is elementwise or a gather/scatter over the worker axis.
+* ``init_sim(...)`` / ``init_zeros(...)`` -- state construction for the
+  finite-sum simulation paths (lazy oracles: only what the reducer needs
+  is computed) and the cold-start launch paths.
+* ``pack_state`` / ``unpack_state``   -- PackSpec layout conversion.
+* ``state_specs`` / ``state_structs`` -- the launch layer's sharding specs
+  and ShapeDtypeStructs for the state (per-worker leaves sharded over the
+  worker axes, DESIGN.md Sec. 4).
+* ``memory_elems(w, j, d)``       -- the state-size estimate the dryrun
+  memory accounting reports (O(W*(J+1)*D) for SAGA, O(2*W*D) for lsvrg).
+
+Correction oracles: SAGA only needs the drawn gradient and its table;
+snapshot-based reducers (lsvrg) also need gradients evaluated at OTHER
+parameters.  ``correct`` therefore takes optional callables bound by the
+step builder:
+
+* ``params``        -- the current per-worker parameters in the STATE's
+  layout (master paths broadcast the shared iterate; decentralized paths
+  pass the per-node copies);
+* ``grads_at(p)``   -- per-worker gradients at per-worker params ``p`` for
+  THIS step's already-drawn samples/batch, in the message layout;
+* ``full_grads_at(p)`` -- per-worker FULL local gradients at shared params
+  ``p`` (one vectorized pass over each worker's whole shard).  The launch
+  paths have no finite local dataset and pass ``None``; lsvrg then anchors
+  on the current batch gradient (the practical large-scale variant,
+  DESIGN.md Sec. 9).
+
+SAGA through this interface is BIT-EXACT with the pre-refactor pipeline
+(tests/test_variance.py pins the seam): ``correct`` is a verbatim
+delegation to :func:`repro.core.saga.saga_correct_scatter` and the index
+draw reproduces the historical ``jax.random.randint`` call shapes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core import saga as saga_lib
+
+Pytree = Any
+
+# correct() -> (messages, new_state, metrics)
+CorrectOut = tuple[Pytree, Any, dict]
+
+
+def _bcast_like(vec: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """(W,) -> (W, 1, ..., 1) broadcastable against a (W, ...) leaf."""
+    return vec.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+class LsvrgState(NamedTuple):
+    """Per-worker loopless-SVRG memory (arXiv:2303.04560), stacked over
+    workers: ``snapshot`` holds each worker's reference point x~_w (the
+    params at its last Bernoulli refresh), ``anchor`` its full local
+    gradient mu_w = grad f_w(x~_w).  Leaves are (W, *shape) pytrees or the
+    packed (W, D) buffers -- O(2D) per client either way, the whole point
+    vs SAGA's O((J+1) D) table."""
+
+    snapshot: Pytree
+    anchor: Pytree
+
+
+class VarianceReducer:
+    """Base strategy: no reduction (plain stochastic gradients).
+
+    Subclasses override the state lifecycle; the base class IS the ``sgd``
+    reducer (stateless identity correction, single-sample draw).
+    """
+
+    name = "sgd"
+    #: whether the reducer carries per-worker state at all
+    stateful = False
+    #: whether ``correct`` consumes the drawn sample index (table reducers)
+    uses_sample_idx = False
+
+    def __init__(self, cfg=None):
+        self.cfg = cfg
+
+    # -- sampling ----------------------------------------------------------
+    def draw_indices(self, key: jax.Array, num_workers: int,
+                     num_samples: int) -> jnp.ndarray:
+        """Per-worker sample draw for this step; (W,) int32 by default."""
+        return jax.random.randint(key, (num_workers,), 0, num_samples)
+
+    # -- lifecycle ---------------------------------------------------------
+    def wants_state(self, saga_num_samples: int = 0) -> bool:
+        """Whether the launch layer should allocate/carry VR state (SAGA
+        additionally needs a positive table size)."""
+        return self.stateful
+
+    def init_sim(self, params: Pytree, *,
+                 per_sample_grads_fn: Callable[[], Pytree],
+                 full_grads_fn: Callable[[Pytree], Pytree],
+                 num_workers: int,
+                 pack_fn: Optional[Callable[[Pytree, int], Pytree]] = None):
+        """Initial state on the finite-sum simulation paths.
+
+        ``per_sample_grads_fn()``: the Alg.-1 table sweep -> leaves
+        (W, J, ...).  ``full_grads_fn(params)``: per-worker full local
+        gradients at ``params`` -> leaves (W, ...).  ``pack_fn(tree,
+        batch_ndim)`` packs into the Sec.-8 buffer layout (None keeps the
+        per-leaf layout).  Oracles are lazy so only what the reducer needs
+        is traced.
+        """
+        return None
+
+    def init_zeros(self, params: Pytree, num_workers: int,
+                   num_samples: int = 0, dtype=None):
+        """Cold-start state for the launch paths (no init sweep)."""
+        return None
+
+    def correct(self, state, grads: Pytree, sample_idx, key: jax.Array, *,
+                params: Optional[Pytree] = None,
+                grads_at: Optional[Callable[[Pytree], Pytree]] = None,
+                full_grads_at: Optional[Callable[[Pytree], Pytree]] = None,
+                ) -> CorrectOut:
+        return grads, state, {}
+
+    # -- layout ------------------------------------------------------------
+    def pack_state(self, spec: packing.PackSpec, state):
+        """Pytree-layout state -> packed (Sec. 8) layout."""
+        return state
+
+    def unpack_state(self, spec: packing.PackSpec, state):
+        return state
+
+    def state_specs(self, pspecs: Pytree, wa_spec):
+        """PartitionSpecs of the state for the launch layer: per-worker
+        leaves sharded over the worker axes like the gradients."""
+        return None
+
+    def state_structs(self, param_structs: Pytree, num_workers: int,
+                      num_samples: int = 0):
+        """ShapeDtypeStructs of the state for ``num_workers`` workers."""
+        return None
+
+    # -- accounting --------------------------------------------------------
+    def memory_elems(self, num_workers: int, num_samples: int,
+                     model_dim: int) -> int:
+        """Total state elements for (W, J, D) -- the dryrun/bench estimate."""
+        return 0
+
+    #: HBM passes over the per-device message shard that one correction
+    #: costs (the analytic roofline term; 0 for stateless reducers).
+    state_hbm_passes = 0
+
+
+class MinibatchReducer(VarianceReducer):
+    """The paper's BSGD baseline: mean gradient of a random minibatch.
+    Reduction happens in the SAMPLING (a (W, B) index draw feeding a mean
+    loss), so the correction itself is the identity."""
+
+    name = "minibatch"
+
+    def draw_indices(self, key, num_workers, num_samples):
+        return jax.random.randint(
+            key, (num_workers, self.cfg.minibatch_size), 0, num_samples)
+
+
+class SagaReducer(VarianceReducer):
+    """Paper Alg. 1: per-sample gradient table + running average
+    (:mod:`repro.core.saga`).  O((J+1) D) per client -- the memory wall
+    lsvrg removes."""
+
+    name = "saga"
+    stateful = True
+    uses_sample_idx = True
+
+    def wants_state(self, saga_num_samples: int = 0) -> bool:
+        return saga_num_samples > 0
+
+    def init_sim(self, params, *, per_sample_grads_fn, full_grads_fn,
+                 num_workers, pack_fn=None):
+        per_sample = per_sample_grads_fn()                    # (W, J, ...)
+        if pack_fn is not None:
+            per_sample = pack_fn(per_sample, 2)               # (W, J, D)
+        return saga_lib.saga_init(per_sample)
+
+    def init_zeros(self, params, num_workers, num_samples=0, dtype=None):
+        return saga_lib.saga_init_zeros(params, num_workers, num_samples,
+                                        dtype=dtype)
+
+    def correct(self, state, grads, sample_idx, key, *, params=None,
+                grads_at=None, full_grads_at=None) -> CorrectOut:
+        msgs, new_state = saga_lib.saga_correct_scatter(state, grads,
+                                                        sample_idx)
+        return msgs, new_state, {}
+
+    def pack_state(self, spec, state):
+        return saga_lib.pack_saga_state(spec, state)
+
+    def unpack_state(self, spec, state):
+        return saga_lib.unpack_saga_state(spec, state)
+
+    def state_specs(self, pspecs, wa_spec):
+        from jax.sharding import PartitionSpec as P
+        is_p = lambda x: isinstance(x, P)
+        return saga_lib.SagaState(
+            table=jax.tree_util.tree_map(
+                lambda s: P(wa_spec, None, *tuple(s)), pspecs, is_leaf=is_p),
+            avg=jax.tree_util.tree_map(
+                lambda s: P(wa_spec, *tuple(s)), pspecs, is_leaf=is_p))
+
+    def state_structs(self, param_structs, num_workers, num_samples=0):
+        return saga_lib.SagaState(
+            table=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (num_workers, num_samples) + s.shape, s.dtype),
+                param_structs),
+            avg=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((num_workers,) + s.shape,
+                                               s.dtype), param_structs))
+
+    def memory_elems(self, num_workers, num_samples, model_dim):
+        return num_workers * (num_samples + 1) * model_dim
+
+    # row read + avg r/w + row write (DESIGN.md Sec. 4)
+    state_hbm_passes = 4
+
+
+class LooplessSvrgReducer(VarianceReducer):
+    """Byzantine-robust loopless SVRG (arXiv:2303.04560).
+
+    Message: m_w = grad f_{w,i}(x^k) - grad f_{w,i}(x~_w) + mu_w, then with
+    probability ``cfg.lsvrg_p`` (a per-worker Bernoulli coin drawn from the
+    step key INSIDE the compiled step -- branchless where-select, no
+    retrace) the snapshot refreshes: x~_w <- x^k, mu_w <- grad f_w(x^k).
+    Same unbiased, vanishing-variance property as SAGA (what makes the
+    robust aggregation work) with O(2D) per-client state instead of the
+    O((J+1) D) table.
+
+    The full-gradient refresh uses ``full_grads_at`` when the path can
+    provide it (the finite-sum simulation paths: one vectorized pass over
+    each worker's local shard); launch paths pass ``None`` and the anchor
+    falls back to the current batch gradient -- the standard large-scale
+    estimate (the anchor is then itself stochastic, but still centered).
+    """
+
+    name = "lsvrg"
+    stateful = True
+
+    def init_sim(self, params, *, per_sample_grads_fn, full_grads_fn,
+                 num_workers, pack_fn=None):
+        snapshot = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p[None], (num_workers,) + p.shape) + 0,
+            params)
+        anchor = full_grads_fn(params)                        # (W, ...)
+        if pack_fn is not None:
+            snapshot = pack_fn(snapshot, 1)                   # (W, D)
+            anchor = pack_fn(anchor, 1)
+        return LsvrgState(snapshot=snapshot, anchor=anchor)
+
+    def init_zeros(self, params, num_workers, num_samples=0, dtype=None):
+        def snap(p):
+            return jnp.broadcast_to(
+                p[None].astype(dtype or p.dtype),
+                (num_workers,) + p.shape) + 0
+        return LsvrgState(
+            snapshot=jax.tree_util.tree_map(snap, params),
+            anchor=jax.tree_util.tree_map(
+                lambda p: jnp.zeros((num_workers,) + p.shape,
+                                    dtype or p.dtype), params))
+
+    def correct(self, state, grads, sample_idx, key, *, params=None,
+                grads_at=None, full_grads_at=None) -> CorrectOut:
+        if params is None or grads_at is None:
+            raise ValueError(
+                "lsvrg needs params= and grads_at= (gradients at the "
+                "snapshot); the step builder must bind both oracles")
+        g_snap = grads_at(state.snapshot)
+        msgs = jax.tree_util.tree_map(
+            lambda g, s, a: g - s.astype(g.dtype) + a.astype(g.dtype),
+            grads, g_snap, state.anchor)
+        # Bernoulli(p) snapshot refresh, one coin per worker per step.
+        w = jax.tree_util.tree_leaves(grads)[0].shape[0]
+        coin = jax.random.bernoulli(key, self.cfg.lsvrg_p, (w,))
+        fresh = full_grads_at(params) if full_grads_at is not None else grads
+        new_state = LsvrgState(
+            snapshot=jax.tree_util.tree_map(
+                lambda s, p: jnp.where(_bcast_like(coin, s),
+                                       p.astype(s.dtype), s),
+                state.snapshot, params),
+            anchor=jax.tree_util.tree_map(
+                lambda a, f: jnp.where(_bcast_like(coin, a),
+                                       f.astype(a.dtype), a),
+                state.anchor, fresh))
+        metrics = {"vr_snapshot_rate": jnp.mean(coin.astype(jnp.float32))}
+        return msgs, new_state, metrics
+
+    def pack_state(self, spec, state):
+        return LsvrgState(snapshot=spec.pack(state.snapshot, batch_ndim=1),
+                          anchor=spec.pack(state.anchor, batch_ndim=1))
+
+    def unpack_state(self, spec, state):
+        return LsvrgState(snapshot=spec.unpack(state.snapshot),
+                          anchor=spec.unpack(state.anchor))
+
+    def state_specs(self, pspecs, wa_spec):
+        from jax.sharding import PartitionSpec as P
+        is_p = lambda x: isinstance(x, P)
+        worker = jax.tree_util.tree_map(
+            lambda s: P(wa_spec, *tuple(s)), pspecs, is_leaf=is_p)
+        return LsvrgState(snapshot=worker, anchor=worker)
+
+    def state_structs(self, param_structs, num_workers, num_samples=0):
+        worker = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((num_workers,) + s.shape, s.dtype),
+            param_structs)
+        return LsvrgState(snapshot=worker, anchor=worker)
+
+    def memory_elems(self, num_workers, num_samples, model_dim):
+        return 2 * num_workers * model_dim
+
+    # snapshot read (for grads_at) + anchor read + snapshot/anchor writes +
+    # the refresh gradient write
+    state_hbm_passes = 5
+
+
+# name -> reducer class.  VR_NAMES and the unknown-name error derive from
+# this dict (the aggregator/attack registry convention): registering here
+# is the ONE place a new reduction method is added.
+_REDUCERS: dict[str, type[VarianceReducer]] = {
+    "sgd": VarianceReducer,
+    "minibatch": MinibatchReducer,
+    "saga": SagaReducer,
+    "lsvrg": LooplessSvrgReducer,
+}
+
+VR_NAMES = tuple(_REDUCERS)
+
+
+def get_reducer(cfg) -> VarianceReducer:
+    """Build the variance reducer named by ``cfg.vr`` (a
+    :class:`repro.core.robust_step.RobustConfig` or anything carrying the
+    knobs the reducer reads: ``vr``, ``minibatch_size``, ``lsvrg_p``)."""
+    try:
+        cls = _REDUCERS[cfg.vr]
+    except KeyError:
+        raise ValueError(
+            f"unknown variance reducer {cfg.vr!r}; known: "
+            f"{', '.join(sorted(_REDUCERS))}") from None
+    return cls(cfg)

@@ -166,6 +166,7 @@ def analytic_costs(cfg: ModelConfig, shape: ShapeConfig, *, chips: int,
     c.add(c=dirs * L * blocks_per_layer / 2 * ar(tokens_per_dev_group * d * BF16))
 
     # ---- robust aggregation (train only) ------------------------------------
+    vr_state_bytes = 0.0
     if shape.kind == "train" and robust is not None:
         w = num_workers
         iters = robust.weiszfeld_iters
@@ -183,12 +184,21 @@ def analytic_costs(cfg: ModelConfig, shape: ShapeConfig, *, chips: int,
                 c.add(f=4 * iters * rows * (n_total / model_shards))
         elif robust.aggregator == "mean":
             c.add(c=ar(p_loc))
-        if robust.vr == "saga" and saga_num_samples:
-            c.add(b=4 * p_loc)                                  # row read + avg r/w + row write
-    return {
+        # Variance-reduction terms come from the reducer itself (the one
+        # place that knows each method's state layout): per-step HBM
+        # passes over the message shard, and the resident state bytes.
+        reducer = robust.reducer()
+        if reducer.wants_state(saga_num_samples):
+            c.add(b=reducer.state_hbm_passes * p_loc)
+            vr_state_bytes = (BF16 * reducer.memory_elems(
+                w, saga_num_samples, n_total) / chips)
+    out = {
         "flops_per_device": c.flops_per_device,
         "hbm_bytes_per_device": c.hbm_bytes_per_device,
         "collective_bytes_per_device": c.collective_bytes_per_device,
         "params_total": n_total,
         "params_active": n_active,
     }
+    if shape.kind == "train" and robust is not None:
+        out["vr_state_bytes_per_device"] = vr_state_bytes
+    return out

@@ -37,13 +37,22 @@ PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
 HBM_BW = 819e9          # bytes/s per chip
 LINK_BW = 50e9          # bytes/s per ICI link
 
-# SAGA defaults at scale (DESIGN.md Sec. 4): table J per arch; 0 => Byrd-SGD.
+# Variance-reduction defaults at scale (DESIGN.md Secs. 4, 9): SAGA table
+# size J per arch; 0 => Byrd-SGD.  Only consumed by TABLE reducers
+# (reducer.uses_sample_idx); state sizing itself routes through
+# ``VarianceReducer.memory_elems`` so lsvrg and future reducers report
+# correct dryrun memory with no special-casing here.
 SAGA_SAMPLES = {
     "mamba2-130m": 8,
     "whisper-tiny": 8,
     "paligemma-3b": 4,
     "qwen2-moe-a2.7b": 2,
 }
+
+
+def vr_num_samples(arch: str, robust: RobustConfig) -> int:
+    """The J the reducer's table needs (0 for non-table reducers)."""
+    return SAGA_SAMPLES.get(arch, 0) if robust.reducer().uses_sample_idx else 0
 
 # long_500k applicability (DESIGN.md Sec. 5): whisper enc-dec is skipped.
 LONG_SKIP = {"whisper-tiny": "enc-dec with 448-token decoder context; 500k decode not meaningful"}
@@ -96,15 +105,16 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         if shape.kind == "train":
             step, sspecs, sstructs = steps_lib.make_train_step(
                 model, robust, train, mesh,
-                saga_num_samples=SAGA_SAMPLES.get(arch, 0) if robust.vr == "saga" else 0)
+                saga_num_samples=vr_num_samples(arch, robust))
             bspecs = shard_lib.batch_specs(cfg, shape, mesh)
             bstructs = input_specs(cfg, shape, num_workers=w)
             in_sh = (shard_lib.named(mesh, sspecs),
                      shard_lib.named(mesh, bspecs),
                      shard_lib.replicated(mesh))
+            # Prefix sharding for the metrics subtree: reducers may add
+            # their own scalar metrics (e.g. lsvrg's vr_snapshot_rate).
             out_sh = (shard_lib.named(mesh, sspecs),
-                      jax.tree_util.tree_map(lambda _: shard_lib.replicated(mesh),
-                                             {"loss": 0, "agg_norm": 0}))
+                      shard_lib.replicated(mesh))
             fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
             lowered = fn.lower(sstructs(), bstructs,
                                jax.ShapeDtypeStruct((2,), jnp.uint32))
@@ -189,8 +199,7 @@ def attach_roofline(record: dict) -> None:
         cfg, shape, chips=chips, model_shards=16,
         num_workers=chips // 16,
         robust=robust if shape.kind == "train" else None,
-        saga_num_samples=SAGA_SAMPLES.get(record["arch"], 0)
-        if record.get("robust", {}).get("vr") == "saga" else 0,
+        saga_num_samples=vr_num_samples(record["arch"], robust),
         remat=record.get("remat", True))
     record["analytic"] = an
     record["hlo_flops_per_device"] = record.get("flops_per_device")

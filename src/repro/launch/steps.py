@@ -5,7 +5,9 @@ step of DESIGN.md Sec. 2:
 
   1. per-worker gradients -- ``vmap(grad)`` over the leading worker axis of
      the batch (sharded over the pod/data mesh axes);
-  2. optional SAGA correction (tables sharded like the gradients);
+  2. optional variance-reduction correction via the
+     :mod:`repro.core.variance` registry (SAGA tables / lsvrg snapshots
+     sharded like the gradients);
   3. Byzantine attack injection (mask-replace the first B workers);
   4. robust aggregation (every registry aggregator runs on both paths):
        * ``comm="gather"``  -- paper-faithful replicated master (XLA
@@ -21,8 +23,9 @@ single attack pass, and the flat aggregation engine -- instead of walking
 the gradient pytree leaf-by-leaf; ``packed=False`` keeps the pre-refactor
 per-leaf pipeline (the ``benchmarks/bench_step.py`` baseline).  Compile
 the returned step with :func:`compile_train_step` to DONATE the train
-state (params + opt moments + SAGA table): the input buffers are reused
-for the outputs instead of holding two state generations live.
+state (params + opt moments + variance-reduction state): the input
+buffers are reused for the outputs instead of holding two state
+generations live.
 
 Worker axes may be a single ``data`` axis or multi-pod ``(pod, data)``
 (``launch/mesh.py``); the step builder is agnostic -- it forwards
@@ -43,7 +46,6 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.core import attacks as attack_lib
-from repro.core import saga as saga_lib
 from repro.core.robust_step import RobustConfig, sharded_aggregate
 from repro.core import aggregators as agg_lib
 from repro.launch import mesh as mesh_lib
@@ -77,29 +79,6 @@ def _opt_structs_like(optimizer_name: str, ps: Pytree) -> Pytree:
                                nu=jax.tree_util.tree_map(f32, ps))
 
 
-def _saga_specs_like(pspecs: Pytree, wa_spec) -> saga_lib.SagaState:
-    """SAGA table/avg PartitionSpecs: per-worker tables sharded over the
-    worker axes like the gradients (DESIGN.md Sec. 4); shared by the master
-    and decentralized builders."""
-    return saga_lib.SagaState(
-        table=jax.tree_util.tree_map(lambda s: P(wa_spec, None, *tuple(s)),
-                                     pspecs,
-                                     is_leaf=lambda x: isinstance(x, P)),
-        avg=jax.tree_util.tree_map(lambda s: P(wa_spec, *tuple(s)), pspecs,
-                                   is_leaf=lambda x: isinstance(x, P)))
-
-
-def _saga_structs_like(ps: Pytree, w: int, saga_num_samples: int) -> saga_lib.SagaState:
-    """SAGA table/avg ShapeDtypeStructs for ``w`` workers with J =
-    ``saga_num_samples`` table rows; same sharing contract as above."""
-    return saga_lib.SagaState(
-        table=jax.tree_util.tree_map(
-            lambda s: jax.ShapeDtypeStruct((w, saga_num_samples) + s.shape,
-                                           s.dtype), ps),
-        avg=jax.tree_util.tree_map(
-            lambda s: jax.ShapeDtypeStruct((w,) + s.shape, s.dtype), ps))
-
-
 # The auto-jit gather master packs only the rules that need FULL-VECTOR
 # message geometry (and therefore replicate the (W, p) matrix anyway);
 # coordinate-separable and per-leaf rules stay leaf-sharded (see the
@@ -113,7 +92,7 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
     """Returns (train_step, state_specs, make_state_structs).
 
     ``train_step(state, batch, key) -> (state, metrics)`` where ``state`` is
-    a dict {params, opt, saga?, step}.  Batch leaves carry a leading worker
+    a dict {params, opt, vr?, step}.  Batch leaves carry a leading worker
     axis of size num_workers(mesh).
     """
     cfg = model.cfg
@@ -126,7 +105,8 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
     w = mesh_lib.num_workers(mesh)
     optimizer = optim_lib.get_optimizer(train.optimizer, train.lr)
     attack_cfg = robust.attack_config()
-    use_saga = robust.vr == "saga" and saga_num_samples > 0
+    reducer = robust.reducer()
+    use_vr = reducer.wants_state(saga_num_samples)
 
     def train_step(state, batch, key):
         params = state["params"]
@@ -142,13 +122,26 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
             lambda g: jax.lax.with_sharding_constraint(
                 g, jax.sharding.NamedSharding(mesh, P(waxes))), grads)
 
-        if use_saga:
-            idx = jax.random.randint(jax.random.fold_in(key, 1), (w,), 0,
-                                     saga_num_samples)
-            msgs, saga_state = saga_lib.saga_correct_scatter(
-                state["saga"], grads, idx)
+        if use_vr:
+            # Table reducers (saga) draw this step's sample index; batch
+            # reducers (lsvrg) correct the batch gradient directly, with
+            # the snapshot oracle re-running the grad vmap at the
+            # snapshot params and no full-gradient oracle (the anchor
+            # refreshes from the current batch gradient -- the practical
+            # large-scale variant, DESIGN.md Sec. 9).
+            idx = None
+            if reducer.uses_sample_idx:
+                idx = reducer.draw_indices(jax.random.fold_in(key, 1), w,
+                                           saga_num_samples)
+            msgs, vr_state, vr_metrics = reducer.correct(
+                state["vr"], grads, idx, jax.random.fold_in(key, 3),
+                params=jax.tree_util.tree_map(
+                    lambda p: jnp.broadcast_to(p[None], (w,) + p.shape),
+                    params),
+                grads_at=lambda snap: jax.vmap(
+                    jax.grad(worker_loss))(snap, batch))
         else:
-            msgs, saga_state = grads, state.get("saga")
+            msgs, vr_state, vr_metrics = grads, state.get("vr"), {}
 
         if robust.packed and robust.comm == "gather" and \
                 robust.aggregator in PACKED_GATHER_RULES:
@@ -157,7 +150,7 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
             # FULL-VECTOR rules route here -- they replicate the message
             # matrix anyway (the Weiszfeld/Gram needs global norms), so
             # packing collapses their per-leaf launches for free.  The
-            # SAGA state stays per-leaf so its tables keep their
+            # VR state stays per-leaf so its tables/snapshots keep their
             # model-axis sharding (DESIGN.md Sec. 4).
             spec = robust.message_spec(msgs, batch_ndim=1)
             buf = jax.lax.with_sharding_constraint(
@@ -186,13 +179,14 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
                                               state["step"])
         params = optim_lib.apply_updates(params, updates)
         new_state = {"params": params, "opt": opt_state, "step": state["step"] + 1}
-        if use_saga:
-            new_state["saga"] = saga_state
+        if use_vr:
+            new_state["vr"] = vr_state
         metrics = {
             "loss": jnp.mean(losses),
             "agg_norm": jnp.sqrt(sum(
                 jnp.sum(jnp.square(g.astype(jnp.float32)))
                 for g in jax.tree_util.tree_leaves(agg))),
+            **vr_metrics,
         }
         return new_state, metrics
 
@@ -204,16 +198,16 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
     def state_specs():
         sp = {"params": pspecs, "opt": _opt_specs_like(train.optimizer, pspecs),
               "step": P()}
-        if use_saga:
-            sp["saga"] = _saga_specs_like(pspecs, wa_spec)
+        if use_vr:
+            sp["vr"] = reducer.state_specs(pspecs, wa_spec)
         return sp
 
     def state_structs():
         ps = model.param_structs()
         st = {"params": ps, "opt": _opt_structs_like(train.optimizer, ps),
               "step": jax.ShapeDtypeStruct((), jnp.int32)}
-        if use_saga:
-            st["saga"] = _saga_structs_like(ps, w, saga_num_samples)
+        if use_vr:
+            st["vr"] = reducer.state_structs(ps, w, saga_num_samples)
         return st
 
     return train_step, state_specs(), state_structs
@@ -267,7 +261,8 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
             "paper path)")
     validate_schedule(robust, sched, w)  # fail at build time, not first jit
     optimizer = optim_lib.get_optimizer(train.optimizer, train.lr)
-    use_saga = robust.vr == "saga" and saga_num_samples > 0
+    reducer = robust.reducer()
+    use_vr = reducer.wants_state(saga_num_samples)
     b = robust.num_byzantine if robust.attack != "none" else 0
     honest = (jnp.arange(w) >= b).astype(jnp.float32)  # first B nodes attack
     wh = max(w - b, 1)
@@ -287,13 +282,21 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
             lambda g, s: jax.lax.with_sharding_constraint(
                 g, jax.sharding.NamedSharding(mesh, s)), grads, node_specs)
 
-        if use_saga:
-            idx = jax.random.randint(jax.random.fold_in(key, 1), (w,), 0,
-                                     saga_num_samples)
-            msgs, saga_state = saga_lib.saga_correct_scatter(
-                state["saga"], grads, idx)
+        if use_vr:
+            # Same oracle binding as make_train_step, but the params/
+            # snapshot gradients are per-NODE (each node corrects against
+            # its own iterate).
+            idx = None
+            if reducer.uses_sample_idx:
+                idx = reducer.draw_indices(jax.random.fold_in(key, 1), w,
+                                           saga_num_samples)
+            msgs, vr_state, vr_metrics = reducer.correct(
+                state["vr"], grads, idx, jax.random.fold_in(key, 3),
+                params=params,
+                grads_at=lambda snap: jax.vmap(
+                    jax.grad(model.loss))(snap, batch))
         else:
-            msgs, saga_state = grads, state.get("saga")
+            msgs, vr_state, vr_metrics = grads, state.get("vr"), {}
 
         def agg_fn(local_msgs, t, k):
             local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
@@ -330,8 +333,8 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
             params = optim_lib.apply_updates(params, updates)
         new_state = {"params": params, "opt": opt_state,
                      "step": state["step"] + 1}
-        if use_saga:
-            new_state["saga"] = saga_state
+        if use_vr:
+            new_state["vr"] = vr_state
 
         # Consensus drift of the honest nodes' parameter copies.
         cons = jnp.zeros((), jnp.float32)
@@ -346,6 +349,7 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
             "agg_norm": jnp.sqrt(sum(
                 jnp.sum(jnp.square(g.astype(jnp.float32)))
                 for g in jax.tree_util.tree_leaves(agg_move)) / w),
+            **vr_metrics,
         }
         return new_state, metrics
 
@@ -354,8 +358,8 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
         sp = {"params": node_specs,
               "opt": _opt_specs_like(train.optimizer, node_specs),
               "step": P()}
-        if use_saga:
-            sp["saga"] = _saga_specs_like(pspecs, wa_spec)
+        if use_vr:
+            sp["vr"] = reducer.state_specs(pspecs, wa_spec)
         return sp
 
     def state_structs():
@@ -364,8 +368,8 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
         nps = jax.tree_util.tree_map(node, ps)
         st = {"params": nps, "opt": _opt_structs_like(train.optimizer, nps),
               "step": jax.ShapeDtypeStruct((), jnp.int32)}
-        if use_saga:
-            st["saga"] = _saga_structs_like(ps, w, saga_num_samples)
+        if use_vr:
+            st["vr"] = reducer.state_structs(ps, w, saga_num_samples)
         return st
 
     return train_step, state_specs(), state_structs
@@ -413,9 +417,10 @@ def _sharded_agg(msgs: Pytree, robust: RobustConfig, mesh,
 def compile_train_step(step_fn, *, donate_state: bool = True):
     """jit a train step with the TRAIN STATE DONATED (arg 0).
 
-    The state -- params, optimizer moments, the SAGA table/avg (the largest
-    buffer in the federation: W x J x p), and per-node copies on the
-    decentralized path -- is consumed and re-emitted every step, so
+    The state -- params, optimizer moments, the variance-reduction state
+    (for SAGA the largest buffer in the federation: W x J x p), and
+    per-node copies on the decentralized path -- is consumed and
+    re-emitted every step, so
     donating it lets XLA reuse the input buffers for the outputs instead
     of holding both generations live (halves peak state memory; in-place
     updates on backends that support donation).  Works for both state

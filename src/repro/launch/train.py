@@ -94,15 +94,22 @@ def main() -> None:
                     help="on-wire dtype of the packed worker messages; "
                     "bfloat16 halves communication volume (robust rules "
                     "still accumulate in f32)")
-    ap.add_argument("--vr", default="sgd", choices=["sgd", "saga"])
+    from repro.core.variance import VR_NAMES
+    ap.add_argument("--vr", default="sgd", choices=list(VR_NAMES),
+                    help="variance reduction (repro.core.variance): sgd "
+                    "(none), minibatch, saga (per-sample table, O(J*D)/"
+                    "client), lsvrg (loopless-SVRG snapshots, O(D)/client)")
     ap.add_argument("--saga-samples", type=int, default=4)
+    ap.add_argument("--lsvrg-p", type=float, default=0.1,
+                    help="per-step Bernoulli snapshot-refresh probability "
+                    "for --vr lsvrg")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true",
                     help="restore the newest checkpoint in --checkpoint-dir "
-                    "(full train state: params + opt + SAGA + step) and "
+                    "(full train state: params + opt + VR state + step) and "
                     "continue from there")
     args = ap.parse_args()
     if args.resume and not args.checkpoint_dir:
@@ -130,12 +137,14 @@ def main() -> None:
         topology=args.topology, topology_seed=args.topology_seed,
         topology_p=args.topology_p, gossip=args.gossip,
         schedule=args.schedule, schedule_period=args.schedule_period,
-        packed=not args.per_leaf, message_dtype=args.message_dtype)
+        packed=not args.per_leaf, message_dtype=args.message_dtype,
+        lsvrg_p=args.lsvrg_p)
     train = TrainConfig(optimizer=args.optimizer, lr=args.lr)
     from repro.core.robust_step import resolve_schedule
     sched = resolve_schedule(robust, w)
     decentralized = sched is not None
-    saga_samples = args.saga_samples if args.vr == "saga" else 0
+    reducer = robust.reducer()
+    saga_samples = args.saga_samples if reducer.uses_sample_idx else 0
     if decentralized:
         # Schedule-level report: per-round spectral gaps + the joint gap.
         print(f"schedule: {sched.describe()}")
@@ -159,9 +168,11 @@ def main() -> None:
         opt = get_optimizer(args.optimizer, args.lr)
         state = {"params": params, "opt": opt.init(params),
                  "step": jnp.zeros((), jnp.int32)}
-        if args.vr == "saga":
-            from repro.core.saga import saga_init_zeros
-            state["saga"] = saga_init_zeros(params0, w, args.saga_samples)
+        if reducer.wants_state(saga_samples):
+            # Cold-start VR state (zero SAGA table / zero lsvrg anchor):
+            # warms up over the first steps instead of paying a J-pass
+            # init sweep at LLM scale.
+            state["vr"] = reducer.init_zeros(params0, w, saga_samples)
         ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
         start = 0
         if args.resume:
@@ -170,7 +181,7 @@ def main() -> None:
                 start = step0
                 print(f"resumed full train state from step {step0}")
         # State donation lives in the step compiler (launch/steps.py):
-        # params, opt moments and the SAGA table are all in arg 0.
+        # params, opt moments and the VR state are all in arg 0.
         jstep = steps_lib.compile_train_step(step_fn)
         t0 = time.time()
         for i in range(start, args.steps):

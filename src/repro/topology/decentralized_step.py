@@ -2,7 +2,7 @@
 
 Server-free counterpart of :mod:`repro.core.robust_step` (DESIGN.md
 Secs. 6-7): there is no master -- every node keeps ITS OWN parameters,
-computes its own (SAGA-corrected) stochastic gradient, exchanges messages
+computes its own (variance-reduced) stochastic gradient, exchanges messages
 only with its graph neighbors, and robustly aggregates its masked
 neighborhood with any registry aggregator (:mod:`repro.topology.masked`).
 The message channel is configurable (``cfg.gossip``): GRADIENTS (aggregate
@@ -48,7 +48,6 @@ import jax.numpy as jnp
 from repro import compat
 from repro.core import attacks as attack_lib
 from repro.core import packing
-from repro.core import saga as saga_lib
 from repro.core.robust_step import (FederatedState, _flatten_concat,
                                     _local_leaf_ids)
 from repro.optim import optimizers as optim_lib
@@ -219,7 +218,7 @@ def make_decentralized_step(
 
     Gossip modes (``cfg.gossip``):
 
-    * ``"gradient"`` (PR-3 behaviour) -- nodes exchange (SAGA-corrected)
+    * ``"gradient"`` (PR-3 behaviour) -- nodes exchange (variance-reduced)
       GRADIENT messages, robust-aggregate the masked neighborhood, and
       apply the optimizer to the aggregate;
     * ``"params"`` (arXiv:2308.05292's setting) -- each node first takes a
@@ -247,6 +246,7 @@ def make_decentralized_step(
     gossip = _check_gossip(cfg)
     grad_fn = jax.grad(loss_fn)
     attack_cfg = cfg.attack_config()
+    reducer = cfg.reducer()
     is_byz = jnp.arange(n) >= wh
 
     def sample_batch(data_w, idx):
@@ -255,36 +255,80 @@ def make_decentralized_step(
     def per_worker_grad(params_w, data_w, idx):
         return grad_fn(params_w, sample_batch(data_w, idx))
 
+    def full_local_grads(params_per_worker):
+        """(W_h, ...) full local gradients at per-NODE honest params (the
+        lsvrg anchor oracle)."""
+        return jax.vmap(grad_fn)(params_per_worker, worker_data)
+
+    pack_fn = None
+    if cfg.packed:
+        def pack_fn(tree, batch_ndim):
+            spec = cfg.message_spec(tree, batch_ndim=batch_ndim)
+            return spec.pack(tree, batch_ndim=batch_ndim)
+
     def init_fn(params, key):
         nodes = jax.tree_util.tree_map(
             lambda p: jnp.broadcast_to(p[None], (n,) + p.shape) + 0, params)
         opt_state = optimizer.init(nodes)
-        saga_state = None
-        if cfg.vr == "saga":
+
+        def per_sample_table():
             def worker_tab(data_w):
                 return jax.vmap(
                     lambda jj: grad_fn(params, sample_batch(data_w, jj[None]))
                 )(jnp.arange(j))
-            per_sample = jax.vmap(worker_tab)(worker_data)
-            if cfg.packed:
-                # Packed SAGA memory, same as the master path (Sec. 8).
-                spec = cfg.message_spec(per_sample, batch_ndim=2)
-                per_sample = spec.pack(per_sample, batch_ndim=2)
-            saga_state = saga_lib.saga_init(per_sample)
-        return FederatedState(nodes, opt_state, saga_state,
+            return jax.vmap(worker_tab)(worker_data)
+
+        # VR state covers the HONEST workers only (the first wh node ids;
+        # Byzantine nodes fabricate messages, they keep no tables), in the
+        # message layout -- same convention as the master path (Sec. 8).
+        vr_state = reducer.init_sim(
+            params,
+            per_sample_grads_fn=per_sample_table,
+            full_grads_fn=lambda p: full_local_grads(
+                jax.tree_util.tree_map(
+                    lambda q: jnp.broadcast_to(q[None], (wh,) + q.shape), p)),
+            num_workers=wh, pack_fn=pack_fn)
+        return FederatedState(nodes, opt_state, vr_state,
                               jnp.zeros((), jnp.int32), key)
 
     def honest_grads(state, k_idx):
         honest_params = jax.tree_util.tree_map(lambda x: x[:wh], state.params)
-        if cfg.vr == "minibatch":
-            idx = jax.random.randint(k_idx, (wh, cfg.minibatch_size), 0, j)
+        idx = reducer.draw_indices(k_idx, wh, j)
+        if idx.ndim == 2:       # minibatch layout: (W, B) sample draws
             honest = jax.vmap(per_worker_grad)(honest_params, worker_data, idx)
             return honest, idx
-        idx = jax.random.randint(k_idx, (wh,), 0, j)
         honest = jax.vmap(
             lambda p, d, i: per_worker_grad(p, d, i[None])
         )(honest_params, worker_data, idx)
         return honest, idx
+
+    def correct(state, honest, idx, k_idx, *, spec=None):
+        """Route the honest nodes' raw gradients through the reducer (the
+        snapshot oracles evaluate against each node's OWN params)."""
+        if not reducer.stateful:
+            return honest, state.vr, {}
+        k_vr = jax.random.fold_in(k_idx, 1)   # DCE'd unless the reducer draws
+        honest_params = jax.tree_util.tree_map(lambda x: x[:wh], state.params)
+
+        def as_tree(x):
+            return spec.unpack(x) if spec is not None else x
+
+        def as_msgs(tree):
+            return spec.pack(tree, batch_ndim=1) if spec is not None else tree
+
+        def grads_at(snapshot):
+            snap = as_tree(snapshot)
+            return as_msgs(jax.vmap(
+                lambda p, d, i: per_worker_grad(p, d, i[None])
+            )(snap, worker_data, idx))
+
+        def full_grads_at(p):
+            return as_msgs(full_local_grads(as_tree(p)))
+
+        return reducer.correct(
+            state.vr, honest, idx, k_vr,
+            params=as_msgs(honest_params),
+            grads_at=grads_at, full_grads_at=full_grads_at)
 
     def consensus(params):
         xh = jax.tree_util.tree_map(lambda x: x[:wh], params)
@@ -301,11 +345,7 @@ def make_decentralized_step(
         mask = sched.mask_at(state.step)
         mixing = sched.mixing_at(state.step)
         honest, idx = honest_grads(state, k_idx)
-        if cfg.vr == "saga":
-            honest, saga_state = saga_lib.saga_correct_scatter(
-                state.saga, honest, idx)
-        else:
-            saga_state = state.saga
+        honest, vr_state, vr_metrics = correct(state, honest, idx, k_idx)
 
         # Honest-message variance (same metric as the master path).
         hm = jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0), honest)
@@ -341,10 +381,10 @@ def make_decentralized_step(
                 agg, state.opt_state, state.params, state.step)
             params = optim_lib.apply_updates(state.params, updates)
 
-        new_state = FederatedState(params, opt_state, saga_state,
+        new_state = FederatedState(params, opt_state, vr_state,
                                    state.step + 1, key)
         return new_state, {"honest_variance": var,
-                           "consensus_dist": consensus(params)}
+                           "consensus_dist": consensus(params), **vr_metrics}
 
     def step_fn_packed(state):
         """Flat-packed pipeline (DESIGN.md Sec. 8): one (N, D) message
@@ -356,11 +396,8 @@ def make_decentralized_step(
         honest_tree, idx = honest_grads(state, k_idx)
         spec = cfg.message_spec(honest_tree, batch_ndim=1)
         honest = spec.pack(honest_tree)                        # (W_h, D)
-        if cfg.vr == "saga":
-            honest, saga_state = saga_lib.saga_correct_scatter(
-                state.saga, honest, idx)
-        else:
-            saga_state = state.saga
+        honest, vr_state, vr_metrics = correct(state, honest, idx, k_idx,
+                                               spec=spec)
 
         h32 = honest.astype(jnp.float32)
         var = jnp.sum((h32 - jnp.mean(h32, axis=0)[None]) ** 2) / wh
@@ -388,10 +425,10 @@ def make_decentralized_step(
                 agg, state.opt_state, state.params, state.step)
             params = optim_lib.apply_updates(state.params, updates)
 
-        new_state = FederatedState(params, opt_state, saga_state,
+        new_state = FederatedState(params, opt_state, vr_state,
                                    state.step + 1, key)
         return new_state, {"honest_variance": var,
-                           "consensus_dist": consensus(params)}
+                           "consensus_dist": consensus(params), **vr_metrics}
 
     return init_fn, (step_fn_packed if cfg.packed else step_fn_perleaf)
 

@@ -131,6 +131,31 @@ def test_krum_and_median_also_robust(problem):
         assert g < 0.2, f"{aggname} failed: {g}"
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("attack", ["sign_flip", "gaussian"])
+def test_lsvrg_matches_saga_floor_and_beats_sgd(problem, attack):
+    """ISSUE 6 tier-2 gate: loopless SVRG keeps the paper's qualitative
+    claims with O(D) client state.  Under attack, lsvrg + geomed reaches an
+    error floor within 2x of Byrd-SAGA's (both methods have vanishing
+    gradient variance, Lemma 1) and clearly beats non-reduced robust SGD
+    (which stays sigma^2-limited, Thm 2).  Snapshot probability ~ 1/J so
+    the expected full-gradient work matches SAGA's table refresh cadence."""
+    loss, batch, f_star, wd, _ = problem
+    gaps = {}
+    for vr in ("saga", "lsvrg", "sgd"):
+        gaps[vr] = gap(loss, batch, f_star, run(
+            loss, wd, RobustConfig(aggregator="geomed", vr=vr, attack=attack,
+                                   num_byzantine=B, lsvrg_p=1 / 80))[0])
+    assert gaps["lsvrg"] < 0.1, f"lsvrg failed under {attack}: {gaps}"
+    assert gaps["lsvrg"] < 2 * max(gaps["saga"], 0.03), gaps
+    # The sgd separation is starkest under sign_flip (cf. test_c2, which
+    # pins the saga-vs-sgd claim there for the same reason); under gaussian
+    # geomed filters the attack so well that BOTH floors are tiny and only
+    # the sigma^2 ordering remains.
+    factor = 0.5 if attack == "sign_flip" else 0.75
+    assert gaps["lsvrg"] < factor * gaps["sgd"], (attack, gaps)
+
+
 def test_geomed_groups_low_byzantine(problem):
     """geomed_groups trades breakdown point for variance reduction: with G
     groups it tolerates < G/2 poisoned groups, so test it in its design

@@ -475,7 +475,7 @@ def test_distributed_resume_is_bit_exact():
             def fresh():
                 return {"params": params, "opt": opt.init(params),
                         "step": jnp.zeros((), jnp.int32),
-                        "saga": saga_init_zeros(params, 4, 2)}
+                        "vr": saga_init_zeros(params, 4, 2)}
             jstep = jax.jit(step_fn)
             def run(state, lo, hi):
                 for i in range(lo, hi):
@@ -642,14 +642,14 @@ def test_saga_distributed_train_step():
         with compat.use_mesh(mesh):
             params = model.init(jax.random.PRNGKey(0))
             state = {"params": params, "opt": (), "step": jnp.zeros((), jnp.int32),
-                     "saga": saga_init_zeros(params, 4, 4)}
+                     "vr": saga_init_zeros(params, 4, 4)}
             jstep = jax.jit(step_fn)
             for i in range(3):
                 batch = make_batch(jax.random.fold_in(jax.random.PRNGKey(2), i), cfg, 4, 2, 32)
                 state, m = jstep(state, batch, jax.random.fold_in(jax.random.PRNGKey(3), i))
             assert jnp.isfinite(m["loss"])
             # table must have absorbed gradients (non-zero rows)
-            tabs = jax.tree_util.tree_leaves(state["saga"].table)
+            tabs = jax.tree_util.tree_leaves(state["vr"].table)
             total = sum(float(jnp.sum(jnp.abs(t.astype(jnp.float32)))) for t in tabs)
             assert total > 0
         print("SAGA_OK", float(m["loss"]))
@@ -834,7 +834,7 @@ def test_train_step_packed_matches_perleaf_on_mesh():
                     opt = get_optimizer("adamw", 1e-3)
                     state = {"params": params, "opt": opt.init(params),
                              "step": jnp.zeros((), jnp.int32),
-                             "saga": saga_init_zeros(params, 4, 2)}
+                             "vr": saga_init_zeros(params, 4, 2)}
                     jstep = steps_lib.compile_train_step(step_fn)
                     key = jax.random.PRNGKey(1)
                     for i in range(2):

@@ -323,4 +323,4 @@ def test_bf16_message_mode_runs_and_tracks_f32(logreg):
     # bf16 has ~3 decimal digits; 10 steps of drift stays small
     np.testing.assert_allclose(w16, w32, atol=5e-2)
     # and the SAGA memory really lives on the half-width wire
-    assert outs["bfloat16"].saga.table.dtype == jnp.bfloat16
+    assert outs["bfloat16"].vr.table.dtype == jnp.bfloat16

@@ -256,8 +256,8 @@ def test_star_topology_is_bit_exact_with_master_path(logreg):
         outs[label] = st
     np.testing.assert_array_equal(np.asarray(outs["default"].params["w"]),
                                   np.asarray(outs["star"].params["w"]))
-    for a, b in zip(jax.tree_util.tree_leaves(outs["default"].saga),
-                    jax.tree_util.tree_leaves(outs["star"].saga)):
+    for a, b in zip(jax.tree_util.tree_leaves(outs["default"].vr),
+                    jax.tree_util.tree_leaves(outs["star"].vr)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # And RobustConfig.topology="star" (the default) is the same route.
     assert make_federated_step(loss, wd, cfg, opt)  # builds, no per-node axis
@@ -299,8 +299,8 @@ def test_static_schedule_is_bit_exact_with_fixed_topology(logreg):
         outs[label] = st
     np.testing.assert_array_equal(np.asarray(outs["topology"].params["w"]),
                                   np.asarray(outs["schedule"].params["w"]))
-    for a, b in zip(jax.tree_util.tree_leaves(outs["topology"].saga),
-                    jax.tree_util.tree_leaves(outs["schedule"].saga)):
+    for a, b in zip(jax.tree_util.tree_leaves(outs["topology"].vr),
+                    jax.tree_util.tree_leaves(outs["schedule"].vr)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
