@@ -9,7 +9,12 @@ per-leaf pipeline (``packed=False``), and emits ``BENCH_step.json`` plus a
 markdown ratio table.  Since schema v2 the sim rows also carry the
 resident variance-reduction state bytes, and a saga-vs-lsvrg trade-off
 pair at fixed (W, J, D) quantifies the O((J+1)D)-table vs O(2D)-snapshot
-memory/step story (DESIGN.md Sec. 9).
+memory/step story (DESIGN.md Sec. 9).  Schema v3 adds cohort-size scaling
+cells: client-scale virtualization (DESIGN.md Sec. 10) at
+``num_clients`` in {64, 256} with the same 16-slot cohort, measuring what
+the per-round cohort gather/scatter and staleness weighting cost on top
+of the fixed-width aggregation (packed path only -- the per-leaf baseline
+has no weighted rules, so the gate ignores these cells).
 
     PYTHONPATH=src python benchmarks/bench_step.py [--quick] [--gate] \\
         [--steps N] [--reps R] [--out BENCH_step.json]
@@ -56,9 +61,13 @@ from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
 from repro.optim import get_optimizer
 
-SCHEMA = "BENCH_step/v2"
+SCHEMA = "BENCH_step/v3"
 
 QUICK_AGGREGATORS = ("geomed", "krum", "mean")
+# Cohort-size scaling cells (schema v3): the packed sim geomed/saga step
+# with num_clients virtual clients feeding the same 16-slot cohort --
+# gather/scatter + staleness weighting cost as C grows past W.
+COHORT_CLIENTS = (64, 256)
 # The memory/step trade-off cells (schema v2): saga vs lsvrg at the SAME
 # (W, J, D) on the sim geomed workload, reporting resident VR-state bytes
 # next to wall-clock (the O((J+1)D) table vs O(2D) snapshot story).
@@ -96,10 +105,13 @@ def mlp_loss(params, batch):
     return jnp.mean(jnp.logaddexp(0.0, -y * logit))
 
 
-def sim_cfg(name: str, packed: bool, vr: str = "saga") -> RobustConfig:
+def sim_cfg(name: str, packed: bool, vr: str = "saga",
+            num_clients: int = 0) -> RobustConfig:
     return RobustConfig(aggregator=name, vr=vr, attack="sign_flip",
                         num_byzantine=SIM_BYZANTINE, weiszfeld_iters=32,
-                        num_groups=4, packed=packed, lsvrg_p=0.05)
+                        num_groups=4, packed=packed, lsvrg_p=0.05,
+                        num_clients=num_clients,
+                        cohort_size=SIM_HONEST if num_clients else 0)
 
 
 def time_steps(jstep, state, step_args, steps: int, reps: int) -> dict:
@@ -118,19 +130,21 @@ def time_steps(jstep, state, step_args, steps: int, reps: int) -> dict:
 
 
 def bench_sim(name: str, packed: bool, steps: int, reps: int, wd,
-              vr: str = "saga") -> dict:
-    cfg = sim_cfg(name, packed, vr)
+              vr: str = "saga", num_clients: int = 0) -> dict:
+    cfg = sim_cfg(name, packed, vr, num_clients)
     init_fn, step_fn = make_federated_step(mlp_loss, wd, cfg,
                                            get_optimizer("sgd", 0.05))
     state = init_fn(mlp_params(jax.random.PRNGKey(1)), jax.random.PRNGKey(3))
     # Resident VR-state bytes (the schema-v2 memory column of the saga vs
     # lsvrg trade-off), cross-checked against the reducer's own accounting.
+    # Under client-scale virtualization the tables are per CLIENT, so the
+    # effective row count is num_clients, not the cohort width.
     vr_leaves = jax.tree_util.tree_leaves(state.vr)
     vr_bytes = sum(int(l.size) * l.dtype.itemsize for l in vr_leaves)
     p = mlp_params(jax.random.PRNGKey(1))
     coords = sum(int(x.size) for x in jax.tree_util.tree_leaves(p))
     j = jax.tree_util.tree_leaves(wd)[0].shape[1]
-    expect = cfg.reducer().memory_elems(SIM_HONEST, j, coords)
+    expect = cfg.reducer().memory_elems(num_clients or SIM_HONEST, j, coords)
     got = sum(int(l.size) for l in vr_leaves)
     assert got == expect, f"memory_elems drift for {vr}: {got} != {expect}"
     jstep = steps_lib.compile_train_step(step_fn)
@@ -140,6 +154,7 @@ def bench_sim(name: str, packed: bool, steps: int, reps: int, wd,
         "num_workers": SIM_HONEST + SIM_BYZANTINE,
         "num_byzantine": SIM_BYZANTINE, "vr": cfg.vr, "attack": cfg.attack,
         "num_samples": j, "vr_state_bytes": vr_bytes,
+        "num_clients": num_clients,
         "leaves": len(jax.tree_util.tree_leaves(p)),
         "coords": coords,
         "steps": steps, "reps": reps, **t,
@@ -180,16 +195,19 @@ def run_gate(rows) -> list:
     must beat the floor on the aggregation-dominated sim cells.  Gates on
     ``wall_us_min`` -- the minimum over reps is the standard noise-robust
     microbenchmark statistic (scheduler interference only ever ADDS
-    time).  Cells are keyed by (path, aggregator, vr, packed) since v2
-    (the lsvrg trade-off cells must not collide with the saga sweep); the
-    speedup floor stays a vr=saga claim."""
-    by_key = {(r["path"], r["aggregator"], r["vr"], r["packed"]):
+    time).  Cells are keyed by (path, aggregator, vr, num_clients, packed)
+    since v3 (the lsvrg trade-off and cohort-scaling cells must not collide
+    with the saga sweep); the speedup floor stays a vr=saga full-
+    participation claim, and the packed-only cohort cells have no per-leaf
+    pair so the gate skips them."""
+    by_key = {(r["path"], r["aggregator"], r["vr"],
+               r.get("num_clients", 0), r["packed"]):
               r["wall_us_min"] for r in rows}
     failures = []
-    for (path, name, vr, packed), us in sorted(by_key.items()):
+    for (path, name, vr, nc, packed), us in sorted(by_key.items()):
         if packed:
             continue
-        packed_us = by_key.get((path, name, vr, True))
+        packed_us = by_key.get((path, name, vr, nc, True))
         if packed_us is None:
             continue
         ratio = us / packed_us
@@ -198,7 +216,8 @@ def run_gate(rows) -> list:
                 f"{path}/{name}/{vr}: packed {packed_us:.0f}us is slower "
                 f"than per-leaf {us:.0f}us beyond the "
                 f"{GATE_NOISE_MARGIN}x margin")
-        if path == "sim" and vr == "saga" and name in GATE_SPEEDUP_CELLS \
+        if path == "sim" and vr == "saga" and nc == 0 \
+                and name in GATE_SPEEDUP_CELLS \
                 and ratio < GATE_SPEEDUP_FLOOR:
             failures.append(
                 f"sim/{name}/{vr}: packed speedup {ratio:.2f}x is below "
@@ -291,6 +310,18 @@ def main() -> None:
             print(f"  sim     geomed/lsvrg      packed={packed!s:5s} "
                   f"{r['wall_us_mean']:10.0f} us/step "
                   f"(state {r['vr_state_bytes']} B)")
+        # Cohort-size scaling cells (v3): client-scale virtualization on
+        # the packed geomed/saga workload -- C virtual clients, 16-slot
+        # cohort.  Packed only: staleness row_weights route every rule
+        # through the flat engines, so there is no per-leaf pair.
+        for n_clients in COHORT_CLIENTS:
+            cwd = partition({"a": data.x, "b": data.y}, n_clients, seed=1)
+            r = bench_sim("geomed", True, args.steps, args.reps, cwd,
+                          num_clients=n_clients)
+            rows.append(r)
+            print(f"  sim     geomed/C={n_clients:<5d}    packed=True  "
+                  f"{r['wall_us_mean']:10.0f} us/step "
+                  f"(state {r['vr_state_bytes']} B)")
         if not args.skip_distributed:
             rows += spawn_distributed(args)
 
@@ -311,16 +342,24 @@ def main() -> None:
 
     print("| path | aggregator | vr | per-leaf us | packed us | speedup | state bytes |")
     print("|------|------------|----|-------------|-----------|---------|-------------|")
-    by_key = {(r["path"], r["aggregator"], r["vr"], r["packed"]): r
+    by_key = {(r["path"], r["aggregator"], r["vr"],
+               r.get("num_clients", 0), r["packed"]): r
               for r in rows}
-    for (path, name, vr, packed), r in sorted(by_key.items()):
+    for (path, name, vr, nc, packed), r in sorted(by_key.items()):
         if packed:
             continue
-        pk = by_key[(path, name, vr, True)]
+        pk = by_key[(path, name, vr, nc, True)]
         print(f"| {path} | {name} | {vr} | {r['wall_us_mean']:.0f} | "
               f"{pk['wall_us_mean']:.0f} | "
               f"{r['wall_us_mean'] / pk['wall_us_mean']:.2f}x | "
               f"{pk.get('vr_state_bytes', 0)} |")
+    cohort = sorted((k, r) for k, r in by_key.items() if k[3])
+    if cohort:
+        print("\n| clients | cohort | packed us | state bytes |")
+        print("|---------|--------|-----------|-------------|")
+        for (path, name, vr, nc, packed), r in cohort:
+            print(f"| {nc} | {SIM_HONEST} | {r['wall_us_mean']:.0f} | "
+                  f"{r['vr_state_bytes']} |")
 
     if args.gate:
         failures = run_gate(rows)
@@ -342,7 +381,8 @@ def main() -> None:
                                       wd, vr=vr)
                     for r in rows:
                         if (r["path"], r["aggregator"], r["vr"],
-                                r["packed"]) == ("sim", name, vr, packed) \
+                                r.get("num_clients", 0), r["packed"]) \
+                                == ("sim", name, vr, 0, packed) \
                                 and fresh["wall_us_min"] < r["wall_us_min"]:
                             r.update(wall_us_min=fresh["wall_us_min"],
                                      wall_us_mean=fresh["wall_us_mean"])

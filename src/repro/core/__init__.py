@@ -12,7 +12,12 @@ from repro.core.aggregators import (
     median_agg,
     trimmed_mean_agg,
 )
-from repro.core.attacks import ATTACK_NAMES, AttackConfig, apply_attack
+from repro.core.attacks import (
+    ATTACK_NAMES,
+    STALENESS_ATTACKS,
+    AttackConfig,
+    apply_attack,
+)
 from repro.core.geomed import (
     geomed_objective,
     weiszfeld,
@@ -22,6 +27,17 @@ from repro.core.geomed import (
     weiszfeld_sharded,
 )
 from repro.core.packing import PackSpec, pack_spec
+from repro.core.participation import (
+    ParticipationPlan,
+    gather_rows,
+    init_staleness,
+    resolve_participation,
+    scatter_rows,
+    slot_staleness,
+    staleness_weights,
+    tick_staleness,
+    uses_staleness,
+)
 from repro.core.robust_step import (
     GATHER_AGGREGATORS,
     SHARDED_AGGREGATORS,

@@ -47,7 +47,10 @@ from repro.core.geomed import weiszfeld_flat, weiszfeld_pytree
 
 Pytree = Any
 Aggregator = Callable[[Pytree], Pytree]
-FlatAggregator = Callable[[jnp.ndarray], jnp.ndarray]  # (W, D) -> (D,) f32
+FlatAggregator = Callable[..., jnp.ndarray]  # (W, D)[, row_weights] -> (D,) f32
+
+# Guards weight-sum divisions when every row is dropped (all weights 0).
+_WEIGHT_FLOOR = 1e-8
 
 
 # ---------------------------------------------------------------------------
@@ -55,29 +58,77 @@ FlatAggregator = Callable[[jnp.ndarray], jnp.ndarray]  # (W, D) -> (D,) f32
 # Contract: input is the packed buffer (any float dtype); output is the
 # (D,) float32 aggregate (callers unpack/cast).  ``axis_names``/``sync_axes``
 # follow the weiszfeld_pytree convention for shard_map execution.
+#
+# Every rule accepts an optional keyword ``row_weights`` -- a (W,) vector of
+# per-message staleness weights (DESIGN.md Sec. 10).  ``None`` (the default)
+# keeps the unweighted code path bit-for-bit; weight 0 removes a row exactly
+# (mask-select semantics -- this is how ``dropout`` slots disappear without
+# ever slicing the worker axis) and fractional weights down-weigh stale
+# reports.  In shard_map the weights vector is replicated on every device,
+# so the same forms run on coordinate slices unchanged.
 # ---------------------------------------------------------------------------
 
-def mean_flat(buf: jnp.ndarray) -> jnp.ndarray:
-    return jnp.mean(buf.astype(jnp.float32), axis=0)
+def _sorted_with_weights(buf: jnp.ndarray, row_weights: jnp.ndarray):
+    """Per-coordinate ascending sort of ``buf`` with the weight vector
+    permuted along each coordinate's sort order -> (vals, wsort)."""
+    b32 = buf.astype(jnp.float32)
+    order = jnp.argsort(b32, axis=0)
+    vals = jnp.take_along_axis(b32, order, axis=0)
+    wsort = row_weights.astype(jnp.float32)[order]
+    return vals, wsort
 
 
-def median_flat(buf: jnp.ndarray) -> jnp.ndarray:
-    return jnp.median(buf.astype(jnp.float32), axis=0)
+def mean_flat(buf: jnp.ndarray, *, row_weights=None) -> jnp.ndarray:
+    if row_weights is None:
+        return jnp.mean(buf.astype(jnp.float32), axis=0)
+    w = row_weights.astype(jnp.float32)
+    num = jnp.sum(buf.astype(jnp.float32) * w[:, None], axis=0)
+    return num / jnp.maximum(jnp.sum(w), _WEIGHT_FLOOR)
 
 
-def trimmed_mean_flat(buf: jnp.ndarray, *, trim: int) -> jnp.ndarray:
+def median_flat(buf: jnp.ndarray, *, row_weights=None) -> jnp.ndarray:
+    if row_weights is None:
+        return jnp.median(buf.astype(jnp.float32), axis=0)
+    # Weighted median per coordinate: the smallest value whose cumulative
+    # weight reaches half the total mass (dropped rows carry zero mass and
+    # can never be selected unless everything is dropped).
+    vals, wsort = _sorted_with_weights(buf, row_weights)
+    cum = jnp.cumsum(wsort, axis=0)
+    half = 0.5 * jnp.sum(row_weights.astype(jnp.float32))
+    sel = jnp.argmax(cum >= half, axis=0)                      # (D,)
+    return jnp.take_along_axis(vals, sel[None, :], axis=0)[0]
+
+
+def trimmed_mean_flat(buf: jnp.ndarray, *, trim: int,
+                      row_weights=None) -> jnp.ndarray:
     w = buf.shape[0]
     if 2 * trim >= w:
         raise ValueError(f"trim={trim} too large for W={w}")
-    s = jnp.sort(buf.astype(jnp.float32), axis=0)
-    return jnp.mean(s[trim : w - trim], axis=0)
+    if row_weights is None:
+        s = jnp.sort(buf.astype(jnp.float32), axis=0)
+        return jnp.mean(s[trim : w - trim], axis=0)
+    # Weight-MASS trimming: per coordinate, drop the trim/W fraction of the
+    # total weight mass from each tail and average what remains.  With unit
+    # weights this reduces exactly to the unweighted rule (each sorted row
+    # occupies one unit of mass), and zero-weight rows occupy zero mass so
+    # they are auto-excluded rather than eating into the trim budget.
+    vals, wsort = _sorted_with_weights(buf, row_weights)
+    total = jnp.sum(row_weights.astype(jnp.float32))
+    lo = (trim / w) * total
+    hi = ((w - trim) / w) * total
+    cum = jnp.cumsum(wsort, axis=0)
+    kept = jnp.clip(jnp.minimum(cum, hi) - jnp.maximum(cum - wsort, lo),
+                    0.0, None)
+    return jnp.sum(kept * vals, axis=0) / jnp.maximum(hi - lo, _WEIGHT_FLOOR)
 
 
 def geomed_flat(buf: jnp.ndarray, *, max_iters: int = 64, tol: float = 1e-6,
                 axis_names: Sequence[str] = (),
-                sync_axes: Sequence[str] = ()) -> jnp.ndarray:
+                sync_axes: Sequence[str] = (),
+                row_weights=None) -> jnp.ndarray:
     return weiszfeld_flat(buf, max_iters=max_iters, tol=tol,
-                          axis_names=axis_names, sync_axes=sync_axes)
+                          axis_names=axis_names, sync_axes=sync_axes,
+                          row_weights=row_weights)
 
 
 def group_means(z: jnp.ndarray, num_groups: int) -> jnp.ndarray:
@@ -98,10 +149,25 @@ def group_means(z: jnp.ndarray, num_groups: int) -> jnp.ndarray:
 def geomed_groups_flat(buf: jnp.ndarray, *, num_groups: int,
                        max_iters: int = 64, tol: float = 1e-6,
                        axis_names: Sequence[str] = (),
-                       sync_axes: Sequence[str] = ()) -> jnp.ndarray:
-    grouped = group_means(buf.astype(jnp.float32), num_groups)  # (G, D)
+                       sync_axes: Sequence[str] = (),
+                       row_weights=None) -> jnp.ndarray:
+    if row_weights is None:
+        grouped = group_means(buf.astype(jnp.float32), num_groups)  # (G, D)
+        return weiszfeld_flat(grouped, max_iters=max_iters, tol=tol,
+                              axis_names=axis_names, sync_axes=sync_axes)
+    # Weighted group means, and each group enters the outer Weiszfeld with
+    # its total member mass (a group of all-dropped rows has mass 0 and is
+    # removed exactly).
+    w = buf.shape[0]
+    wts = row_weights.astype(jnp.float32)
+    ids = (jnp.arange(w) * num_groups) // w
+    sums = jax.ops.segment_sum(buf.astype(jnp.float32) * wts[:, None], ids,
+                               num_segments=num_groups)
+    mass = jax.ops.segment_sum(wts, ids, num_segments=num_groups)
+    grouped = sums / jnp.maximum(mass, _WEIGHT_FLOOR)[:, None]
     return weiszfeld_flat(grouped, max_iters=max_iters, tol=tol,
-                          axis_names=axis_names, sync_axes=sync_axes)
+                          axis_names=axis_names, sync_axes=sync_axes,
+                          row_weights=mass)
 
 
 def flat_sq_dists(flat: jnp.ndarray,
@@ -131,36 +197,71 @@ def krum_scores(d2: jnp.ndarray, num_byzantine: int) -> jnp.ndarray:
 
 
 def krum_flat(buf: jnp.ndarray, *, num_byzantine: int,
-              axis_names: Sequence[str] = ()) -> jnp.ndarray:
+              axis_names: Sequence[str] = (),
+              row_weights=None) -> jnp.ndarray:
     """Krum [14] on the packed buffer: score = sum of squared distances to
     the W-B-2 nearest other messages; output the winning row."""
-    scores = krum_scores(flat_sq_dists(buf, axis_names), num_byzantine)
+    if row_weights is None:
+        scores = krum_scores(flat_sq_dists(buf, axis_names), num_byzantine)
+        return buf.astype(jnp.float32)[jnp.argmin(scores)]
+    # Weighted Krum: dropped rows (weight 0) can be neither neighbors nor
+    # candidates -- their distance columns and scores go to a +inf stand-in
+    # (never slice+concat, per the old-XLA hazard) -- the neighbor count
+    # shrinks to the TRACED number of live rows, and surviving candidates'
+    # scores are divided by their weight so stale reports lose ties against
+    # fresh ones.  With unit weights the selection matches the unweighted
+    # rule.
+    w = buf.shape[0]
+    big = jnp.float32(1e30)
+    wts = row_weights.astype(jnp.float32)
+    alive = wts > 0.0
+    d2 = jnp.maximum(flat_sq_dists(buf, axis_names), 0.0)
+    d2 = d2 + jnp.diag(jnp.full((w,), big))
+    d2 = jnp.where(alive[None, :], d2, big)
+    ds = jnp.sort(d2, axis=1)
+    m = jnp.sum(alive.astype(jnp.int32))
+    n_near = jnp.clip(m - num_byzantine - 2, 1, max(w - 1, 1))
+    keep = (jnp.arange(w)[None, :] < n_near) & (ds < big)
+    scores = jnp.sum(jnp.where(keep, ds, 0.0), axis=1)
+    scores = jnp.where(alive, scores / jnp.maximum(wts, _WEIGHT_FLOOR), big)
     return buf.astype(jnp.float32)[jnp.argmin(scores)]
 
 
 def centered_clip_flat(buf: jnp.ndarray, *, radius: float = 1.0,
                        iters: int = 3,
-                       axis_names: Sequence[str] = ()) -> jnp.ndarray:
+                       axis_names: Sequence[str] = (),
+                       row_weights=None) -> jnp.ndarray:
     """Centered clipping (Karimireddy et al. 2021) on the packed buffer:
     v <- v + mean_w clip(m_w - v, radius) iterated from the coordinate
     median; one fused residual-norm reduction per iteration (psum'd over
-    ``axis_names`` when the rows are coordinate shards)."""
+    ``axis_names`` when the rows are coordinate shards).  With
+    ``row_weights`` the center starts at the weighted median and each
+    iteration takes the weight-normalized mean of the clipped residuals."""
     b32 = buf.astype(jnp.float32)
-    v = jnp.median(b32, axis=0)
+    if row_weights is None:
+        v = jnp.median(b32, axis=0)
+    else:
+        v = median_flat(b32, row_weights=row_weights)
+        wnorm = row_weights.astype(jnp.float32)
+        wnorm = wnorm / jnp.maximum(jnp.sum(wnorm), _WEIGHT_FLOOR)
     for _ in range(iters):
         diffs = b32 - v[None]
         sq = jnp.sum(diffs * diffs, axis=-1)
         if axis_names:
             sq = compat.psum(sq, tuple(axis_names))
         scale = jnp.minimum(1.0, radius / jnp.maximum(jnp.sqrt(sq), 1e-12))
-        v = v + jnp.mean(diffs * scale[:, None], axis=0)
+        if row_weights is None:
+            v = v + jnp.mean(diffs * scale[:, None], axis=0)
+        else:
+            v = v + jnp.sum(diffs * (scale * wnorm)[:, None], axis=0)
     return v
 
 
 def geomed_blockwise_flat(buf: jnp.ndarray, *, spec: packing.PackSpec,
                           max_iters: int = 64, tol: float = 1e-6,
                           axis_names: Sequence[str] = (),
-                          sync_axes: Sequence[str] = ()) -> jnp.ndarray:
+                          sync_axes: Sequence[str] = (),
+                          row_weights=None) -> jnp.ndarray:
     """Per-leaf geometric median on the packed buffer: each leaf's
     coordinate slice runs its OWN Weiszfeld loop (independent iteration
     counts, matching the per-leaf semantics -- an attacker can spend its
@@ -170,7 +271,8 @@ def geomed_blockwise_flat(buf: jnp.ndarray, *, spec: packing.PackSpec,
     b32 = buf.astype(jnp.float32)
     parts = [
         weiszfeld_flat(b32[:, a:b], max_iters=max_iters, tol=tol,
-                       axis_names=axis_names, sync_axes=sync_axes)
+                       axis_names=axis_names, sync_axes=sync_axes,
+                       row_weights=row_weights)
         for a, b in spec.boundaries
     ]
     return packing.assemble(parts, pad=spec.pad)

@@ -20,6 +20,18 @@ Beyond-paper attacks (used to stress the aggregators harder):
 * ``ipm``           -- inner-product manipulation (Fall of Empires [20]):
                        -eps * mean(honest), a negatively-aligned small
                        perturbation.
+* ``straggler``     -- asynchronous-federation attack (DESIGN.md Sec. 10):
+                       reports a message that is stale by ``straggler_k``
+                       rounds, proxied as an inflated honest mean
+                       (gradient magnitudes decay along the trajectory, so
+                       an old report looks like an over-scaled current
+                       one); the slot additionally carries staleness
+                       ``straggler_k`` on the staleness-aware paths.
+* ``dropout``       -- absent participant: the slot's content is zero and
+                       its staleness saturates at the bound, so
+                       staleness-aware rules weight it to exactly 0
+                       (mask-select, never slice+concat).  Robust rules
+                       without weights see an all-zeros outlier row.
 * ``none``          -- no Byzantine rows appended (W = W_h).
 
 Flat-packed execution (DESIGN.md Sec. 8): every attack is a composition of
@@ -56,6 +68,7 @@ class AttackConfig:
     sign_flip_magnitude: float = -3.0
     alie_z: float = 1.0
     ipm_eps: float = 0.5
+    straggler_k: int = 4
 
 
 def _honest_mean(honest: Pytree) -> Pytree:
@@ -140,6 +153,25 @@ def ipm_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
     return _append(honest, _broadcast_rows(byz, cfg.num_byzantine))
 
 
+def straggler_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
+    """Stale-by-``straggler_k`` report: an over-scaled honest mean (see the
+    module docstring).  The matching staleness counters are injected by the
+    step builders via :func:`repro.core.participation.slot_staleness`."""
+    del key
+    scale = 1.0 + 0.25 * cfg.straggler_k
+    byz = jax.tree_util.tree_map(lambda m: scale * m, _honest_mean(honest))
+    return _append(honest, _broadcast_rows(byz, cfg.num_byzantine))
+
+
+def dropout_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
+    """Absent participant: all-zero content; staleness-aware rules mask the
+    slot out entirely (weight 0) via its saturated staleness counter."""
+    del key
+    byz = jax.tree_util.tree_map(
+        lambda z: jnp.zeros_like(z, shape=z.shape[1:]), honest)
+    return _append(honest, _broadcast_rows(byz, cfg.num_byzantine))
+
+
 def none_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
     """No Byzantine rows: the message set is the honest set (W = W_h)."""
     del cfg, key
@@ -156,9 +188,16 @@ _ATTACKS: dict[str, Attack] = {
     "zero_gradient": zero_gradient_attack,
     "alie": alie_attack,
     "ipm": ipm_attack,
+    "straggler": straggler_attack,
+    "dropout": dropout_attack,
 }
 
 ATTACK_NAMES = tuple(_ATTACKS)
+
+# Attacks whose Byzantine slots carry non-zero staleness counters; the step
+# builders switch to the staleness-weighted aggregation path when one of
+# these (or partial participation) is active.
+STALENESS_ATTACKS = ("straggler", "dropout")
 
 
 def _check_attack_name(name: str) -> None:
@@ -215,6 +254,11 @@ def apply_attack_stacked(cfg: AttackConfig, msgs: Pytree, key: jax.Array,
     name = cfg.name
     if name == "sign_flip":
         byz = jax.tree_util.tree_map(lambda m: cfg.sign_flip_magnitude * m, mean)
+    elif name == "straggler":
+        byz = jax.tree_util.tree_map(
+            lambda m: (1.0 + 0.25 * cfg.straggler_k) * m, mean)
+    elif name == "dropout":
+        byz = jax.tree_util.tree_map(jnp.zeros_like, mean)
     elif name == "zero_gradient":
         # -(1/B) sum_honest => the mean of all W messages is exactly zero.
         byz = jax.tree_util.tree_map(lambda m: -(wh / b) * m, mean)

@@ -116,7 +116,7 @@ def _tree_sqdist_partials(stacked: Pytree, y: Pytree) -> jnp.ndarray:
 
 def _tree_weighted_mean(stacked: Pytree, weights: jnp.ndarray) -> Pytree:
     """sum_w weights[w] * z_w / sum(weights), per leaf."""
-    wsum = jnp.sum(weights)
+    wsum = jnp.maximum(jnp.sum(weights), _DIST_FLOOR)
 
     def leaf(z):
         w = weights.reshape((z.shape[0],) + (1,) * (z.ndim - 1)).astype(jnp.float32)
@@ -134,6 +134,7 @@ def weiszfeld_pytree(
     tol: float = 1e-6,
     axis_names: Sequence[str] = (),
     sync_axes: Sequence[str] = (),
+    row_weights: jnp.ndarray | None = None,
 ) -> Pytree:
     """Geometric median of W pytree messages.
 
@@ -150,6 +151,13 @@ def weiszfeld_pytree(
     identical) stopping statistic is ``pmax``-synchronized, so the
     ``while_loop`` predicate is replicated across all devices (required for
     lockstep SPMD early stopping).  Use the worker axes here in gather mode.
+
+    ``row_weights``: optional (W,) per-message weights (the bounded-staleness
+    weights of DESIGN.md Sec. 10).  Each message's Weiszfeld contribution
+    ``1/d_w`` is scaled by its weight, so weight 0 removes a row exactly
+    (the mask-as-weight trick of :mod:`repro.topology.masked`) and fractional
+    weights down-weigh stale reports.  ``None`` keeps the unweighted code
+    path bit-for-bit.
 
     The iterate stays float32 throughout and is cast back to the leaf dtypes
     only on return: re-quantizing y to bf16 every iteration would both slow
@@ -170,6 +178,8 @@ def weiszfeld_pytree(
         for ax in axis_names:
             sq = jax.lax.psum(sq, ax)
         inv = 1.0 / jnp.maximum(jnp.sqrt(sq), _DIST_FLOOR)
+        if row_weights is not None:
+            inv = inv * row_weights.astype(jnp.float32)
         y_new = _tree_weighted_mean(stacked32, inv)
 
         move = sum(
@@ -194,6 +204,7 @@ def weiszfeld_flat(
     tol: float = 1e-6,
     axis_names: Sequence[str] = (),
     sync_axes: Sequence[str] = (),
+    row_weights: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Weiszfeld on one packed ``(W, D)`` message matrix -- the flat engine
     behind the pytree shims (DESIGN.md Sec. 8).
@@ -209,7 +220,7 @@ def weiszfeld_flat(
         raise ValueError(f"weiszfeld_flat expects (W, D), got {buf.shape}")
     return weiszfeld_pytree(
         buf.astype(jnp.float32), max_iters=max_iters, tol=tol,
-        axis_names=axis_names, sync_axes=sync_axes)
+        axis_names=axis_names, sync_axes=sync_axes, row_weights=row_weights)
 
 
 def weiszfeld_sharded(
@@ -239,6 +250,7 @@ def weiszfeld_blockwise_sharded(
     axis_names: Sequence[str],
     max_iters: int = 64,
     tol: float = 1e-6,
+    row_weights: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Per-block (segmented) distributed Weiszfeld inside ``shard_map``.
 
@@ -278,6 +290,11 @@ def weiszfeld_blockwise_sharded(
         diff = z32 - y[None]
         sq = seg_psum(diff * diff)                           # (W, L)
         inv = 1.0 / jnp.maximum(jnp.sqrt(sq), _DIST_FLOOR)   # (W, L)
+        if row_weights is not None:
+            # Staleness weights scale each message's contribution in every
+            # block (weight 0 removes the row exactly, same as the mask in
+            # masked_weiszfeld_segments).
+            inv = inv * row_weights.astype(jnp.float32)[:, None]
         w_coord = inv[:, seg_ids]                            # (W, c)
         denom = jnp.sum(inv, axis=0)[seg_ids]                # (c,)
         y_new = jnp.sum(w_coord * z32, axis=0) / jnp.maximum(denom, _DIST_FLOOR)

@@ -1,0 +1,241 @@
+"""Client-scale virtualization: partial participation + bounded staleness.
+
+The paper's federation has W workers that ALL report every round; the
+production federation the ROADMAP targets has ``num_clients >> W`` logical
+clients of which a seeded cohort of W participates per round, arriving
+late, stale, or not at all (DESIGN.md Sec. 10).  This module is that layer:
+
+* :class:`ParticipationPlan` -- the cohort sampler.  Like
+  :class:`repro.topology.schedule.GraphSchedule`, the per-round cohorts are
+  PRECOMPUTED numpy constants stacked into one (T, W) array that enters the
+  jit as a compile-time constant; the traced round counter selects a row
+  with one ``lax.dynamic_index_in_dim``.  One compiled program, no
+  per-round retrace, and the whole round's client->slot mapping is a single
+  gather.
+
+* Cohort construction is SHUFFLED-EPOCH: each epoch is a seeded permutation
+  of [0, num_clients) chopped into ceil(C/W) rounds (a short tail round is
+  topped up from the head of the SAME permutation, which cannot collide
+  with the tail -- the two position ranges are disjoint).  Consequences the
+  property suite pins: every cohort has exactly W DISTINCT members (so the
+  per-client state scatter is alias-free), and every client participates at
+  least once per epoch -- deterministic coverage within ceil(C/W) rounds,
+  no coupon-collector tail.
+
+* Per-client round bookkeeping: ``gather_rows``/``scatter_rows`` move the
+  cohort's variance-reduction state rows between the (C, ...) resident
+  tables and the (W, ...) round view, and ``tick_staleness`` advances the
+  per-client staleness counters (+1 everywhere, reset to 0 for the cohort
+  -- counters never go negative).
+
+* Bounded-staleness weighting: :func:`staleness_weights` maps integer
+  staleness counters to per-row aggregation weights
+  ``decay**staleness`` with a hard cutoff at ``max_staleness`` (weight
+  exactly 0 -- the ``dropout`` attack reports that sentinel, which is how
+  absent slots are masked out of every flat rule without slicing the
+  worker axis).  :func:`slot_staleness` injects the attack-side counters
+  (``straggler``/``dropout``) next to the honest cohort's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attacks import STALENESS_ATTACKS
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationPlan:
+    """Seeded partial-participation plan: which clients fill the W message
+    slots each round.
+
+    ``num_clients``: C, the number of logical clients (resident VR-state
+    rows).  ``cohort_size``: W, the number of slots per round (the honest
+    width of the packed message buffer).  ``epochs``: how many shuffled
+    epochs are precomputed before the plan wraps (rounds repeat with period
+    ``num_rounds``, like a cyclic GraphSchedule).
+    """
+
+    num_clients: int
+    cohort_size: int
+    seed: int = 0
+    epochs: int = 4
+
+    def __post_init__(self):
+        if not 0 < self.cohort_size <= self.num_clients:
+            raise ValueError(
+                f"cohort_size={self.cohort_size} must be in "
+                f"[1, num_clients={self.num_clients}]")
+        if self.epochs < 1:
+            raise ValueError(f"epochs={self.epochs} must be >= 1")
+
+    @property
+    def rounds_per_epoch(self) -> int:
+        return math.ceil(self.num_clients / self.cohort_size)
+
+    @property
+    def num_rounds(self) -> int:
+        """T: the wrap period of the precomputed cohort stack."""
+        return self.epochs * self.rounds_per_epoch
+
+    @functools.cached_property
+    def stacked_cohorts(self) -> np.ndarray:
+        """(T, W) int32 client ids, one row per round -- the compile-time
+        constant behind :meth:`cohort_at` (the GraphSchedule template).
+
+        Within an epoch, round r takes ``perm[r*W:(r+1)*W]``; the last
+        round of an epoch may run past C and is topped up from ``perm[:k]``
+        (head positions < W <= r*W, so head and tail never overlap and each
+        cohort stays duplicate-free).
+        """
+        c, w = self.num_clients, self.cohort_size
+        rounds = []
+        for e in range(self.epochs):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, e]))
+            perm = rng.permutation(c)
+            for r in range(self.rounds_per_epoch):
+                chunk = perm[r * w:(r + 1) * w]
+                if chunk.size < w:
+                    chunk = np.concatenate([chunk, perm[: w - chunk.size]])
+                rounds.append(chunk)
+        return np.stack(rounds).astype(np.int32)
+
+    def cohort_at(self, t) -> jnp.ndarray:
+        """(W,) int32 client ids of round ``t`` (traced or concrete).
+
+        The stack enters the jit as ONE constant; per-round selection is a
+        single ``dynamic_index_in_dim`` on ``t % T`` -- no retrace, no
+        per-round host work (same pattern as ``GraphSchedule.mask_at``).
+        """
+        stack = jnp.asarray(self.stacked_cohorts, jnp.int32)
+        idx = jnp.asarray(t, jnp.int32) % self.num_rounds
+        return jax.lax.dynamic_index_in_dim(stack, idx, axis=0,
+                                            keepdims=False)
+
+    def describe(self) -> str:
+        return (f"participation: {self.num_clients} clients, cohort "
+                f"{self.cohort_size}/round, {self.epochs} epochs "
+                f"({self.num_rounds}-round period, seed {self.seed})")
+
+
+def resolve_participation(cfg, cohort_size: int) -> Optional[ParticipationPlan]:
+    """Build the plan from a RobustConfig, or ``None`` for full
+    participation.
+
+    ``cohort_size`` is the slot count of the execution path (the honest
+    width of the sim federation, the mesh worker count distributed, the
+    node count decentralized).  ``num_clients == 0`` means "no virtual
+    clients" and ``num_clients == cohort_size`` means every client reports
+    every round; both return ``None`` so the caller stays on the exact
+    pre-participation code path (the bit-exactness bypass, mirroring
+    ``resolve_schedule``'s star+static rule).
+    """
+    if cfg.num_clients in (0, cohort_size):
+        return None
+    if cfg.num_clients < cohort_size:
+        raise ValueError(
+            f"num_clients={cfg.num_clients} is smaller than the "
+            f"{cohort_size}-slot cohort; use num_clients=0 for full "
+            "participation")
+    if cfg.cohort_size not in (0, cohort_size):
+        raise ValueError(
+            f"cohort_size={cfg.cohort_size} does not match the execution "
+            f"path's {cohort_size} message slots")
+    return ParticipationPlan(num_clients=cfg.num_clients,
+                             cohort_size=cohort_size,
+                             seed=cfg.participation_seed)
+
+
+# ---------------------------------------------------------------------------
+# Per-client round bookkeeping.
+# ---------------------------------------------------------------------------
+
+def gather_rows(tree: Pytree, cohort: jnp.ndarray) -> Pytree:
+    """Select the cohort's rows from (C, ...)-leading leaves -> (W, ...).
+    One compiled gather per leaf; the cohort ids are the only traced
+    input."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.take(leaf, cohort, axis=0), tree)
+
+
+def scatter_rows(tree: Pytree, cohort: jnp.ndarray, rows: Pytree) -> Pytree:
+    """Write the round's updated (W, ...) rows back into the (C, ...)
+    resident tables.  Safe because plan cohorts are duplicate-free (module
+    docstring) -- the scatter never aliases."""
+    return jax.tree_util.tree_map(
+        lambda leaf, r: leaf.at[cohort].set(r.astype(leaf.dtype)),
+        tree, rows)
+
+
+def init_staleness(num_clients: int) -> jnp.ndarray:
+    """(C,) int32 rounds-since-last-participation counters, all fresh."""
+    return jnp.zeros((num_clients,), jnp.int32)
+
+
+def tick_staleness(staleness: jnp.ndarray,
+                   cohort: jnp.ndarray) -> jnp.ndarray:
+    """Advance the per-client counters one round: +1 for everyone, reset to
+    0 for the participating cohort.  Counters start at 0 and only this
+    function updates them, so they can never go negative."""
+    return (staleness + 1).at[cohort].set(0)
+
+
+def staleness_weights(staleness: jnp.ndarray, *, decay: float,
+                      max_staleness: int) -> jnp.ndarray:
+    """Bounded-staleness aggregation weights: ``decay**s``, hard 0 at or
+    beyond ``max_staleness``.  ``decay=1.0`` keeps all in-bound rows at
+    weight 1 (pure dropout masking); the cutoff is what turns a saturated
+    counter (the ``dropout`` sentinel) into exact mask-out."""
+    s = jnp.asarray(staleness, jnp.int32)
+    w = jnp.asarray(decay, jnp.float32) ** s.astype(jnp.float32)
+    return jnp.where(s >= max_staleness, 0.0, w)
+
+
+def slot_staleness(honest_staleness: jnp.ndarray, attack: str,
+                   num_byzantine: int, *, straggler_k: int,
+                   max_staleness: int, byz_first: bool = False) -> jnp.ndarray:
+    """Per-SLOT staleness of the full W-row message buffer.
+
+    ``honest_staleness``: the cohort's counters (0 under full
+    participation).  Byzantine slots get the attack's counter: ``straggler``
+    reports stale-by-k, ``dropout`` the saturated ``max_staleness`` sentinel
+    (-> weight exactly 0), every other attack a fresh 0.
+
+    ``byz_first=False`` (sim master convention): B Byzantine rows are
+    APPENDED after the honest ones.  ``byz_first=True`` (distributed
+    convention): the buffer already has W rows and the FIRST B were
+    replaced by the attack -- mask-select, the honest vector is full
+    length.
+    """
+    s = jnp.asarray(honest_staleness, jnp.int32)
+    if attack == "straggler":
+        byz_val = straggler_k
+    elif attack == "dropout":
+        byz_val = max_staleness
+    else:
+        byz_val = 0
+    if num_byzantine == 0 or attack == "none":
+        return s
+    if byz_first:
+        w = s.shape[0]
+        return jnp.where(jnp.arange(w) < num_byzantine, byz_val, s)
+    return jnp.concatenate(
+        [s, jnp.full((num_byzantine,), byz_val, jnp.int32)])
+
+
+def uses_staleness(cfg, plan: Optional[ParticipationPlan]) -> bool:
+    """Trace-time switch: thread per-row staleness weights through the
+    aggregation only when something can make them non-trivial -- partial
+    participation or a staleness attack.  When False the aggregators are
+    called WITHOUT ``row_weights`` and take the exact pre-participation
+    code path (the bit-exactness discipline)."""
+    return plan is not None or cfg.attack in STALENESS_ATTACKS

@@ -40,6 +40,7 @@ from repro import compat
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
 from repro.core import packing
+from repro.core import participation as participation_lib
 from repro.core import variance as vr_lib
 from repro.core.geomed import (weiszfeld_blockwise_sharded, weiszfeld_flat,
                                weiszfeld_pytree)
@@ -102,6 +103,23 @@ class RobustConfig:
     sign_flip_magnitude: float = -3.0
     alie_z: float = 1.0
     ipm_eps: float = 0.5
+    # Client-scale virtualization (DESIGN.md Sec. 10): num_clients > 0
+    # virtualizes that many logical clients, of which a seeded cohort of
+    # ``cohort_size`` (the simulated federation; the mesh worker count on
+    # the distributed paths) participates per round via
+    # ``repro.core.participation``.  0 / num_clients == cohort means full
+    # participation and keeps every path bit-exact (resolve_participation
+    # returns None, mirroring resolve_schedule's star+static rule).
+    num_clients: int = 0
+    cohort_size: int = 0
+    participation_seed: int = 0
+    # Bounded-staleness aggregation: per-slot weight decay**staleness with a
+    # hard 0 at/beyond max_staleness (how ``dropout`` slots are masked out).
+    # decay=1.0 keeps in-bound rows at full weight.
+    max_staleness: int = 64
+    staleness_decay: float = 1.0
+    # Rounds-stale reported by the ``straggler`` attack.
+    straggler_k: int = 4
 
     def reducer(self) -> vr_lib.VarianceReducer:
         """The :class:`repro.core.variance.VarianceReducer` named by
@@ -116,6 +134,7 @@ class RobustConfig:
             sign_flip_magnitude=self.sign_flip_magnitude,
             alie_z=self.alie_z,
             ipm_eps=self.ipm_eps,
+            straggler_k=self.straggler_k,
         )
 
     def aggregator_fn(self, *, perleaf: Optional[bool] = None
@@ -159,10 +178,14 @@ class FederatedState(NamedTuple):
     params: Pytree
     opt_state: Pytree
     # Variance-reduction state (reducer-specific: SagaState, LsvrgState, or
-    # None for the stateless reducers).
+    # None for the stateless reducers).  Under partial participation the
+    # leaves carry a leading (num_clients,) axis instead of (W_h,).
     vr: Optional[Any]
     step: jnp.ndarray
     key: jax.Array
+    # (num_clients,) int32 rounds-since-last-participation counters, or None
+    # under full participation (keeps the pre-participation pytree).
+    staleness: Optional[jnp.ndarray] = None
 
 
 def resolve_topology(cfg: RobustConfig, num_nodes: int,
@@ -243,8 +266,29 @@ def make_federated_step(
     schedule delegates to :func:`repro.topology.make_decentralized_step`
     (gossip mode per ``cfg.gossip``), whose state carries a leading
     per-node axis on every leaf (DESIGN.md Secs. 6-7).
+
+    With ``cfg.num_clients > 0`` (partial participation, DESIGN.md Sec. 10)
+    ``worker_data`` holds ONE shard PER CLIENT -- leaves shaped
+    (num_clients, J, ...) -- and each round a seeded cohort of
+    ``cfg.cohort_size`` clients fills the honest message slots via one
+    compiled gather; per-client VR state and staleness counters live in
+    (num_clients, ...) resident tables.
     """
-    wh = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
+    num_rows = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
+    if cfg.num_clients:
+        if cfg.num_clients != num_rows:
+            raise ValueError(
+                f"num_clients={cfg.num_clients} but worker_data has "
+                f"{num_rows} client shards")
+        if not cfg.cohort_size:
+            raise ValueError(
+                "partial participation in the simulated federation needs "
+                "an explicit cohort_size")
+    plan = participation_lib.resolve_participation(
+        cfg, cfg.cohort_size if cfg.num_clients else num_rows)
+    wh = plan.cohort_size if plan is not None else num_rows
+    num_clients = plan.num_clients if plan is not None else num_rows
+    weighted = participation_lib.uses_staleness(cfg, plan)
     b = cfg.num_byzantine if cfg.attack != "none" else 0
     sched = resolve_schedule(cfg, wh + b, topology, schedule)
     if sched is not None:
@@ -271,15 +315,16 @@ def make_federated_step(
             )(jnp.arange(j))
         return jax.vmap(worker_tab)(worker_data)
 
-    def full_local_grads(params_per_worker):
+    def full_local_grads(params_per_worker, data):
         """Per-worker FULL local gradient at per-worker params -> (W, ...).
         (The lsvrg anchor oracle: one vectorized pass over each worker's
         whole shard.)"""
-        return jax.vmap(grad_fn)(params_per_worker, worker_data)
+        return jax.vmap(grad_fn)(params_per_worker, data)
 
-    def broadcast_params(params):
+    def broadcast_params(params, n=None):
+        n = wh if n is None else n
         return jax.tree_util.tree_map(
-            lambda p: jnp.broadcast_to(p[None], (wh,) + p.shape), params)
+            lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params)
 
     pack_fn = None
     if cfg.packed:
@@ -290,36 +335,79 @@ def make_federated_step(
     def init_fn(params, key) -> FederatedState:
         opt_state = optimizer.init(params)
         # Reducer state lives in the message layout for the whole run
-        # (packed: one (W, J, D) SAGA table / (W, D) lsvrg buffers).
+        # (packed: one (W, J, D) SAGA table / (W, D) lsvrg buffers).  Under
+        # partial participation the tables are resident PER CLIENT --
+        # leading (num_clients,) axis -- and each round's cohort rows are
+        # gathered into the (W_h, ...) round view.
         vr_state = reducer.init_sim(
             params,
             per_sample_grads_fn=lambda: per_sample_table(params),
-            full_grads_fn=lambda p: full_local_grads(broadcast_params(p)),
-            num_workers=wh, pack_fn=pack_fn)
+            full_grads_fn=lambda p: full_local_grads(
+                broadcast_params(p, num_clients), worker_data),
+            num_workers=num_clients, pack_fn=pack_fn)
+        staleness = (participation_lib.init_staleness(num_clients)
+                     if plan is not None else None)
         return FederatedState(params, opt_state, vr_state,
-                              jnp.zeros((), jnp.int32), key)
+                              jnp.zeros((), jnp.int32), key, staleness)
 
-    def honest_grads(state, k_idx):
+    def honest_grads(params, k_idx, data):
         """Per-worker raw honest gradients + the drawn indices.  Returned
         leaves are pytrees; the packed step packs BEFORE the VR correction
-        so the table scatter / snapshot select is one fused op."""
-        params = state.params
+        so the table scatter / snapshot select is one fused op.  ``data``
+        is the round's (W_h, J, ...) view (the cohort gather under partial
+        participation, ``worker_data`` itself otherwise)."""
         idx = reducer.draw_indices(k_idx, wh, j)
         if idx.ndim == 2:       # minibatch layout: (W, B) sample draws
-            honest = jax.vmap(functools.partial(per_worker_grad, params))(worker_data, idx)
+            honest = jax.vmap(functools.partial(per_worker_grad, params))(data, idx)
         else:
             honest = jax.vmap(
                 lambda d, i: per_worker_grad(params, d, i[None])
-            )(worker_data, idx)
+            )(data, idx)
         return honest, idx
 
-    def correct(state, honest, idx, k_idx, *, spec=None):
+    def round_inputs(state):
+        """The round's (data, vr rows, honest staleness, cohort): the
+        participation layer's single gather (None-cohort under full
+        participation keeps everything as-is)."""
+        if plan is None:
+            stal = jnp.zeros((wh,), jnp.int32) if weighted else None
+            return worker_data, state.vr, stal, None
+        cohort = plan.cohort_at(state.step)
+        data = participation_lib.gather_rows(worker_data, cohort)
+        vr_rows = (participation_lib.gather_rows(state.vr, cohort)
+                   if reducer.stateful else state.vr)
+        return data, vr_rows, jnp.take(state.staleness, cohort, axis=0), cohort
+
+    def finish_round(state, cohort, vr_rows):
+        """Scatter the cohort's updated VR rows back into the resident
+        tables and advance the staleness counters."""
+        if plan is None:
+            return vr_rows, state.staleness
+        vr_state = (participation_lib.scatter_rows(state.vr, cohort, vr_rows)
+                    if reducer.stateful else vr_rows)
+        return vr_state, participation_lib.tick_staleness(state.staleness,
+                                                          cohort)
+
+    def row_weights_for(honest_stal):
+        """(W,) staleness weights of the full message buffer (honest cohort
+        + Byzantine slots), or None when the unweighted bit-exact path is
+        active."""
+        if not weighted:
+            return None, None
+        slot_stal = participation_lib.slot_staleness(
+            honest_stal, cfg.attack, b, straggler_k=cfg.straggler_k,
+            max_staleness=cfg.max_staleness)
+        return participation_lib.staleness_weights(
+            slot_stal, decay=cfg.staleness_decay,
+            max_staleness=cfg.max_staleness), slot_stal
+
+    def correct(params, vr, honest, idx, k_idx, *, data, spec=None):
         """Route the raw gradients through the reducer.  The snapshot
         oracles are bound lazily (closures) so stateless/table reducers
         trace none of them; ``spec`` converts between the packed buffer
         layout and the per-leaf pytrees the grad vmaps consume."""
         if not reducer.stateful:
-            return honest, state.vr, {}
+            return honest, vr, {}
         k_vr = jax.random.fold_in(k_idx, 1)   # DCE'd unless the reducer draws
 
         def as_tree(x):
@@ -333,23 +421,29 @@ def make_federated_step(
             snap = as_tree(snapshot)
             return as_msgs(jax.vmap(
                 lambda p_w, d, i: per_worker_grad(p_w, d, i[None])
-            )(snap, worker_data, idx))
+            )(snap, data, idx))
 
         def full_grads_at(p):
-            return as_msgs(full_local_grads(as_tree(p)))
+            return as_msgs(full_local_grads(as_tree(p), data))
 
         return reducer.correct(
-            state.vr, honest, idx, k_vr,
-            params=as_msgs(broadcast_params(state.params)),
+            vr, honest, idx, k_vr,
+            params=as_msgs(broadcast_params(params)),
             grads_at=grads_at, full_grads_at=full_grads_at)
 
     def step_fn_perleaf(state: FederatedState):
         """Pre-refactor per-leaf hot path (cfg.packed=False): the bench
-        baseline, byte-for-byte the original pipeline."""
+        baseline, byte-for-byte the original pipeline under full
+        participation.  Staleness-weighted aggregation is a flat-engine
+        feature, so when weights are active the per-leaf messages detour
+        through one pack -> weighted flat rule -> unpack."""
         key, k_idx, k_attack = jax.random.split(state.key, 3)
         params = state.params
-        honest, idx = honest_grads(state, k_idx)
-        honest, vr_state, vr_metrics = correct(state, honest, idx, k_idx)
+        data, vr_rows, honest_stal, cohort = round_inputs(state)
+        honest, idx = honest_grads(params, k_idx, data)
+        honest, vr_rows, vr_metrics = correct(params, vr_rows, honest, idx,
+                                              k_idx, data=data)
+        vr_state, staleness = finish_round(state, cohort, vr_rows)
 
         # Honest-message variance (reported in the paper's figures, bottom rows).
         hm = agg_lib.mean_agg_perleaf(honest)
@@ -359,37 +453,58 @@ def make_federated_step(
         ) / wh
 
         msgs = attack_lib.apply_attack(attack_cfg, honest, k_attack)
-        agg = cfg.aggregator_fn(perleaf=True)(msgs)
+        rw, slot_stal = row_weights_for(honest_stal)
+        if rw is None:
+            agg = cfg.aggregator_fn(perleaf=True)(msgs)
+        else:
+            spec = packing.pack_spec(msgs)
+            agg_vec = cfg.flat_aggregator_fn(spec)(spec.pack(msgs),
+                                                   row_weights=rw)
+            agg = spec.unpack(agg_vec, batch_ndim=0)
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
         params = optim_lib.apply_updates(params, updates)
-        new_state = FederatedState(params, opt_state, vr_state, state.step + 1, key)
+        new_state = FederatedState(params, opt_state, vr_state,
+                                   state.step + 1, key, staleness)
         metrics = {"honest_variance": var, **vr_metrics}
+        if slot_stal is not None:
+            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
         return new_state, metrics
 
     def step_fn_packed(state: FederatedState):
         """Flat-packed hot path (DESIGN.md Sec. 8): grads are packed into
         ONE (W_h, D) buffer right after the per-worker grad vmap; VR
         correction, attack injection, aggregation and the variance metric
-        all run on the buffer; a single unpack feeds the optimizer."""
+        all run on the buffer; a single unpack feeds the optimizer.  Under
+        partial participation the cohort gather/scatter brackets the
+        buffer, and the flat rule consumes the slots' staleness weights."""
         key, k_idx, k_attack = jax.random.split(state.key, 3)
         params = state.params
-        honest_tree, idx = honest_grads(state, k_idx)
+        data, vr_rows, honest_stal, cohort = round_inputs(state)
+        honest_tree, idx = honest_grads(params, k_idx, data)
         spec = cfg.message_spec(honest_tree, batch_ndim=1)
         honest = spec.pack(honest_tree)                       # (W_h, D)
-        honest, vr_state, vr_metrics = correct(state, honest, idx, k_idx,
-                                               spec=spec)
+        honest, vr_rows, vr_metrics = correct(params, vr_rows, honest, idx,
+                                              k_idx, data=data, spec=spec)
+        vr_state, staleness = finish_round(state, cohort, vr_rows)
 
         h32 = honest.astype(jnp.float32)
         var = jnp.sum((h32 - jnp.mean(h32, axis=0)[None]) ** 2) / wh
 
         msgs = attack_lib.apply_attack(attack_cfg, honest, k_attack,
                                        spec=spec)             # (W, D)
-        agg_vec = cfg.flat_aggregator_fn(spec)(msgs)          # (D,) f32
+        rw, slot_stal = row_weights_for(honest_stal)
+        if rw is None:
+            agg_vec = cfg.flat_aggregator_fn(spec)(msgs)      # (D,) f32
+        else:
+            agg_vec = cfg.flat_aggregator_fn(spec)(msgs, row_weights=rw)
         agg = spec.unpack(agg_vec, batch_ndim=0)
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
         params = optim_lib.apply_updates(params, updates)
-        new_state = FederatedState(params, opt_state, vr_state, state.step + 1, key)
+        new_state = FederatedState(params, opt_state, vr_state,
+                                   state.step + 1, key, staleness)
         metrics = {"honest_variance": var, **vr_metrics}
+        if slot_stal is not None:
+            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
         return new_state, metrics
 
     return init_fn, (step_fn_packed if cfg.packed else step_fn_perleaf)
@@ -435,6 +550,7 @@ def distributed_aggregate(
     *,
     worker_axes: tuple[str, ...] = ("data",),
     model_axes: tuple[str, ...] = ("model",),
+    row_weights: Optional[jnp.ndarray] = None,
 ) -> Pytree:
     """Paper-faithful ``gather`` master: all_gather every worker's (model-
     sharded) gradient over the worker axes, then run the robust rule
@@ -445,14 +561,27 @@ def distributed_aggregate(
     vector first, so the gather is a single collective (instead of one per
     leaf) and the rule runs on the packed (W, D_shard) matrix with one
     norm psum per iteration (DESIGN.md Sec. 8); ``packed=False`` keeps the
-    pre-refactor per-leaf pipeline."""
+    pre-refactor per-leaf pipeline.
+
+    ``row_weights``: optional (W,) staleness weights, REPLICATED on every
+    device (a ``P()`` shard_map input), consumed by the flat engines --
+    packed path only (the per-leaf baseline predates the weighted rules
+    and is kept byte-for-byte)."""
     if cfg.packed:
         spec = cfg.message_spec(grads, batch_ndim=0)
         buf = spec.pack(grads, batch_ndim=0)                  # (D_shard,)
         stacked = compat.all_gather(buf, worker_axes, axis=0, tiled=False)
-        agg_vec = cfg.flat_aggregator_fn(
-            spec, axis_names=model_axes, sync_axes=worker_axes)(stacked)
+        flat_fn = cfg.flat_aggregator_fn(
+            spec, axis_names=model_axes, sync_axes=worker_axes)
+        if row_weights is None:
+            agg_vec = flat_fn(stacked)
+        else:
+            agg_vec = flat_fn(stacked, row_weights=row_weights)
         return spec.unpack(agg_vec, batch_ndim=0)
+    if row_weights is not None:
+        raise ValueError(
+            "staleness row_weights need the packed gather path "
+            "(cfg.packed=True); the per-leaf baseline is unweighted")
     # Multi-axis all_gather already collapses the worker axes into ONE
     # leading (W_total,) axis in row-major worker order (compat.all_gather),
     # so single- and multi-pod meshes land on the same stacked layout.
@@ -531,6 +660,7 @@ def sharded_aggregate(
     worker_axes: tuple[str, ...] = ("data",),
     model_axes: tuple[str, ...] = ("model",),
     num_workers: int,
+    row_weights: Optional[jnp.ndarray] = None,
 ) -> Pytree:
     """Beyond-paper ``sharded`` master (DESIGN.md Sec. 2, comm=sharded).
 
@@ -553,6 +683,10 @@ def sharded_aggregate(
       (one (W, num_leaves) psum per iteration, ``weiszfeld_blockwise_sharded``).
 
     Every registry aggregator is supported (``SHARDED_AGGREGATORS``).
+    ``row_weights``: optional (W,) staleness weights, REPLICATED on every
+    device; the same weighted forms run on the coordinate slices unchanged
+    because every flat engine treats the weights per ROW (DESIGN.md
+    Sec. 10).  ``None`` keeps every branch bit-for-bit.
     """
     w = num_workers
     flat, unflatten, leaf_sizes = _flatten_concat(grads)
@@ -565,36 +699,63 @@ def sharded_aggregate(
                                 concat_axis=0, tiled=False)
     z_local = z_local.reshape(w, -1)
     comm_axes = tuple(worker_axes) + tuple(model_axes)
+    rw = row_weights
 
     name = cfg.aggregator
     if name == "mean":
-        slice_agg = jnp.mean(z_local, axis=0)
+        slice_agg = (jnp.mean(z_local, axis=0) if rw is None
+                     else agg_lib.mean_flat(z_local, row_weights=rw))
     elif name == "median":
-        slice_agg = jnp.median(z_local, axis=0)
+        slice_agg = (jnp.median(z_local, axis=0) if rw is None
+                     else agg_lib.median_flat(z_local, row_weights=rw))
     elif name == "trimmed_mean":
-        s = jnp.sort(z_local, axis=0)
-        slice_agg = jnp.mean(s[cfg.trim : w - cfg.trim], axis=0)
-    elif name in ("geomed", "geomed_groups"):
-        zz = z_local
-        if name == "geomed_groups":
-            zz = agg_lib.group_means(zz, cfg.num_groups)
+        if rw is None:
+            s = jnp.sort(z_local, axis=0)
+            slice_agg = jnp.mean(s[cfg.trim : w - cfg.trim], axis=0)
+        else:
+            slice_agg = agg_lib.trimmed_mean_flat(z_local, trim=cfg.trim,
+                                                  row_weights=rw)
+    elif name == "geomed":
         slice_agg = weiszfeld_flat(
-            zz, max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
-            axis_names=comm_axes,
+            z_local, max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+            axis_names=comm_axes, row_weights=rw,
         )
+    elif name == "geomed_groups":
+        if rw is None:
+            slice_agg = weiszfeld_flat(
+                agg_lib.group_means(z_local, cfg.num_groups),
+                max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+                axis_names=comm_axes,
+            )
+        else:
+            # Weighted group means + group-mass Weiszfeld: per-row math, so
+            # the coordinate slices aggregate consistently across devices.
+            slice_agg = agg_lib.geomed_groups_flat(
+                z_local, num_groups=cfg.num_groups,
+                max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+                axis_names=comm_axes, row_weights=rw)
     elif name == "centered_clip":
         # Same psum trick as the distributed Weiszfeld: full-vector residual
         # norms are restored by a psum of W floats over worker+model axes.
         slice_agg = agg_lib.centered_clip_flat(
-            z_local, radius=cfg.clip_radius, axis_names=comm_axes)
+            z_local, radius=cfg.clip_radius, axis_names=comm_axes,
+            row_weights=rw)
     elif name == "krum":
         # Pairwise-distance resharding: the (W, W) Gram partials of the
         # coordinate slices psum to the full-vector pairwise distances, so
         # the (replicated) selection index is exact; the winner's slices
         # are reassembled by the common all_gather below.
-        scores = agg_lib.krum_scores(
-            _partial_gram_sq_dists(z_local, comm_axes), cfg.num_byzantine)
-        slice_agg = z_local[jnp.argmin(scores)]
+        if rw is None:
+            scores = agg_lib.krum_scores(
+                _partial_gram_sq_dists(z_local, comm_axes), cfg.num_byzantine)
+            slice_agg = z_local[jnp.argmin(scores)]
+        else:
+            # Weighted selection: the scores (hence argmin) are replicated
+            # because the Gram psum restores global geometry and the
+            # weights are replicated, so every device picks the same row.
+            slice_agg = agg_lib.krum_flat(
+                z_local, num_byzantine=cfg.num_byzantine,
+                axis_names=comm_axes, row_weights=rw)
     elif name == "geomed_blockwise":
         # Per-leaf norms survive the resharding because every coordinate
         # knows its block id: segmented Weiszfeld psums a (W, num_leaves)
@@ -604,7 +765,8 @@ def sharded_aggregate(
             _local_leaf_ids(leaf_sizes, pad, w, worker_axes),
             len(leaf_sizes) + 1,  # + dummy block for the padding coordinates
             axis_names=comm_axes,
-            max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol)
+            max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+            row_weights=rw)
     else:
         raise ValueError(
             f"unknown aggregator {name!r} for comm='sharded'; "
@@ -666,6 +828,18 @@ def distributed_attack(
         byz = jax.tree_util.tree_map(
             lambda m, s: m + cfg.alie_z * jnp.sqrt(jnp.maximum(s - m * m, 0.0)),
             honest_mean, sq_mean)
+    elif name == "straggler":
+        # Stale-by-k report: a scaled honest mean standing in for a message
+        # computed k rounds ago (the same deterministic proxy the sim path
+        # uses, so cross-path pins compare like with like).
+        byz = jax.tree_util.tree_map(
+            lambda m: (1.0 + 0.25 * cfg.straggler_k) * m, honest_mean)
+    elif name == "dropout":
+        # Absent worker: the slot's payload is zeros; the bounded-staleness
+        # weights (slot staleness = max_staleness -> weight exactly 0) are
+        # what actually remove it from the aggregation -- mask-select, the
+        # worker axis is never sliced.
+        byz = jax.tree_util.tree_map(jnp.zeros_like, honest_mean)
     else:
         raise ValueError(f"unknown attack {name!r}")
 

@@ -190,8 +190,11 @@ def analytic_costs(cfg: ModelConfig, shape: ShapeConfig, *, chips: int,
         reducer = robust.reducer()
         if reducer.wants_state(saga_num_samples):
             c.add(b=reducer.state_hbm_passes * p_loc)
+            # Resident VR rows: per CLIENT under client-scale virtualization
+            # (num_clients > 0), per worker slot otherwise.
+            vr_rows = robust.num_clients or w
             vr_state_bytes = (BF16 * reducer.memory_elems(
-                w, saga_num_samples, n_total) / chips)
+                vr_rows, saga_num_samples, n_total) / chips)
     out = {
         "flops_per_device": c.flops_per_device,
         "hbm_bytes_per_device": c.hbm_bytes_per_device,

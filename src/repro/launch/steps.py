@@ -46,6 +46,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.core import attacks as attack_lib
+from repro.core import participation as participation_lib
 from repro.core.robust_step import RobustConfig, sharded_aggregate
 from repro.core import aggregators as agg_lib
 from repro.launch import mesh as mesh_lib
@@ -92,8 +93,20 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
     """Returns (train_step, state_specs, make_state_structs).
 
     ``train_step(state, batch, key) -> (state, metrics)`` where ``state`` is
-    a dict {params, opt, vr?, step}.  Batch leaves carry a leading worker
-    axis of size num_workers(mesh).
+    a dict {params, opt, vr?, step, staleness?}.  Batch leaves carry a
+    leading worker axis of size num_workers(mesh).
+
+    With ``robust.num_clients > 0`` (client-scale virtualization, DESIGN.md
+    Sec. 10) the variance-reduction state is resident PER CLIENT -- leading
+    (num_clients,) axis, still sharded over the worker mesh axes (so
+    num_clients should be a multiple of the worker count) -- and each round
+    the seeded cohort of W clients mans the mesh's worker slots: their VR
+    rows are gathered/scattered in the auto-jit region around the
+    shard-mapped aggregation, and the cohort's staleness counters produce
+    the replicated (W,) per-slot weights the flat rules consume.  The batch
+    stays per-SLOT (the data pipeline feeds whatever the round's cohort
+    should see; this builder virtualizes optimizer-relevant state, not the
+    input pipeline).
     """
     cfg = model.cfg
     if robust.comm not in ("gather", "sharded"):
@@ -103,13 +116,39 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
         compat.require_distributed(what="comm='sharded' aggregation")
     wa = mesh_lib.worker_axes(mesh)
     w = mesh_lib.num_workers(mesh)
+    plan = participation_lib.resolve_participation(robust, w)
+    num_clients = plan.num_clients if plan is not None else w
+    weighted = participation_lib.uses_staleness(robust, plan)
     optimizer = optim_lib.get_optimizer(train.optimizer, train.lr)
     attack_cfg = robust.attack_config()
     reducer = robust.reducer()
     use_vr = reducer.wants_state(saga_num_samples)
 
+    def row_weights_for(state):
+        """Replicated (W,) staleness weights of the mesh's message slots
+        (Byzantine slots are the FIRST B -- mask-replace convention), plus
+        this round's cohort, or (None, None, None) on the bit-exact
+        unweighted path."""
+        cohort = None if plan is None else plan.cohort_at(state["step"])
+        if not weighted:
+            return None, None, cohort
+        if plan is None:
+            honest_stal = jnp.zeros((w,), jnp.int32)
+        else:
+            honest_stal = jnp.take(state["staleness"], cohort, axis=0)
+        slot_stal = participation_lib.slot_staleness(
+            honest_stal, robust.attack,
+            robust.num_byzantine if robust.attack != "none" else 0,
+            straggler_k=robust.straggler_k,
+            max_staleness=robust.max_staleness, byz_first=True)
+        rw = participation_lib.staleness_weights(
+            slot_stal, decay=robust.staleness_decay,
+            max_staleness=robust.max_staleness)
+        return rw, slot_stal, cohort
+
     def train_step(state, batch, key):
         params = state["params"]
+        rw, slot_stal, cohort = row_weights_for(state)
 
         def worker_loss(p, wb):
             return model.loss(p, wb)
@@ -133,32 +172,42 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
             if reducer.uses_sample_idx:
                 idx = reducer.draw_indices(jax.random.fold_in(key, 1), w,
                                            saga_num_samples)
-            msgs, vr_state, vr_metrics = reducer.correct(
-                state["vr"], grads, idx, jax.random.fold_in(key, 3),
+            vr_rows = (participation_lib.gather_rows(state["vr"], cohort)
+                       if plan is not None else state["vr"])
+            msgs, vr_rows, vr_metrics = reducer.correct(
+                vr_rows, grads, idx, jax.random.fold_in(key, 3),
                 params=jax.tree_util.tree_map(
                     lambda p: jnp.broadcast_to(p[None], (w,) + p.shape),
                     params),
                 grads_at=lambda snap: jax.vmap(
                     jax.grad(worker_loss))(snap, batch))
+            vr_state = (participation_lib.scatter_rows(state["vr"], cohort,
+                                                       vr_rows)
+                        if plan is not None else vr_rows)
         else:
             msgs, vr_state, vr_metrics = grads, state.get("vr"), {}
 
-        if robust.packed and robust.comm == "gather" and \
-                robust.aggregator in PACKED_GATHER_RULES:
+        if robust.comm == "gather" and (weighted or (
+                robust.packed and robust.aggregator in PACKED_GATHER_RULES)):
             # Flat-packed hot path (DESIGN.md Sec. 8): one (W, D) buffer
-            # carries the messages through attack + aggregation.  Only the
-            # FULL-VECTOR rules route here -- they replicate the message
-            # matrix anyway (the Weiszfeld/Gram needs global norms), so
-            # packing collapses their per-leaf launches for free.  The
-            # VR state stays per-leaf so its tables/snapshots keep their
-            # model-axis sharding (DESIGN.md Sec. 4).
+            # carries the messages through attack + aggregation.  The
+            # FULL-VECTOR rules route here by default -- they replicate the
+            # message matrix anyway (the Weiszfeld/Gram needs global
+            # norms), so packing collapses their per-leaf launches for
+            # free.  The VR state stays per-leaf so its tables/snapshots
+            # keep their model-axis sharding (DESIGN.md Sec. 4).  When
+            # staleness weights are active EVERY gather rule routes here:
+            # weighted aggregation is a flat-engine feature (the per-leaf
+            # baseline predates it).
             spec = robust.message_spec(msgs, batch_ndim=1)
             buf = jax.lax.with_sharding_constraint(
                 spec.pack(msgs), jax.sharding.NamedSharding(mesh, P(waxes)))
             buf = attack_lib.apply_attack_stacked(
                 attack_cfg, buf, jax.random.fold_in(key, 2), spec=spec)
-            agg = spec.unpack(robust.flat_aggregator_fn(spec)(buf),
-                              batch_ndim=0)
+            flat_fn = robust.flat_aggregator_fn(spec)
+            agg_vec = flat_fn(buf) if rw is None else flat_fn(
+                buf, row_weights=rw)
+            agg = spec.unpack(agg_vec, batch_ndim=0)
         else:
             # Everything else keeps per-leaf messages: comm="sharded" is
             # ALREADY coordinate-packed internally (it flattens each
@@ -171,7 +220,8 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
             msgs = attack_lib.apply_attack_stacked(
                 attack_cfg, msgs, jax.random.fold_in(key, 2))
             if robust.comm == "sharded":
-                agg = _sharded_agg(msgs, robust, mesh, pspecs)
+                agg = _sharded_agg(msgs, robust, mesh, pspecs,
+                                   row_weights=rw)
             else:
                 agg = _gather_agg(msgs, robust)
 
@@ -181,6 +231,9 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
         new_state = {"params": params, "opt": opt_state, "step": state["step"] + 1}
         if use_vr:
             new_state["vr"] = vr_state
+        if plan is not None:
+            new_state["staleness"] = participation_lib.tick_staleness(
+                state["staleness"], cohort)
         metrics = {
             "loss": jnp.mean(losses),
             "agg_norm": jnp.sqrt(sum(
@@ -188,6 +241,8 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
                 for g in jax.tree_util.tree_leaves(agg))),
             **vr_metrics,
         }
+        if slot_stal is not None:
+            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
         return new_state, metrics
 
     # ---- specs / structs -------------------------------------------------
@@ -200,6 +255,8 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
               "step": P()}
         if use_vr:
             sp["vr"] = reducer.state_specs(pspecs, wa_spec)
+        if plan is not None:
+            sp["staleness"] = P()   # (num_clients,) int32, replicated
         return sp
 
     def state_structs():
@@ -207,7 +264,11 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
         st = {"params": ps, "opt": _opt_structs_like(train.optimizer, ps),
               "step": jax.ShapeDtypeStruct((), jnp.int32)}
         if use_vr:
-            st["vr"] = reducer.state_structs(ps, w, saga_num_samples)
+            # Per-client resident rows under partial participation.
+            st["vr"] = reducer.state_structs(ps, num_clients,
+                                             saga_num_samples)
+        if plan is not None:
+            st["staleness"] = jax.ShapeDtypeStruct((num_clients,), jnp.int32)
         return st
 
     return train_step, state_specs(), state_structs
@@ -266,6 +327,29 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
     b = robust.num_byzantine if robust.attack != "none" else 0
     honest = (jnp.arange(w) >= b).astype(jnp.float32)  # first B nodes attack
     wh = max(w - b, 1)
+    plan = participation_lib.resolve_participation(robust, w)
+    num_clients = plan.num_clients if plan is not None else w
+    weighted = participation_lib.uses_staleness(robust, plan)
+
+    def row_weights_for(state):
+        """Replicated (W,) per-sender staleness weights + the round's cohort
+        (first-B-Byzantine node convention), or Nones on the unweighted
+        bit-exact path."""
+        cohort = None if plan is None else plan.cohort_at(state["step"])
+        if not weighted:
+            return None, None, cohort
+        if plan is None:
+            honest_stal = jnp.zeros((w,), jnp.int32)
+        else:
+            honest_stal = jnp.take(state["staleness"], cohort, axis=0)
+        slot_stal = participation_lib.slot_staleness(
+            honest_stal, robust.attack, b,
+            straggler_k=robust.straggler_k,
+            max_staleness=robust.max_staleness, byz_first=True)
+        rw = participation_lib.staleness_weights(
+            slot_stal, decay=robust.staleness_decay,
+            max_staleness=robust.max_staleness)
+        return rw, slot_stal, cohort
 
     szs = mesh_lib.axis_sizes(mesh)
     pspecs = model.param_specs(szs)
@@ -276,6 +360,7 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
 
     def train_step(state, batch, key):
         params = state["params"]  # leaves (W, ...): one copy per node
+        rw, slot_stal, cohort = row_weights_for(state)
 
         losses, grads = jax.vmap(jax.value_and_grad(model.loss))(params, batch)
         grads = jax.tree_util.tree_map(
@@ -285,31 +370,56 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
         if use_vr:
             # Same oracle binding as make_train_step, but the params/
             # snapshot gradients are per-NODE (each node corrects against
-            # its own iterate).
+            # its own iterate); under partial participation the round's
+            # cohort rows are gathered from the per-client resident state.
             idx = None
             if reducer.uses_sample_idx:
                 idx = reducer.draw_indices(jax.random.fold_in(key, 1), w,
                                            saga_num_samples)
-            msgs, vr_state, vr_metrics = reducer.correct(
-                state["vr"], grads, idx, jax.random.fold_in(key, 3),
+            vr_rows = (participation_lib.gather_rows(state["vr"], cohort)
+                       if plan is not None else state["vr"])
+            msgs, vr_rows, vr_metrics = reducer.correct(
+                vr_rows, grads, idx, jax.random.fold_in(key, 3),
                 params=params,
                 grads_at=lambda snap: jax.vmap(
                     jax.grad(model.loss))(snap, batch))
+            vr_state = (participation_lib.scatter_rows(state["vr"], cohort,
+                                                       vr_rows)
+                        if plan is not None else vr_rows)
         else:
             msgs, vr_state, vr_metrics = grads, state.get("vr"), {}
 
-        def agg_fn(local_msgs, t, k):
-            local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
-            out = decentralized_aggregate(
-                local, robust, sched, comm=robust.comm, worker_axes=wa,
-                model_axes=("model",), num_workers=w, key=k, round_index=t)
-            return jax.tree_util.tree_map(lambda a: a[None], out)
+        if rw is None:
+            def agg_fn(local_msgs, t, k):
+                local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
+                out = decentralized_aggregate(
+                    local, robust, sched, comm=robust.comm, worker_axes=wa,
+                    model_axes=("model",), num_workers=w, key=k,
+                    round_index=t)
+                return jax.tree_util.tree_map(lambda a: a[None], out)
 
-        def gossip_agg(wire_msgs):
-            return compat.shard_map(
-                agg_fn, mesh=mesh, in_specs=(node_specs, P(), P()),
-                out_specs=node_specs, check_vma=False,
-            )(wire_msgs, state["step"], jax.random.fold_in(key, 2))
+            def gossip_agg(wire_msgs):
+                return compat.shard_map(
+                    agg_fn, mesh=mesh, in_specs=(node_specs, P(), P()),
+                    out_specs=node_specs, check_vma=False,
+                )(wire_msgs, state["step"], jax.random.fold_in(key, 2))
+        else:
+            # Staleness weighting: the replicated (W,) sender weights ride
+            # into the shard_map as a P() input and multiply the mask's
+            # sender columns inside decentralized_aggregate.
+            def agg_fn(local_msgs, t, k, weights):
+                local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
+                out = decentralized_aggregate(
+                    local, robust, sched, comm=robust.comm, worker_axes=wa,
+                    model_axes=("model",), num_workers=w, key=k,
+                    round_index=t, row_weights=weights)
+                return jax.tree_util.tree_map(lambda a: a[None], out)
+
+            def gossip_agg(wire_msgs):
+                return compat.shard_map(
+                    agg_fn, mesh=mesh, in_specs=(node_specs, P(), P(), P()),
+                    out_specs=node_specs, check_vma=False,
+                )(wire_msgs, state["step"], jax.random.fold_in(key, 2), rw)
 
         if robust.gossip == "params":
             # Local optimizer step with each node's own corrected gradient,
@@ -335,6 +445,9 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
                      "step": state["step"] + 1}
         if use_vr:
             new_state["vr"] = vr_state
+        if plan is not None:
+            new_state["staleness"] = participation_lib.tick_staleness(
+                state["staleness"], cohort)
 
         # Consensus drift of the honest nodes' parameter copies.
         cons = jnp.zeros((), jnp.float32)
@@ -351,6 +464,8 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
                 for g in jax.tree_util.tree_leaves(agg_move)) / w),
             **vr_metrics,
         }
+        if slot_stal is not None:
+            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
         return new_state, metrics
 
     # ---- specs / structs: every leaf gains the leading node axis ---------
@@ -360,6 +475,8 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
               "step": P()}
         if use_vr:
             sp["vr"] = reducer.state_specs(pspecs, wa_spec)
+        if plan is not None:
+            sp["staleness"] = P()   # (num_clients,) int32, replicated
         return sp
 
     def state_structs():
@@ -369,7 +486,10 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
         st = {"params": nps, "opt": _opt_structs_like(train.optimizer, nps),
               "step": jax.ShapeDtypeStruct((), jnp.int32)}
         if use_vr:
-            st["vr"] = reducer.state_structs(ps, w, saga_num_samples)
+            st["vr"] = reducer.state_structs(ps, num_clients,
+                                             saga_num_samples)
+        if plan is not None:
+            st["staleness"] = jax.ShapeDtypeStruct((num_clients,), jnp.int32)
         return st
 
     return train_step, state_specs(), state_structs
@@ -389,7 +509,8 @@ def _gather_agg(msgs: Pytree, robust: RobustConfig) -> Pytree:
 
 
 def _sharded_agg(msgs: Pytree, robust: RobustConfig, mesh,
-                 param_specs: Pytree) -> Pytree:
+                 param_specs: Pytree, *,
+                 row_weights: Optional[jnp.ndarray] = None) -> Pytree:
     """Beyond-paper: all_to_all coordinate resharding + slice-local rules
     inside a FULLY-manual shard_map (worker axes and model axis): every leaf
     arrives as its local shard, the flatten/all_to_all stay local, and global
@@ -397,21 +518,35 @@ def _sharded_agg(msgs: Pytree, robust: RobustConfig, mesh,
     W-float norms per Weiszfeld/clip iteration, one (W, W) partial Gram for
     krum, a (W, num_leaves) per-block matrix for geomed_blockwise.  Bytes
     moved per device: O(2 * p_shard) instead of the gather master's
-    O(W * p_shard)."""
+    O(W * p_shard).  ``row_weights``: optional (W,) staleness weights,
+    passed in REPLICATED (``P()``) so every device's slice rule sees the
+    same per-row mass (DESIGN.md Sec. 10)."""
     wa = mesh_lib.worker_axes(mesh)
     w = mesh_lib.num_workers(mesh)
     waxes = wa if len(wa) > 1 else wa[0]
 
-    def agg_fn(local_msgs):
-        local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
-        return sharded_aggregate(local, robust, worker_axes=wa,
-                                 model_axes=("model",), num_workers=w)
-
     in_specs = jax.tree_util.tree_map(
         lambda s: P(waxes, *tuple(s)), param_specs,
         is_leaf=lambda x: isinstance(x, P))
-    return compat.shard_map(agg_fn, mesh=mesh, in_specs=(in_specs,),
-                            out_specs=param_specs, check_vma=False)(msgs)
+
+    if row_weights is None:
+        def agg_fn(local_msgs):
+            local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
+            return sharded_aggregate(local, robust, worker_axes=wa,
+                                     model_axes=("model",), num_workers=w)
+
+        return compat.shard_map(agg_fn, mesh=mesh, in_specs=(in_specs,),
+                                out_specs=param_specs, check_vma=False)(msgs)
+
+    def agg_fn_w(local_msgs, rw):
+        local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
+        return sharded_aggregate(local, robust, worker_axes=wa,
+                                 model_axes=("model",), num_workers=w,
+                                 row_weights=rw)
+
+    return compat.shard_map(agg_fn_w, mesh=mesh, in_specs=(in_specs, P()),
+                            out_specs=param_specs,
+                            check_vma=False)(msgs, row_weights)
 
 
 def compile_train_step(step_fn, *, donate_state: bool = True):

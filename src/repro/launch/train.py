@@ -103,6 +103,20 @@ def main() -> None:
     ap.add_argument("--lsvrg-p", type=float, default=0.1,
                     help="per-step Bernoulli snapshot-refresh probability "
                     "for --vr lsvrg")
+    ap.add_argument("--num-clients", type=int, default=0,
+                    help="client-scale virtualization: total logical "
+                    "clients; a seeded cohort the size of the worker count "
+                    "participates per round (0 = full participation)")
+    ap.add_argument("--participation-seed", type=int, default=0,
+                    help="seed for the shuffled-epoch cohort sampler")
+    ap.add_argument("--max-staleness", type=int, default=64,
+                    help="staleness cutoff: rows at or beyond this many "
+                    "rounds stale get aggregation weight exactly 0")
+    ap.add_argument("--staleness-decay", type=float, default=1.0,
+                    help="per-round staleness weight decay (1.0 keeps "
+                    "weights 0/1: pure dropout masking)")
+    ap.add_argument("--straggler-k", type=int, default=4,
+                    help="how stale the straggler attack reports itself")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-dir", default="")
@@ -138,12 +152,20 @@ def main() -> None:
         topology_p=args.topology_p, gossip=args.gossip,
         schedule=args.schedule, schedule_period=args.schedule_period,
         packed=not args.per_leaf, message_dtype=args.message_dtype,
-        lsvrg_p=args.lsvrg_p)
+        lsvrg_p=args.lsvrg_p, num_clients=args.num_clients,
+        participation_seed=args.participation_seed,
+        max_staleness=args.max_staleness,
+        staleness_decay=args.staleness_decay,
+        straggler_k=args.straggler_k)
     train = TrainConfig(optimizer=args.optimizer, lr=args.lr)
     from repro.core.robust_step import resolve_schedule
     sched = resolve_schedule(robust, w)
     decentralized = sched is not None
     reducer = robust.reducer()
+    from repro.core import participation as participation_lib
+    plan = participation_lib.resolve_participation(robust, w)
+    if plan is not None:
+        print(plan.describe())
     saga_samples = args.saga_samples if reducer.uses_sample_idx else 0
     if decentralized:
         # Schedule-level report: per-round spectral gaps + the joint gap.
@@ -171,8 +193,13 @@ def main() -> None:
         if reducer.wants_state(saga_samples):
             # Cold-start VR state (zero SAGA table / zero lsvrg anchor):
             # warms up over the first steps instead of paying a J-pass
-            # init sweep at LLM scale.
-            state["vr"] = reducer.init_zeros(params0, w, saga_samples)
+            # init sweep at LLM scale.  Under client-scale virtualization the
+            # tables are resident per CLIENT, not per slot.
+            rows = plan.num_clients if plan is not None else w
+            state["vr"] = reducer.init_zeros(params0, rows, saga_samples)
+        if plan is not None:
+            state["staleness"] = participation_lib.init_staleness(
+                plan.num_clients)
         ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
         start = 0
         if args.resume:

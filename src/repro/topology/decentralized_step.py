@@ -140,6 +140,19 @@ def build_exchange(
         byz = jax.tree_util.tree_map(
             lambda m, s: m + cfg.alie_z * jnp.sqrt(
                 jnp.maximum(s - m * m, 0.0)), mean, sq)
+    elif name == "straggler":
+        # Stale-by-k report, per receiver: a scaled copy of receiver r's own
+        # honest-neighborhood mean stands in for a message computed
+        # ``straggler_k`` rounds ago (the same deterministic proxy as the
+        # master-path attack, receiver-localized).
+        byz = jax.tree_util.tree_map(
+            lambda m: (1.0 + 0.25 * cfg.straggler_k) * m, mean)
+    elif name == "dropout":
+        # Absent sender: its edges carry zero payload toward every receiver;
+        # the bounded-staleness weights (sender staleness = max_staleness ->
+        # weight exactly 0 on its mask COLUMN) remove it from each masked
+        # aggregation without slicing the sender axis.
+        byz = jax.tree_util.tree_map(jnp.zeros_like, mean)
     elif name == "gaussian":
         if key is None:
             raise ValueError("gaussian attack needs a key")
@@ -236,9 +249,35 @@ def make_decentralized_step(
     axis: every node owns its own parameter/optimizer copy, and
     ``consensus_dist`` in the metrics tracks how far the honest copies have
     drifted apart.
+
+    With ``cfg.num_clients > 0`` (DESIGN.md Sec. 10) ``worker_data`` holds
+    one shard per VIRTUAL CLIENT -- (num_clients, J, ...) -- and each round
+    a seeded cohort of ``cfg.cohort_size`` clients mans the W_h honest node
+    slots: the cohort's data + VR-state rows are gathered into the round
+    view, scattered back after, and the cohort's staleness counters weight
+    the sender COLUMNS of the neighbor mask (exact down-weighting for the
+    weight-based rules; with the default ``staleness_decay=1.0`` weights
+    are 0/1 so the count-based rules' neighbor counts stay integral).
+    Node parameters stay per-SLOT (the physical gossip network); clients
+    contribute data and variance-reduction memory.
     """
     sched = as_schedule(topology)
-    wh = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
+    num_rows = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
+    if cfg.num_clients:
+        if cfg.num_clients != num_rows:
+            raise ValueError(
+                f"num_clients={cfg.num_clients} but worker_data has "
+                f"{num_rows} client shards")
+        if not cfg.cohort_size:
+            raise ValueError(
+                "partial participation in the decentralized simulation "
+                "needs an explicit cohort_size")
+    from repro.core import participation as participation_lib
+    plan = participation_lib.resolve_participation(
+        cfg, cfg.cohort_size if cfg.num_clients else num_rows)
+    wh = plan.cohort_size if plan is not None else num_rows
+    num_clients = plan.num_clients if plan is not None else num_rows
+    weighted = participation_lib.uses_staleness(cfg, plan)
     j = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
     b = cfg.num_byzantine if cfg.attack != "none" else 0
     n = wh + b
@@ -255,10 +294,10 @@ def make_decentralized_step(
     def per_worker_grad(params_w, data_w, idx):
         return grad_fn(params_w, sample_batch(data_w, idx))
 
-    def full_local_grads(params_per_worker):
-        """(W_h, ...) full local gradients at per-NODE honest params (the
-        lsvrg anchor oracle)."""
-        return jax.vmap(grad_fn)(params_per_worker, worker_data)
+    def full_local_grads(params_per_worker, data):
+        """(W, ...) full local gradients at per-NODE honest params (the
+        lsvrg anchor oracle); ``data`` rows pair with the param rows."""
+        return jax.vmap(grad_fn)(params_per_worker, data)
 
     pack_fn = None
     if cfg.packed:
@@ -281,32 +320,70 @@ def make_decentralized_step(
         # VR state covers the HONEST workers only (the first wh node ids;
         # Byzantine nodes fabricate messages, they keep no tables), in the
         # message layout -- same convention as the master path (Sec. 8).
+        # Under partial participation the tables are resident PER CLIENT.
         vr_state = reducer.init_sim(
             params,
             per_sample_grads_fn=per_sample_table,
             full_grads_fn=lambda p: full_local_grads(
                 jax.tree_util.tree_map(
-                    lambda q: jnp.broadcast_to(q[None], (wh,) + q.shape), p)),
-            num_workers=wh, pack_fn=pack_fn)
+                    lambda q: jnp.broadcast_to(
+                        q[None], (num_clients,) + q.shape), p),
+                worker_data),
+            num_workers=num_clients, pack_fn=pack_fn)
+        staleness = (participation_lib.init_staleness(num_clients)
+                     if plan is not None else None)
         return FederatedState(nodes, opt_state, vr_state,
-                              jnp.zeros((), jnp.int32), key)
+                              jnp.zeros((), jnp.int32), key, staleness)
 
-    def honest_grads(state, k_idx):
+    def round_inputs(state):
+        """The round's (data, vr rows, honest staleness, cohort) -- the
+        participation layer's single gather (see robust_step)."""
+        if plan is None:
+            stal = jnp.zeros((wh,), jnp.int32) if weighted else None
+            return worker_data, state.vr, stal, None
+        cohort = plan.cohort_at(state.step)
+        data = participation_lib.gather_rows(worker_data, cohort)
+        vr_rows = (participation_lib.gather_rows(state.vr, cohort)
+                   if reducer.stateful else state.vr)
+        return data, vr_rows, jnp.take(state.staleness, cohort, axis=0), cohort
+
+    def finish_round(state, cohort, vr_rows):
+        if plan is None:
+            return vr_rows, state.staleness
+        vr_state = (participation_lib.scatter_rows(state.vr, cohort, vr_rows)
+                    if reducer.stateful else vr_rows)
+        return vr_state, participation_lib.tick_staleness(state.staleness,
+                                                          cohort)
+
+    def sender_weights(honest_stal):
+        """(N,) staleness weights over the node/sender axis (honest slots
+        first, Byzantine LAST -- the sim node-id convention), or None on the
+        unweighted bit-exact path."""
+        if not weighted:
+            return None, None
+        slot_stal = participation_lib.slot_staleness(
+            honest_stal, cfg.attack, b, straggler_k=cfg.straggler_k,
+            max_staleness=cfg.max_staleness)
+        return participation_lib.staleness_weights(
+            slot_stal, decay=cfg.staleness_decay,
+            max_staleness=cfg.max_staleness), slot_stal
+
+    def honest_grads(state, k_idx, data):
         honest_params = jax.tree_util.tree_map(lambda x: x[:wh], state.params)
         idx = reducer.draw_indices(k_idx, wh, j)
         if idx.ndim == 2:       # minibatch layout: (W, B) sample draws
-            honest = jax.vmap(per_worker_grad)(honest_params, worker_data, idx)
+            honest = jax.vmap(per_worker_grad)(honest_params, data, idx)
             return honest, idx
         honest = jax.vmap(
             lambda p, d, i: per_worker_grad(p, d, i[None])
-        )(honest_params, worker_data, idx)
+        )(honest_params, data, idx)
         return honest, idx
 
-    def correct(state, honest, idx, k_idx, *, spec=None):
+    def correct(state, vr, honest, idx, k_idx, *, data, spec=None):
         """Route the honest nodes' raw gradients through the reducer (the
         snapshot oracles evaluate against each node's OWN params)."""
         if not reducer.stateful:
-            return honest, state.vr, {}
+            return honest, vr, {}
         k_vr = jax.random.fold_in(k_idx, 1)   # DCE'd unless the reducer draws
         honest_params = jax.tree_util.tree_map(lambda x: x[:wh], state.params)
 
@@ -320,13 +397,13 @@ def make_decentralized_step(
             snap = as_tree(snapshot)
             return as_msgs(jax.vmap(
                 lambda p, d, i: per_worker_grad(p, d, i[None])
-            )(snap, worker_data, idx))
+            )(snap, data, idx))
 
         def full_grads_at(p):
-            return as_msgs(full_local_grads(as_tree(p)))
+            return as_msgs(full_local_grads(as_tree(p), data))
 
         return reducer.correct(
-            state.vr, honest, idx, k_vr,
+            vr, honest, idx, k_vr,
             params=as_msgs(honest_params),
             grads_at=grads_at, full_grads_at=full_grads_at)
 
@@ -340,12 +417,20 @@ def make_decentralized_step(
 
     def step_fn_perleaf(state):
         """Pre-refactor per-leaf pipeline (cfg.packed=False): the bench
-        baseline."""
+        baseline.  When staleness weights are active they multiply the
+        sender COLUMNS of the round's mask (mask-as-weight: exact for the
+        weight-based rules, exact mask-out for dropped senders) before both
+        the per-edge attack statistics and the masked aggregation."""
         key, k_idx, k_attack = jax.random.split(state.key, 3)
         mask = sched.mask_at(state.step)
         mixing = sched.mixing_at(state.step)
-        honest, idx = honest_grads(state, k_idx)
-        honest, vr_state, vr_metrics = correct(state, honest, idx, k_idx)
+        data, vr_rows, honest_stal, cohort = round_inputs(state)
+        honest, idx = honest_grads(state, k_idx, data)
+        honest, vr_rows, vr_metrics = correct(state, vr_rows, honest, idx,
+                                              k_idx, data=data)
+        vr_state, staleness = finish_round(state, cohort, vr_rows)
+        sw, slot_stal = sender_weights(honest_stal)
+        wmask = mask if sw is None else mask * sw[None, :]
 
         # Honest-message variance (same metric as the master path).
         hm = jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0), honest)
@@ -366,38 +451,47 @@ def make_decentralized_step(
             updates, opt_state = optimizer.update(
                 msgs, state.opt_state, state.params, state.step)
             half = optim_lib.apply_updates(state.params, updates)
-            exchange = build_exchange(half, attack_cfg, mask, is_byz,
+            exchange = build_exchange(half, attack_cfg, wmask, is_byz,
                                       k_attack)
             params = masked_aggregate(
-                cfg.aggregator, exchange, mask, perleaf=True,
-                **_agg_opts(cfg, mixing * mask))
+                cfg.aggregator, exchange, wmask, perleaf=True,
+                **_agg_opts(cfg, mixing * wmask))
         else:
-            exchange = build_exchange(msgs, attack_cfg, mask, is_byz,
+            exchange = build_exchange(msgs, attack_cfg, wmask, is_byz,
                                       k_attack)
             agg = masked_aggregate(
-                cfg.aggregator, exchange, mask, perleaf=True,
-                **_agg_opts(cfg, mixing * mask))
+                cfg.aggregator, exchange, wmask, perleaf=True,
+                **_agg_opts(cfg, mixing * wmask))
             updates, opt_state = optimizer.update(
                 agg, state.opt_state, state.params, state.step)
             params = optim_lib.apply_updates(state.params, updates)
 
         new_state = FederatedState(params, opt_state, vr_state,
-                                   state.step + 1, key)
-        return new_state, {"honest_variance": var,
-                           "consensus_dist": consensus(params), **vr_metrics}
+                                   state.step + 1, key, staleness)
+        metrics = {"honest_variance": var,
+                   "consensus_dist": consensus(params), **vr_metrics}
+        if slot_stal is not None:
+            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
+        return new_state, metrics
 
     def step_fn_packed(state):
         """Flat-packed pipeline (DESIGN.md Sec. 8): one (N, D) message
         buffer feeds the per-edge attack and the masked flat engine; the
-        dense (N, N, D) exchange replaces the per-leaf exchange tensors."""
+        dense (N, N, D) exchange replaces the per-leaf exchange tensors.
+        Staleness weights multiply the mask's sender columns, as in the
+        per-leaf step."""
         key, k_idx, k_attack = jax.random.split(state.key, 3)
         mask = sched.mask_at(state.step)
         mixing = sched.mixing_at(state.step)
-        honest_tree, idx = honest_grads(state, k_idx)
+        data, vr_rows, honest_stal, cohort = round_inputs(state)
+        honest_tree, idx = honest_grads(state, k_idx, data)
         spec = cfg.message_spec(honest_tree, batch_ndim=1)
         honest = spec.pack(honest_tree)                        # (W_h, D)
-        honest, vr_state, vr_metrics = correct(state, honest, idx, k_idx,
-                                               spec=spec)
+        honest, vr_rows, vr_metrics = correct(state, vr_rows, honest, idx,
+                                              k_idx, data=data, spec=spec)
+        vr_state, staleness = finish_round(state, cohort, vr_rows)
+        sw, slot_stal = sender_weights(honest_stal)
+        wmask = mask if sw is None else mask * sw[None, :]
 
         h32 = honest.astype(jnp.float32)
         var = jnp.sum((h32 - jnp.mean(h32, axis=0)[None]) ** 2) / wh
@@ -406,11 +500,11 @@ def make_decentralized_step(
         msgs = jnp.zeros((n,) + honest.shape[1:], honest.dtype).at[:wh].set(honest)
 
         def flat_gossip(wire_buf):
-            exchange = build_exchange(wire_buf, attack_cfg, mask, is_byz,
+            exchange = build_exchange(wire_buf, attack_cfg, wmask, is_byz,
                                       k_attack, spec=spec)     # (N, N, D)
             out = masked_aggregate_flat(
-                cfg.aggregator, exchange, mask, spec=spec,
-                **_agg_opts(cfg, mixing * mask))               # (N, D) f32
+                cfg.aggregator, exchange, wmask, spec=spec,
+                **_agg_opts(cfg, mixing * wmask))              # (N, D) f32
             return spec.unpack(out, batch_ndim=1)
 
         if gossip == "params":
@@ -426,9 +520,12 @@ def make_decentralized_step(
             params = optim_lib.apply_updates(state.params, updates)
 
         new_state = FederatedState(params, opt_state, vr_state,
-                                   state.step + 1, key)
-        return new_state, {"honest_variance": var,
-                           "consensus_dist": consensus(params), **vr_metrics}
+                                   state.step + 1, key, staleness)
+        metrics = {"honest_variance": var,
+                   "consensus_dist": consensus(params), **vr_metrics}
+        if slot_stal is not None:
+            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
+        return new_state, metrics
 
     return init_fn, (step_fn_packed if cfg.packed else step_fn_perleaf)
 
@@ -449,6 +546,7 @@ def decentralized_aggregate(
     key: Optional[jax.Array] = None,
     round_index: Optional[jax.Array] = None,
     use_topology_kernel: Optional[bool] = None,
+    row_weights: Optional[jnp.ndarray] = None,
 ) -> Pytree:
     """Per-node robust neighborhood aggregation inside ``shard_map``.
 
@@ -488,6 +586,13 @@ def decentralized_aggregate(
     attack_cfg = cfg.attack_config()
     mask_all = sched.mask_at(t)                               # (S, S)
     mixing_all = sched.mixing_at(t)
+    if row_weights is not None:
+        # Bounded-staleness weighting (DESIGN.md Sec. 10): the replicated
+        # (S,) per-sender weights multiply the mask's sender COLUMNS, so
+        # every receiver's masked rule down-weighs the same stale senders
+        # and masks out the absent ones (mask-as-weight -- no sender-axis
+        # slicing).
+        mask_all = mask_all * row_weights.astype(jnp.float32)[None, :]
     is_byz = jnp.arange(w) < cfg.num_byzantine
     wid = compat.axis_index(worker_axes)
     packed = getattr(cfg, "packed", True)
@@ -541,7 +646,9 @@ def decentralized_aggregate(
             axis_names=comm_axes, max_iters=cfg.weiszfeld_iters,
             tol=cfg.weiszfeld_tol)
     elif _use_topology_kernel(use_topology_kernel) and (
-            cfg.aggregator == "trimmed_mean"):
+            cfg.aggregator == "trimmed_mean") and row_weights is None:
+        # (The fused kernel reduces by 0/1 mask counts, so fractional
+        # staleness weights route to the jnp masked engine instead.)
         # PR-3 leftover closed: the fused Pallas masked-neighborhood
         # reduction runs the coordinate-separable trimmed mean on the
         # (R, S, chunk) exchange slab in ONE HBM sweep -- no sort, no mask

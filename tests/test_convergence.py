@@ -166,3 +166,32 @@ def test_geomed_groups_low_byzantine(problem):
                                attack="sign_flip", num_byzantine=1,
                                num_groups=4))[0])
     assert g < 0.2, f"geomed_groups failed in-regime: {g}"
+
+
+@pytest.mark.slow
+def test_sampled_cohort_matches_full_participation_floor(problem):
+    """ISSUE 7 tier-2 gate (DESIGN.md Sec. 10): client-scale
+    virtualization keeps the paper's convergence story.  24 virtual
+    clients feeding the 12-slot cohort under sign_flip reach an error
+    floor within 2x of full participation's (each client's SAGA rows just
+    refresh at half the cadence, so the variance still vanishes), and a
+    dropout-only run -- Byzantine slots masked to weight exactly 0 --
+    converges outright."""
+    loss, batch, f_star, wd, _ = problem
+    wd24 = partition(batch, 2 * WH, seed=1)
+    g_full = gap(loss, batch, f_star, run(
+        loss, wd, RobustConfig(aggregator="geomed", vr="saga",
+                               attack="sign_flip", num_byzantine=B))[0])
+    g_sampled = gap(loss, batch, f_star, run(
+        loss, wd24, RobustConfig(aggregator="geomed", vr="saga",
+                                 attack="sign_flip", num_byzantine=B,
+                                 num_clients=2 * WH, cohort_size=WH),
+        steps=2 * STEPS)[0])
+    assert g_sampled < 0.1, f"sampled cohort failed under sign_flip: {g_sampled}"
+    assert g_sampled < 2 * max(g_full, 0.03), (g_sampled, g_full)
+    g_drop = gap(loss, batch, f_star, run(
+        loss, wd24, RobustConfig(aggregator="geomed", vr="saga",
+                                 attack="dropout", num_byzantine=B,
+                                 num_clients=2 * WH, cohort_size=WH),
+        steps=2 * STEPS)[0])
+    assert g_drop < 0.1, f"dropout-only sampled run failed: {g_drop}"

@@ -330,6 +330,7 @@ def test_every_reducer_trains_master_and_decentralized_sim(problem, vr):
             vr, topology, gossip)
 
 
+@pytest.mark.slow
 def test_every_reducer_trains_distributed_both_comm_modes():
     """Launch-path coverage on the 8-device mesh: every VR_NAMES entry
     compiles and trains under make_train_step in BOTH comm modes, with

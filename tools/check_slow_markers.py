@@ -1,0 +1,91 @@
+"""Audit that every minutes-scale test carries the ``slow`` marker.
+
+Tier-1 (the default ``pytest -x -q`` run) must stay fast enough to gate
+every PR; anything that takes longer than ``BUDGET_S`` belongs in tier 2
+behind ``@pytest.mark.slow`` (pytest.ini) so local runs can deselect it
+with ``-m "not slow"``.  This script closes the loop: it parses the
+``--durations=25`` report that CI tees into ``TEST_DURATIONS.txt`` and
+fails if any over-budget test is NOT slow-marked in its source file.
+
+    python tools/check_slow_markers.py [TEST_DURATIONS.txt]
+
+Duration lines look like::
+
+    123.45s call     tests/test_convergence.py::test_c2_saga_beats_sgd_under_attack
+
+Only ``call`` phases count (setup/teardown of a module-scope fixture is
+amortized across every test that shares it, so charging it to the first
+test would misfire).  Parametrized ids are stripped to the function name
+before the source grep.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+BUDGET_S = 60.0
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_LINE = re.compile(
+    r"^\s*(?P<secs>\d+(?:\.\d+)?)s\s+call\s+"
+    r"(?P<file>\S+?)::(?P<test>\S+)\s*$")
+
+
+def over_budget(report_text: str):
+    """(seconds, file, test-function) for every over-budget call line."""
+    out = []
+    for line in report_text.splitlines():
+        m = _LINE.match(line)
+        if not m:
+            continue
+        secs = float(m.group("secs"))
+        if secs <= BUDGET_S:
+            continue
+        test = m.group("test").split("[")[0]      # strip parametrized id
+        out.append((secs, m.group("file"), test))
+    return out
+
+
+def is_slow_marked(path: pathlib.Path, test: str) -> bool:
+    """True if ``test``'s def in ``path`` sits under a pytest.mark.slow
+    decorator (scanning the decorator block directly above the def)."""
+    try:
+        lines = path.read_text().splitlines()
+    except OSError:
+        return False
+    for i, line in enumerate(lines):
+        if re.match(rf"\s*def {re.escape(test)}\s*\(", line):
+            j = i - 1
+            while j >= 0 and (lines[j].lstrip().startswith("@")
+                              or lines[j].strip() == ""
+                              or lines[j].lstrip().startswith("#")):
+                if "pytest.mark.slow" in lines[j]:
+                    return True
+                j -= 1
+    return False
+
+
+def main() -> int:
+    report = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
+                          else "TEST_DURATIONS.txt")
+    if not report.exists():
+        print(f"{report}: not found (run pytest with --durations=25 "
+              "| tee TEST_DURATIONS.txt first)")
+        return 1
+    failures = []
+    for secs, fname, test in over_budget(report.read_text()):
+        if not is_slow_marked(ROOT / fname, test):
+            failures.append(f"{fname}::{test} took {secs:.0f}s "
+                            f"(> {BUDGET_S:.0f}s) without @pytest.mark.slow")
+    if failures:
+        print("SLOW-MARKER AUDIT FAILED:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("slow-marker audit OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
