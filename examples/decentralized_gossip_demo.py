@@ -22,12 +22,21 @@ MODELS, arXiv:2308.05292's setting), both over a per-round resampled
 erdos_renyi schedule whose single rounds may be disconnected -- only the
 window union connects.
 
-    PYTHONPATH=src python examples/decentralized_gossip_demo.py
+    PYTHONPATH=src python examples/decentralized_gossip_demo.py \\
+        --log-dir runs/gossip-demo --diagnostics
+
+With ``--log-dir`` every run section streams its per-step metrics (and,
+with ``--diagnostics``, the in-graph aggregation diagnostics) to
+``<dir>/<section>/metrics.jsonl`` through ``repro.telemetry.RunLogger``.
 """
+import argparse
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import RobustConfig, make_federated_step
 from repro.core.robust_step import resolve_schedule
 from repro.data import ijcnn1_like, logreg_loss, partition
@@ -44,7 +53,19 @@ def mean_honest_loss(loss_fn, params, wd, wh):
         for i in range(wh)]))
 
 
+def run_dir(base: str, name: str):
+    return os.path.join(base, name) if base else None
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--log-dir", default="", help="write metrics.jsonl per "
+                    "run section under <dir>/<section>/ (repro.telemetry)")
+    ap.add_argument("--diagnostics", action="store_true",
+                    help="log in-graph aggregation diagnostics per step")
+    ap.add_argument("--steps", type=int, default=STEPS)
+    args = ap.parse_args()
+    steps = args.steps
     data = ijcnn1_like(jax.random.PRNGKey(0), n=2000)
     wd = partition({"a": data.x, "b": data.y}, HONEST, seed=1)
     loss_fn = logreg_loss(0.01)
@@ -55,18 +76,29 @@ def main() -> None:
         print(f"\n=== {topo_name} === {topo.describe()}")
         for agg in ("geomed", "mean"):
             cfg = RobustConfig(aggregator=agg, vr="saga", attack="sign_flip",
-                               num_byzantine=BYZ, weiszfeld_iters=32)
+                               num_byzantine=BYZ, weiszfeld_iters=32,
+                               diagnostics=args.diagnostics)
             init_fn, step_fn = make_federated_step(
                 loss_fn, wd, cfg, opt, topology=topo)
             state = init_fn({"w": jnp.zeros((22,), jnp.float32)},
                             jax.random.PRNGKey(1))
             step = jax.jit(step_fn)
-            for i in range(STEPS):
-                state, metrics = step(state)
-                if i % (STEPS // 3) == 0 or i == STEPS - 1:
-                    ml = mean_honest_loss(loss_fn, state.params, wd, HONEST)
-                    print(f"  {agg:7s} step {i:3d}: honest-loss={ml:.4f} "
-                          f"consensus={float(metrics['consensus_dist']):.5f}")
+            with telemetry.RunLogger(
+                    run_dir(args.log_dir, f"{topo_name}_{agg}"),
+                    flush_every=64) as logger:
+                logger.write_meta(
+                    section="topology", topology=topo_name, aggregator=agg,
+                    honest=HONEST, byzantine=BYZ, steps=steps,
+                    jax_version=jax.__version__)
+                for i in range(steps):
+                    state, metrics = step(state)
+                    logger.log_step(i, metrics)
+                    if i % (steps // 3) == 0 or i == steps - 1:
+                        ml = mean_honest_loss(loss_fn, state.params, wd,
+                                              HONEST)
+                        print(f"  {agg:7s} step {i:3d}: honest-loss={ml:.4f} "
+                              f"consensus="
+                              f"{float(metrics['consensus_dist']):.5f}")
 
     print("\n=== gossip modes on a time-varying erdos_renyi schedule ===")
     for gossip in ("gradient", "params"):
@@ -74,7 +106,7 @@ def main() -> None:
                            attack="sign_flip", num_byzantine=BYZ,
                            weiszfeld_iters=32, gossip=gossip,
                            schedule="erdos_renyi", schedule_period=4,
-                           topology_p=0.4)
+                           topology_p=0.4, diagnostics=args.diagnostics)
         sched = resolve_schedule(cfg, HONEST + BYZ)
         if gossip == "gradient":
             d = sched.describe()
@@ -88,12 +120,19 @@ def main() -> None:
         state = init_fn({"w": jnp.zeros((22,), jnp.float32)},
                         jax.random.PRNGKey(1))
         step = jax.jit(step_fn)
-        for i in range(STEPS):
-            state, metrics = step(state)
-            if i % (STEPS // 3) == 0 or i == STEPS - 1:
-                ml = mean_honest_loss(loss_fn, state.params, wd, HONEST)
-                print(f"  {gossip:8s} step {i:3d}: honest-loss={ml:.4f} "
-                      f"consensus={float(metrics['consensus_dist']):.5f}")
+        with telemetry.RunLogger(
+                run_dir(args.log_dir, f"schedule_{gossip}"),
+                flush_every=64) as logger:
+            logger.write_meta(
+                section="gossip_modes", gossip=gossip, honest=HONEST,
+                byzantine=BYZ, steps=steps, jax_version=jax.__version__)
+            for i in range(steps):
+                state, metrics = step(state)
+                logger.log_step(i, metrics)
+                if i % (steps // 3) == 0 or i == steps - 1:
+                    ml = mean_honest_loss(loss_fn, state.params, wd, HONEST)
+                    print(f"  {gossip:8s} step {i:3d}: honest-loss={ml:.4f} "
+                          f"consensus={float(metrics['consensus_dist']):.5f}")
 
 
 if __name__ == "__main__":

@@ -37,7 +37,7 @@ __all__ = [
     "JAX_VERSION", "AxisType", "HAS_AXIS_TYPE", "HAS_SHARD_MAP",
     "HAS_AMBIENT_MESH", "make_mesh", "use_mesh", "active_mesh", "shard_map",
     "axis_size", "axis_group", "axis_index", "all_gather", "all_to_all",
-    "psum", "cost_analysis", "require_distributed",
+    "psum", "cost_analysis", "profiler_trace", "require_distributed",
 ]
 
 JAX_VERSION: tuple[int, ...] = tuple(
@@ -199,6 +199,29 @@ def shard_map(f: Callable, *, mesh=None, in_specs, out_specs,
     return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_rep=bool(check_vma),
                              auto=frozenset(all_names - manual))
+
+
+@contextlib.contextmanager
+def profiler_trace(log_dir: str):
+    """``with profiler_trace(dir):`` -- version-stable ``jax.profiler.trace``.
+
+    The context-manager spelling exists on every jax this repo supports, but
+    guard it anyway (some stripped builds ship only start_trace/stop_trace)
+    so the telemetry layer (``launch/train.py --profile-steps``) degrades to
+    the explicit pair instead of crashing mid-run.  Remember to
+    ``block_until_ready`` inside the window: dispatch returns early, and an
+    empty trace is the classic symptom.
+    """
+    prof = jax.profiler
+    if hasattr(prof, "trace"):
+        with prof.trace(log_dir):
+            yield
+        return
+    prof.start_trace(log_dir)  # pragma: no cover - stripped-profiler builds
+    try:
+        yield
+    finally:
+        prof.stop_trace()
 
 
 def cost_analysis(compiled) -> dict:

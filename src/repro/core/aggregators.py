@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro.core import packing
 from repro.core.geomed import weiszfeld_flat, weiszfeld_pytree
+from repro.telemetry.diagnostics import AggDiagnostics, flat_diagnostics
 
 Pytree = Any
 Aggregator = Callable[[Pytree], Pytree]
@@ -66,6 +67,14 @@ _WEIGHT_FLOOR = 1e-8
 # ever slicing the worker axis) and fractional weights down-weigh stale
 # reports.  In shard_map the weights vector is replicated on every device,
 # so the same forms run on coordinate slices unchanged.
+#
+# Every rule also accepts ``diagnostics=False`` (DESIGN.md Sec. 11): True
+# returns ``(aggregate, AggDiagnostics)`` instead of the bare aggregate,
+# surfacing the per-worker suspicion signal each rule computes internally
+# (implicit Weiszfeld weights, krum scores/selection, clip fractions).  The
+# False branch is the pre-telemetry code, byte-identical; rules with no
+# model-axis collectives take ``axis_names`` purely so the diagnostics'
+# distance partials can be psum'd when rows are coordinate shards.
 # ---------------------------------------------------------------------------
 
 def _sorted_with_weights(buf: jnp.ndarray, row_weights: jnp.ndarray):
@@ -78,15 +87,30 @@ def _sorted_with_weights(buf: jnp.ndarray, row_weights: jnp.ndarray):
     return vals, wsort
 
 
-def mean_flat(buf: jnp.ndarray, *, row_weights=None) -> jnp.ndarray:
+def mean_flat(buf: jnp.ndarray, *, row_weights=None, axis_names=(),
+              diagnostics: bool = False) -> jnp.ndarray:
     if row_weights is None:
-        return jnp.mean(buf.astype(jnp.float32), axis=0)
-    w = row_weights.astype(jnp.float32)
-    num = jnp.sum(buf.astype(jnp.float32) * w[:, None], axis=0)
-    return num / jnp.maximum(jnp.sum(w), _WEIGHT_FLOOR)
+        out = jnp.mean(buf.astype(jnp.float32), axis=0)
+    else:
+        w = row_weights.astype(jnp.float32)
+        num = jnp.sum(buf.astype(jnp.float32) * w[:, None], axis=0)
+        out = num / jnp.maximum(jnp.sum(w), _WEIGHT_FLOOR)
+    if not diagnostics:
+        return out
+    # The mean's implicit weight IS (normalized) row_weights -- uniform when
+    # None; the distance trace still exposes outliers it failed to reject.
+    rw = (jnp.ones((buf.shape[0],), jnp.float32) if row_weights is None
+          else row_weights.astype(jnp.float32))
+    return out, flat_diagnostics(buf, out, row_weights=row_weights,
+                                 axis_names=axis_names, weight=rw)
 
 
-def median_flat(buf: jnp.ndarray, *, row_weights=None) -> jnp.ndarray:
+def median_flat(buf: jnp.ndarray, *, row_weights=None, axis_names=(),
+                diagnostics: bool = False) -> jnp.ndarray:
+    if diagnostics:
+        out = median_flat(buf, row_weights=row_weights)
+        return out, flat_diagnostics(buf, out, row_weights=row_weights,
+                                     axis_names=axis_names)
     if row_weights is None:
         return jnp.median(buf.astype(jnp.float32), axis=0)
     # Weighted median per coordinate: the smallest value whose cumulative
@@ -100,10 +124,15 @@ def median_flat(buf: jnp.ndarray, *, row_weights=None) -> jnp.ndarray:
 
 
 def trimmed_mean_flat(buf: jnp.ndarray, *, trim: int,
-                      row_weights=None) -> jnp.ndarray:
+                      row_weights=None, axis_names=(),
+                      diagnostics: bool = False) -> jnp.ndarray:
     w = buf.shape[0]
     if 2 * trim >= w:
         raise ValueError(f"trim={trim} too large for W={w}")
+    if diagnostics:
+        out = trimmed_mean_flat(buf, trim=trim, row_weights=row_weights)
+        return out, flat_diagnostics(buf, out, row_weights=row_weights,
+                                     axis_names=axis_names)
     if row_weights is None:
         s = jnp.sort(buf.astype(jnp.float32), axis=0)
         return jnp.mean(s[trim : w - trim], axis=0)
@@ -125,7 +154,17 @@ def trimmed_mean_flat(buf: jnp.ndarray, *, trim: int,
 def geomed_flat(buf: jnp.ndarray, *, max_iters: int = 64, tol: float = 1e-6,
                 axis_names: Sequence[str] = (),
                 sync_axes: Sequence[str] = (),
-                row_weights=None) -> jnp.ndarray:
+                row_weights=None, diagnostics: bool = False) -> jnp.ndarray:
+    if diagnostics:
+        out, info = weiszfeld_flat(buf, max_iters=max_iters, tol=tol,
+                                   axis_names=axis_names, sync_axes=sync_axes,
+                                   row_weights=row_weights, return_info=True)
+        # The generic inverse-distance weight evaluated at the returned
+        # fixed point IS the implicit Weiszfeld weight of each message.
+        return out, flat_diagnostics(buf, out, row_weights=row_weights,
+                                     axis_names=axis_names,
+                                     residual=info.residual, iters=info.iters,
+                                     converged=info.converged)
     return weiszfeld_flat(buf, max_iters=max_iters, tol=tol,
                           axis_names=axis_names, sync_axes=sync_axes,
                           row_weights=row_weights)
@@ -150,7 +189,29 @@ def geomed_groups_flat(buf: jnp.ndarray, *, num_groups: int,
                        max_iters: int = 64, tol: float = 1e-6,
                        axis_names: Sequence[str] = (),
                        sync_axes: Sequence[str] = (),
-                       row_weights=None) -> jnp.ndarray:
+                       row_weights=None, diagnostics: bool = False
+                       ) -> jnp.ndarray:
+    if diagnostics:
+        # The inner solve runs on the GROUP means; per-worker dist/weight are
+        # still reported against the final aggregate (a Byzantine row drags
+        # its whole group, and the drag shows up as distance).
+        grouped = group_means(buf.astype(jnp.float32), num_groups)
+        if row_weights is None:
+            out, info = weiszfeld_flat(
+                grouped, max_iters=max_iters, tol=tol, axis_names=axis_names,
+                sync_axes=sync_axes, return_info=True)
+        else:
+            out = geomed_groups_flat(
+                buf, num_groups=num_groups, max_iters=max_iters, tol=tol,
+                axis_names=axis_names, sync_axes=sync_axes,
+                row_weights=row_weights)
+            info = None
+        diag = flat_diagnostics(
+            buf, out, row_weights=row_weights, axis_names=axis_names,
+            residual=None if info is None else info.residual,
+            iters=None if info is None else info.iters,
+            converged=None if info is None else info.converged)
+        return out, diag
     if row_weights is None:
         grouped = group_means(buf.astype(jnp.float32), num_groups)  # (G, D)
         return weiszfeld_flat(grouped, max_iters=max_iters, tol=tol,
@@ -198,12 +259,21 @@ def krum_scores(d2: jnp.ndarray, num_byzantine: int) -> jnp.ndarray:
 
 def krum_flat(buf: jnp.ndarray, *, num_byzantine: int,
               axis_names: Sequence[str] = (),
-              row_weights=None) -> jnp.ndarray:
+              row_weights=None, diagnostics: bool = False) -> jnp.ndarray:
     """Krum [14] on the packed buffer: score = sum of squared distances to
     the W-B-2 nearest other messages; output the winning row."""
     if row_weights is None:
         scores = krum_scores(flat_sq_dists(buf, axis_names), num_byzantine)
-        return buf.astype(jnp.float32)[jnp.argmin(scores)]
+        best = jnp.argmin(scores)
+        out = buf.astype(jnp.float32)[best]
+        if diagnostics:
+            # Krum's implicit weight is winner-take-all: a one-hot of the
+            # selected row.  Scores carry the full suspicion ranking.
+            return out, flat_diagnostics(
+                buf, out, axis_names=axis_names,
+                weight=jax.nn.one_hot(best, buf.shape[0], dtype=jnp.float32),
+                score=scores, selected=best)
+        return out
     # Weighted Krum: dropped rows (weight 0) can be neither neighbors nor
     # candidates -- their distance columns and scores go to a +inf stand-in
     # (never slice+concat, per the old-XLA hazard) -- the neighbor count
@@ -224,13 +294,21 @@ def krum_flat(buf: jnp.ndarray, *, num_byzantine: int,
     keep = (jnp.arange(w)[None, :] < n_near) & (ds < big)
     scores = jnp.sum(jnp.where(keep, ds, 0.0), axis=1)
     scores = jnp.where(alive, scores / jnp.maximum(wts, _WEIGHT_FLOOR), big)
-    return buf.astype(jnp.float32)[jnp.argmin(scores)]
+    best = jnp.argmin(scores)
+    out = buf.astype(jnp.float32)[best]
+    if diagnostics:
+        return out, flat_diagnostics(
+            buf, out, row_weights=row_weights, axis_names=axis_names,
+            weight=jax.nn.one_hot(best, w, dtype=jnp.float32),
+            score=scores, selected=best)
+    return out
 
 
 def centered_clip_flat(buf: jnp.ndarray, *, radius: float = 1.0,
                        iters: int = 3,
                        axis_names: Sequence[str] = (),
-                       row_weights=None) -> jnp.ndarray:
+                       row_weights=None, diagnostics: bool = False
+                       ) -> jnp.ndarray:
     """Centered clipping (Karimireddy et al. 2021) on the packed buffer:
     v <- v + mean_w clip(m_w - v, radius) iterated from the coordinate
     median; one fused residual-norm reduction per iteration (psum'd over
@@ -254,6 +332,20 @@ def centered_clip_flat(buf: jnp.ndarray, *, radius: float = 1.0,
             v = v + jnp.mean(diffs * scale[:, None], axis=0)
         else:
             v = v + jnp.sum(diffs * (scale * wnorm)[:, None], axis=0)
+    if diagnostics:
+        # Implicit weight: each row's share of the last clipped-mean update
+        # (its base weight times its final clip scale).  clip_frac counts
+        # the live rows whose residual exceeded the radius, i.e. whose
+        # influence was actually truncated.
+        base = (jnp.full((buf.shape[0],), 1.0 / buf.shape[0], jnp.float32)
+                if row_weights is None else wnorm)
+        live = (jnp.ones((buf.shape[0],), jnp.float32) if row_weights is None
+                else (row_weights.astype(jnp.float32) > 0).astype(jnp.float32))
+        clip_frac = (jnp.sum(live * (scale < 1.0))
+                     / jnp.maximum(jnp.sum(live), 1.0))
+        return v, flat_diagnostics(buf, v, row_weights=row_weights,
+                                   axis_names=axis_names, weight=base * scale,
+                                   clip_frac=clip_frac)
     return v
 
 
@@ -261,7 +353,8 @@ def geomed_blockwise_flat(buf: jnp.ndarray, *, spec: packing.PackSpec,
                           max_iters: int = 64, tol: float = 1e-6,
                           axis_names: Sequence[str] = (),
                           sync_axes: Sequence[str] = (),
-                          row_weights=None) -> jnp.ndarray:
+                          row_weights=None, diagnostics: bool = False
+                          ) -> jnp.ndarray:
     """Per-leaf geometric median on the packed buffer: each leaf's
     coordinate slice runs its OWN Weiszfeld loop (independent iteration
     counts, matching the per-leaf semantics -- an attacker can spend its
@@ -269,6 +362,24 @@ def geomed_blockwise_flat(buf: jnp.ndarray, *, spec: packing.PackSpec,
     ``spec.boundaries``, so this is trace-time slicing of the one buffer,
     not a re-materialized pytree; padding coordinates aggregate to zero."""
     b32 = buf.astype(jnp.float32)
+    if diagnostics:
+        parts, infos = [], []
+        for a, b in spec.boundaries:
+            part, info = weiszfeld_flat(
+                b32[:, a:b], max_iters=max_iters, tol=tol,
+                axis_names=axis_names, sync_axes=sync_axes,
+                row_weights=row_weights, return_info=True)
+            parts.append(part)
+            infos.append(info)
+        out = packing.assemble(parts, pad=spec.pad)
+        # Blocks iterate independently: summarize with the worst block
+        # (max residual/iters, all-converged); dist/weight stay full-vector
+        # so the per-worker suspicion trace is comparable across rules.
+        return out, flat_diagnostics(
+            buf, out, row_weights=row_weights, axis_names=axis_names,
+            residual=jnp.max(jnp.stack([i.residual for i in infos])),
+            iters=jnp.max(jnp.stack([i.iters for i in infos])),
+            converged=jnp.all(jnp.stack([i.converged for i in infos])))
     parts = [
         weiszfeld_flat(b32[:, a:b], max_iters=max_iters, tol=tol,
                        axis_names=axis_names, sync_axes=sync_axes,
@@ -282,27 +393,38 @@ def geomed_blockwise_flat(buf: jnp.ndarray, *, spec: packing.PackSpec,
 # _REGISTRY below (enforced at import time), so a new rule must land in
 # both or the module fails loudly.
 _FLAT_REGISTRY: dict[str, Callable[[packing.PackSpec, dict], FlatAggregator]] = {
-    "mean": lambda spec, o: mean_flat,
-    "median": lambda spec, o: median_flat,
+    "mean": lambda spec, o: functools.partial(
+        mean_flat, axis_names=o.get("axis_names", ()),
+        diagnostics=o.get("diagnostics", False)),
+    "median": lambda spec, o: functools.partial(
+        median_flat, axis_names=o.get("axis_names", ()),
+        diagnostics=o.get("diagnostics", False)),
     "trimmed_mean": lambda spec, o: functools.partial(
-        trimmed_mean_flat, trim=o.get("trim", 1)),
+        trimmed_mean_flat, trim=o.get("trim", 1),
+        axis_names=o.get("axis_names", ()),
+        diagnostics=o.get("diagnostics", False)),
     "geomed": lambda spec, o: functools.partial(
         geomed_flat, max_iters=o.get("max_iters", 64), tol=o.get("tol", 1e-6),
-        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ())),
+        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ()),
+        diagnostics=o.get("diagnostics", False)),
     "geomed_groups": lambda spec, o: functools.partial(
         geomed_groups_flat, num_groups=o["num_groups"],
         max_iters=o.get("max_iters", 64), tol=o.get("tol", 1e-6),
-        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ())),
+        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ()),
+        diagnostics=o.get("diagnostics", False)),
     "krum": lambda spec, o: functools.partial(
         krum_flat, num_byzantine=o.get("num_byzantine", 0),
-        axis_names=o.get("axis_names", ())),
+        axis_names=o.get("axis_names", ()),
+        diagnostics=o.get("diagnostics", False)),
     "centered_clip": lambda spec, o: functools.partial(
         centered_clip_flat, radius=o.get("clip_radius", 1.0),
-        axis_names=o.get("axis_names", ())),
+        axis_names=o.get("axis_names", ()),
+        diagnostics=o.get("diagnostics", False)),
     "geomed_blockwise": lambda spec, o: functools.partial(
         geomed_blockwise_flat, spec=spec,
         max_iters=o.get("max_iters", 64), tol=o.get("tol", 1e-6),
-        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ())),
+        axis_names=o.get("axis_names", ()), sync_axes=o.get("sync_axes", ()),
+        diagnostics=o.get("diagnostics", False)),
 }
 
 
@@ -311,7 +433,9 @@ def get_flat_aggregator(name: str, spec: packing.PackSpec,
     """Build a flat aggregator ``fn(buf (W, D)) -> (D,) f32`` by name.
 
     Options mirror :func:`get_aggregator`, plus ``axis_names``/``sync_axes``
-    for shard_map execution (rows as coordinate shards)."""
+    for shard_map execution (rows as coordinate shards) and
+    ``diagnostics=True`` to get ``(aggregate, AggDiagnostics)`` back
+    (DESIGN.md Sec. 11; False keeps the engine byte-identical)."""
     try:
         build = _FLAT_REGISTRY[name]
     except KeyError:

@@ -38,7 +38,7 @@ All variants are jit-compatible (``lax.while_loop``).
 from __future__ import annotations
 
 import functools
-from typing import Any, Sequence
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +50,16 @@ Pytree = Any
 # Numerical floor for distances; plays the role of Weiszfeld smoothing so the
 # iteration is well defined when y coincides with one of the points.
 _DIST_FLOOR = 1e-8
+
+
+class WeiszfeldInfo(NamedTuple):
+    """Convergence facts of one Weiszfeld solve (telemetry, DESIGN.md
+    Sec. 11).  The while_loop already carries all three -- ``return_info``
+    merely stops discarding them, so the default return path is unchanged."""
+
+    residual: jnp.ndarray   # () f32 final iterate move (inf if 0 iterations)
+    iters: jnp.ndarray      # () int32 iterations run
+    converged: jnp.ndarray  # () bool residual <= tol
 
 
 def _weiszfeld_body(points: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
@@ -135,6 +145,7 @@ def weiszfeld_pytree(
     axis_names: Sequence[str] = (),
     sync_axes: Sequence[str] = (),
     row_weights: jnp.ndarray | None = None,
+    return_info: bool = False,
 ) -> Pytree:
     """Geometric median of W pytree messages.
 
@@ -193,8 +204,13 @@ def weiszfeld_pytree(
         return y_new, jnp.sqrt(move), it + 1
 
     state0 = (y0, jnp.asarray(jnp.inf, jnp.float32), 0)
-    y, _, _ = jax.lax.while_loop(cond, body, state0)
-    return jax.tree_util.tree_map(lambda yl, z: yl.astype(z.dtype), y, stacked)
+    y, delta, it = jax.lax.while_loop(cond, body, state0)
+    out = jax.tree_util.tree_map(lambda yl, z: yl.astype(z.dtype), y, stacked)
+    if return_info:
+        return out, WeiszfeldInfo(residual=delta,
+                                  iters=jnp.asarray(it, jnp.int32),
+                                  converged=delta <= tol)
+    return out
 
 
 def weiszfeld_flat(
@@ -205,6 +221,7 @@ def weiszfeld_flat(
     axis_names: Sequence[str] = (),
     sync_axes: Sequence[str] = (),
     row_weights: jnp.ndarray | None = None,
+    return_info: bool = False,
 ) -> jnp.ndarray:
     """Weiszfeld on one packed ``(W, D)`` message matrix -- the flat engine
     behind the pytree shims (DESIGN.md Sec. 8).
@@ -220,7 +237,8 @@ def weiszfeld_flat(
         raise ValueError(f"weiszfeld_flat expects (W, D), got {buf.shape}")
     return weiszfeld_pytree(
         buf.astype(jnp.float32), max_iters=max_iters, tol=tol,
-        axis_names=axis_names, sync_axes=sync_axes, row_weights=row_weights)
+        axis_names=axis_names, sync_axes=sync_axes, row_weights=row_weights,
+        return_info=return_info)
 
 
 def weiszfeld_sharded(
@@ -251,6 +269,7 @@ def weiszfeld_blockwise_sharded(
     max_iters: int = 64,
     tol: float = 1e-6,
     row_weights: jnp.ndarray | None = None,
+    return_info: bool = False,
 ) -> jnp.ndarray:
     """Per-block (segmented) distributed Weiszfeld inside ``shard_map``.
 
@@ -303,5 +322,9 @@ def weiszfeld_blockwise_sharded(
         return y_new, jnp.sqrt(jnp.max(move)), it + 1
 
     state0 = (y0, jnp.asarray(jnp.inf, jnp.float32), 0)
-    y, _, _ = jax.lax.while_loop(cond, body, state0)
+    y, delta, it = jax.lax.while_loop(cond, body, state0)
+    if return_info:
+        return y, WeiszfeldInfo(residual=delta,
+                                iters=jnp.asarray(it, jnp.int32),
+                                converged=delta <= tol)
     return y

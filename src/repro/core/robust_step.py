@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro import telemetry
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
 from repro.core import packing
@@ -120,6 +121,15 @@ class RobustConfig:
     staleness_decay: float = 1.0
     # Rounds-stale reported by the ``straggler`` attack.
     straggler_k: int = 4
+    # In-graph aggregation diagnostics (DESIGN.md Sec. 11): True makes the
+    # robust rule also emit its AggDiagnostics struct (per-worker distance/
+    # implicit weight, krum scores+selection, clip fraction, Weiszfeld
+    # residual), flattened into the step metrics as ``diag_*`` entries.
+    # False (default) keeps every engine byte-identical to the
+    # pre-telemetry path.  Like staleness weights, diagnostics are a
+    # flat-engine feature: they route per-leaf aggregation through one
+    # pack -> flat rule -> unpack detour.
+    diagnostics: bool = False
 
     def reducer(self) -> vr_lib.VarianceReducer:
         """The :class:`repro.core.variance.VarianceReducer` named by
@@ -162,16 +172,21 @@ class RobustConfig:
 
     def flat_aggregator_fn(self, spec: packing.PackSpec,
                            axis_names: Sequence[str] = (),
-                           sync_axes: Sequence[str] = ()
+                           sync_axes: Sequence[str] = (),
+                           diagnostics: Optional[bool] = None,
                            ) -> agg_lib.FlatAggregator:
         """Flat aggregator ``(W, D) -> (D,) f32`` for this config (the
-        packed hot path; ``axis_names``/``sync_axes`` for shard_map)."""
+        packed hot path; ``axis_names``/``sync_axes`` for shard_map).
+        ``diagnostics`` defaults to ``self.diagnostics``; True makes the
+        returned fn yield ``(aggregate, AggDiagnostics)``."""
         return agg_lib.get_flat_aggregator(
             self.aggregator, spec,
             max_iters=self.weiszfeld_iters, tol=self.weiszfeld_tol,
             num_groups=self.num_groups, trim=self.trim,
             num_byzantine=self.num_byzantine, clip_radius=self.clip_radius,
-            axis_names=tuple(axis_names), sync_axes=tuple(sync_axes))
+            axis_names=tuple(axis_names), sync_axes=tuple(sync_axes),
+            diagnostics=(self.diagnostics if diagnostics is None
+                         else diagnostics))
 
 
 class FederatedState(NamedTuple):
@@ -446,28 +461,29 @@ def make_federated_step(
         vr_state, staleness = finish_round(state, cohort, vr_rows)
 
         # Honest-message variance (reported in the paper's figures, bottom rows).
-        hm = agg_lib.mean_agg_perleaf(honest)
-        var = sum(
-            jnp.sum((z.astype(jnp.float32) - m.astype(jnp.float32)[None]) ** 2)
-            for z, m in zip(jax.tree_util.tree_leaves(honest), jax.tree_util.tree_leaves(hm))
-        ) / wh
+        var = telemetry.honest_variance(honest, wh)
 
         msgs = attack_lib.apply_attack(attack_cfg, honest, k_attack)
         rw, slot_stal = row_weights_for(honest_stal)
-        if rw is None:
+        metrics = {"honest_variance": var, **vr_metrics,
+                   **telemetry.staleness_metrics(slot_stal)}
+        if rw is None and not cfg.diagnostics:
             agg = cfg.aggregator_fn(perleaf=True)(msgs)
         else:
             spec = packing.pack_spec(msgs)
-            agg_vec = cfg.flat_aggregator_fn(spec)(spec.pack(msgs),
-                                                   row_weights=rw)
+            flat_fn = cfg.flat_aggregator_fn(spec)
+            out = (flat_fn(spec.pack(msgs)) if rw is None
+                   else flat_fn(spec.pack(msgs), row_weights=rw))
+            if cfg.diagnostics:
+                agg_vec, diag = out
+                metrics.update(telemetry.diagnostics_metrics(diag))
+            else:
+                agg_vec = out
             agg = spec.unpack(agg_vec, batch_ndim=0)
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
         params = optim_lib.apply_updates(params, updates)
         new_state = FederatedState(params, opt_state, vr_state,
                                    state.step + 1, key, staleness)
-        metrics = {"honest_variance": var, **vr_metrics}
-        if slot_stal is not None:
-            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
         return new_state, metrics
 
     def step_fn_packed(state: FederatedState):
@@ -487,24 +503,25 @@ def make_federated_step(
                                               k_idx, data=data, spec=spec)
         vr_state, staleness = finish_round(state, cohort, vr_rows)
 
-        h32 = honest.astype(jnp.float32)
-        var = jnp.sum((h32 - jnp.mean(h32, axis=0)[None]) ** 2) / wh
+        var = telemetry.honest_variance(honest, wh)
 
         msgs = attack_lib.apply_attack(attack_cfg, honest, k_attack,
                                        spec=spec)             # (W, D)
         rw, slot_stal = row_weights_for(honest_stal)
-        if rw is None:
-            agg_vec = cfg.flat_aggregator_fn(spec)(msgs)      # (D,) f32
+        metrics = {"honest_variance": var, **vr_metrics,
+                   **telemetry.staleness_metrics(slot_stal)}
+        flat_fn = cfg.flat_aggregator_fn(spec)
+        out = flat_fn(msgs) if rw is None else flat_fn(msgs, row_weights=rw)
+        if cfg.diagnostics:
+            agg_vec, diag = out                               # (D,) f32
+            metrics.update(telemetry.diagnostics_metrics(diag))
         else:
-            agg_vec = cfg.flat_aggregator_fn(spec)(msgs, row_weights=rw)
+            agg_vec = out                                     # (D,) f32
         agg = spec.unpack(agg_vec, batch_ndim=0)
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
         params = optim_lib.apply_updates(params, updates)
         new_state = FederatedState(params, opt_state, vr_state,
                                    state.step + 1, key, staleness)
-        metrics = {"honest_variance": var, **vr_metrics}
-        if slot_stal is not None:
-            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
         return new_state, metrics
 
     return init_fn, (step_fn_packed if cfg.packed else step_fn_perleaf)
@@ -551,6 +568,7 @@ def distributed_aggregate(
     worker_axes: tuple[str, ...] = ("data",),
     model_axes: tuple[str, ...] = ("model",),
     row_weights: Optional[jnp.ndarray] = None,
+    diagnostics: Optional[bool] = None,
 ) -> Pytree:
     """Paper-faithful ``gather`` master: all_gather every worker's (model-
     sharded) gradient over the worker axes, then run the robust rule
@@ -566,22 +584,36 @@ def distributed_aggregate(
     ``row_weights``: optional (W,) staleness weights, REPLICATED on every
     device (a ``P()`` shard_map input), consumed by the flat engines --
     packed path only (the per-leaf baseline predates the weighted rules
-    and is kept byte-for-byte)."""
+    and is kept byte-for-byte).
+
+    ``diagnostics`` (default ``cfg.diagnostics``): packed path only; when
+    on, returns ``(tree, AggDiagnostics)`` with the struct replicated on
+    every device (the per-row distance psums over ``model_axes`` make it
+    so)."""
+    diag_on = cfg.diagnostics if diagnostics is None else diagnostics
     if cfg.packed:
         spec = cfg.message_spec(grads, batch_ndim=0)
         buf = spec.pack(grads, batch_ndim=0)                  # (D_shard,)
         stacked = compat.all_gather(buf, worker_axes, axis=0, tiled=False)
         flat_fn = cfg.flat_aggregator_fn(
-            spec, axis_names=model_axes, sync_axes=worker_axes)
+            spec, axis_names=model_axes, sync_axes=worker_axes,
+            diagnostics=diag_on)
         if row_weights is None:
-            agg_vec = flat_fn(stacked)
+            out = flat_fn(stacked)
         else:
-            agg_vec = flat_fn(stacked, row_weights=row_weights)
-        return spec.unpack(agg_vec, batch_ndim=0)
+            out = flat_fn(stacked, row_weights=row_weights)
+        if diag_on:
+            agg_vec, diag = out
+            return spec.unpack(agg_vec, batch_ndim=0), diag
+        return spec.unpack(out, batch_ndim=0)
     if row_weights is not None:
         raise ValueError(
             "staleness row_weights need the packed gather path "
             "(cfg.packed=True); the per-leaf baseline is unweighted")
+    if diag_on:
+        raise ValueError(
+            "aggregation diagnostics need the packed gather path "
+            "(cfg.packed=True); the per-leaf baseline has no flat buffer")
     # Multi-axis all_gather already collapses the worker axes into ONE
     # leading (W_total,) axis in row-major worker order (compat.all_gather),
     # so single- and multi-pod meshes land on the same stacked layout.
@@ -661,6 +693,7 @@ def sharded_aggregate(
     model_axes: tuple[str, ...] = ("model",),
     num_workers: int,
     row_weights: Optional[jnp.ndarray] = None,
+    diagnostics: Optional[bool] = None,
 ) -> Pytree:
     """Beyond-paper ``sharded`` master (DESIGN.md Sec. 2, comm=sharded).
 
@@ -687,7 +720,13 @@ def sharded_aggregate(
     device; the same weighted forms run on the coordinate slices unchanged
     because every flat engine treats the weights per ROW (DESIGN.md
     Sec. 10).  ``None`` keeps every branch bit-for-bit.
+
+    ``diagnostics`` (default ``cfg.diagnostics``): when on, returns
+    ``(tree, AggDiagnostics)``; the struct's per-row distance/Gram psums
+    run over worker+model axes, so it carries full-vector geometry and is
+    replicated on every device.  The off path is byte-identical to before.
     """
+    diag_on = cfg.diagnostics if diagnostics is None else diagnostics
     w = num_workers
     flat, unflatten, leaf_sizes = _flatten_concat(grads)
     p = flat.shape[0]
@@ -702,6 +741,53 @@ def sharded_aggregate(
     rw = row_weights
 
     name = cfg.aggregator
+    if diag_on:
+        # Diagnostics route every rule through the registry flat engines
+        # (same per-row math as the inline branches below, plus the struct):
+        # the engines psum their per-row partials over ``comm_axes``, so the
+        # struct reflects full-vector geometry and is replicated.
+        common = dict(axis_names=comm_axes, row_weights=rw, diagnostics=True)
+        if name == "mean":
+            slice_agg, diag = agg_lib.mean_flat(z_local, **common)
+        elif name == "median":
+            slice_agg, diag = agg_lib.median_flat(z_local, **common)
+        elif name == "trimmed_mean":
+            slice_agg, diag = agg_lib.trimmed_mean_flat(
+                z_local, trim=cfg.trim, **common)
+        elif name == "geomed":
+            slice_agg, diag = agg_lib.geomed_flat(
+                z_local, max_iters=cfg.weiszfeld_iters,
+                tol=cfg.weiszfeld_tol, **common)
+        elif name == "geomed_groups":
+            slice_agg, diag = agg_lib.geomed_groups_flat(
+                z_local, num_groups=cfg.num_groups,
+                max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+                **common)
+        elif name == "centered_clip":
+            slice_agg, diag = agg_lib.centered_clip_flat(
+                z_local, radius=cfg.clip_radius, **common)
+        elif name == "krum":
+            slice_agg, diag = agg_lib.krum_flat(
+                z_local, num_byzantine=cfg.num_byzantine, **common)
+        elif name == "geomed_blockwise":
+            slice_agg, info = weiszfeld_blockwise_sharded(
+                z_local,
+                _local_leaf_ids(leaf_sizes, pad, w, worker_axes),
+                len(leaf_sizes) + 1,
+                axis_names=comm_axes,
+                max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+                row_weights=rw, return_info=True)
+            diag = telemetry.flat_diagnostics(
+                z_local, slice_agg, row_weights=rw, axis_names=comm_axes,
+                residual=info.residual, iters=info.iters,
+                converged=info.converged)
+        else:
+            raise ValueError(
+                f"unknown aggregator {name!r} for comm='sharded'; "
+                f"supported: {SHARDED_AGGREGATORS}")
+        full = compat.all_gather(slice_agg, worker_axes, axis=0,
+                                 tiled=False).reshape(-1)
+        return unflatten(full[:p]), diag
     if name == "mean":
         slice_agg = (jnp.mean(z_local, axis=0) if rw is None
                      else agg_lib.mean_flat(z_local, row_weights=rw))

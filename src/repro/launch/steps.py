@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro import telemetry
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.core import attacks as attack_lib
 from repro.core import participation as participation_lib
@@ -187,7 +188,14 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
         else:
             msgs, vr_state, vr_metrics = grads, state.get("vr"), {}
 
-        if robust.comm == "gather" and (weighted or (
+        # Honest-message variance BEFORE attack injection (mask-replace hits
+        # the FIRST B slots, so the honest workers are the slots >= B).
+        b = robust.num_byzantine if robust.attack != "none" else 0
+        hmask = (jnp.arange(w) >= b).astype(jnp.float32)
+        var = telemetry.consensus_dist(msgs, hmask, max(w - b, 1))
+
+        diag = None
+        if robust.comm == "gather" and (weighted or robust.diagnostics or (
                 robust.packed and robust.aggregator in PACKED_GATHER_RULES)):
             # Flat-packed hot path (DESIGN.md Sec. 8): one (W, D) buffer
             # carries the messages through attack + aggregation.  The
@@ -196,17 +204,21 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
             # norms), so packing collapses their per-leaf launches for
             # free.  The VR state stays per-leaf so its tables/snapshots
             # keep their model-axis sharding (DESIGN.md Sec. 4).  When
-            # staleness weights are active EVERY gather rule routes here:
-            # weighted aggregation is a flat-engine feature (the per-leaf
-            # baseline predates it).
+            # staleness weights OR diagnostics are active EVERY gather rule
+            # routes here: both are flat-engine features (the per-leaf
+            # baseline predates them).
             spec = robust.message_spec(msgs, batch_ndim=1)
             buf = jax.lax.with_sharding_constraint(
                 spec.pack(msgs), jax.sharding.NamedSharding(mesh, P(waxes)))
             buf = attack_lib.apply_attack_stacked(
                 attack_cfg, buf, jax.random.fold_in(key, 2), spec=spec)
             flat_fn = robust.flat_aggregator_fn(spec)
-            agg_vec = flat_fn(buf) if rw is None else flat_fn(
+            out = flat_fn(buf) if rw is None else flat_fn(
                 buf, row_weights=rw)
+            if robust.diagnostics:
+                agg_vec, diag = out
+            else:
+                agg_vec = out
             agg = spec.unpack(agg_vec, batch_ndim=0)
         else:
             # Everything else keeps per-leaf messages: comm="sharded" is
@@ -220,8 +232,10 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
             msgs = attack_lib.apply_attack_stacked(
                 attack_cfg, msgs, jax.random.fold_in(key, 2))
             if robust.comm == "sharded":
-                agg = _sharded_agg(msgs, robust, mesh, pspecs,
-                                   row_weights=rw)
+                out = _sharded_agg(msgs, robust, mesh, pspecs,
+                                   row_weights=rw,
+                                   diagnostics=robust.diagnostics)
+                agg, diag = out if robust.diagnostics else (out, None)
             else:
                 agg = _gather_agg(msgs, robust)
 
@@ -236,13 +250,15 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
                 state["staleness"], cohort)
         metrics = {
             "loss": jnp.mean(losses),
+            "honest_variance": var,
             "agg_norm": jnp.sqrt(sum(
                 jnp.sum(jnp.square(g.astype(jnp.float32)))
                 for g in jax.tree_util.tree_leaves(agg))),
             **vr_metrics,
+            **telemetry.staleness_metrics(slot_stal),
         }
-        if slot_stal is not None:
-            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
+        if diag is not None:
+            metrics.update(telemetry.diagnostics_metrics(diag))
         return new_state, metrics
 
     # ---- specs / structs -------------------------------------------------
@@ -389,38 +405,46 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
         else:
             msgs, vr_state, vr_metrics = grads, state.get("vr"), {}
 
-        if rw is None:
-            def agg_fn(local_msgs, t, k):
-                local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
-                out = decentralized_aggregate(
-                    local, robust, sched, comm=robust.comm, worker_axes=wa,
-                    model_axes=("model",), num_workers=w, key=k,
-                    round_index=t)
-                return jax.tree_util.tree_map(lambda a: a[None], out)
+        # With diagnostics the shard_map emits a second output: the
+        # replicated per-sender AggDiagnostics summary (all-P() specs).
+        out_specs = node_specs
+        if robust.diagnostics:
+            out_specs = (node_specs,
+                         telemetry.AggDiagnostics(
+                             *(P() for _ in telemetry.AggDiagnostics._fields)))
 
+        def node_agg(local_msgs, t, k, weights=None):
+            local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
+            out = decentralized_aggregate(
+                local, robust, sched, comm=robust.comm, worker_axes=wa,
+                model_axes=("model",), num_workers=w, key=k,
+                round_index=t, row_weights=weights,
+                diagnostics=robust.diagnostics)
+            if robust.diagnostics:
+                out, d = out
+                return jax.tree_util.tree_map(lambda a: a[None], out), d
+            return jax.tree_util.tree_map(lambda a: a[None], out)
+
+        if rw is None:
             def gossip_agg(wire_msgs):
                 return compat.shard_map(
-                    agg_fn, mesh=mesh, in_specs=(node_specs, P(), P()),
-                    out_specs=node_specs, check_vma=False,
+                    node_agg, mesh=mesh, in_specs=(node_specs, P(), P()),
+                    out_specs=out_specs, check_vma=False,
                 )(wire_msgs, state["step"], jax.random.fold_in(key, 2))
         else:
             # Staleness weighting: the replicated (W,) sender weights ride
             # into the shard_map as a P() input and multiply the mask's
             # sender columns inside decentralized_aggregate.
-            def agg_fn(local_msgs, t, k, weights):
-                local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
-                out = decentralized_aggregate(
-                    local, robust, sched, comm=robust.comm, worker_axes=wa,
-                    model_axes=("model",), num_workers=w, key=k,
-                    round_index=t, row_weights=weights)
-                return jax.tree_util.tree_map(lambda a: a[None], out)
-
             def gossip_agg(wire_msgs):
                 return compat.shard_map(
-                    agg_fn, mesh=mesh, in_specs=(node_specs, P(), P(), P()),
-                    out_specs=node_specs, check_vma=False,
+                    node_agg, mesh=mesh, in_specs=(node_specs, P(), P(), P()),
+                    out_specs=out_specs, check_vma=False,
                 )(wire_msgs, state["step"], jax.random.fold_in(key, 2), rw)
 
+        # Honest-message variance BEFORE the gossip (first B nodes attack).
+        var = telemetry.consensus_dist(msgs, honest, wh)
+
+        diag = None
         if robust.gossip == "params":
             # Local optimizer step with each node's own corrected gradient,
             # then robust PARAMETER gossip: the wire carries half-stepped
@@ -431,12 +455,16 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
                                                   state["step"])
             half = optim_lib.apply_updates(params, updates)
             agg = gossip_agg(half)
+            if robust.diagnostics:
+                agg, diag = agg
             agg_move = jax.tree_util.tree_map(
                 lambda a, p: a.astype(jnp.float32) - p.astype(jnp.float32),
                 agg, params)
             params = agg
         else:
             agg = gossip_agg(msgs)
+            if robust.diagnostics:
+                agg, diag = agg
             agg_move = agg
             updates, opt_state = optimizer.update(agg, state["opt"], params,
                                                   state["step"])
@@ -449,23 +477,19 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
             new_state["staleness"] = participation_lib.tick_staleness(
                 state["staleness"], cohort)
 
-        # Consensus drift of the honest nodes' parameter copies.
-        cons = jnp.zeros((), jnp.float32)
-        for x in jax.tree_util.tree_leaves(params):
-            x32 = x.astype(jnp.float32).reshape(w, -1)
-            hmask = honest.reshape(w, 1)
-            mean = jnp.sum(hmask * x32, axis=0, keepdims=True) / wh
-            cons = cons + jnp.sum(hmask * (x32 - mean) ** 2)
         metrics = {
             "loss": jnp.sum(honest * losses) / wh,
-            "consensus_dist": cons / wh,
+            "honest_variance": var,
+            # Consensus drift of the honest nodes' parameter copies.
+            "consensus_dist": telemetry.consensus_dist(params, honest, wh),
             "agg_norm": jnp.sqrt(sum(
                 jnp.sum(jnp.square(g.astype(jnp.float32)))
                 for g in jax.tree_util.tree_leaves(agg_move)) / w),
             **vr_metrics,
+            **telemetry.staleness_metrics(slot_stal),
         }
-        if slot_stal is not None:
-            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
+        if diag is not None:
+            metrics.update(telemetry.diagnostics_metrics(diag))
         return new_state, metrics
 
     # ---- specs / structs: every leaf gains the leading node axis ---------
@@ -510,7 +534,8 @@ def _gather_agg(msgs: Pytree, robust: RobustConfig) -> Pytree:
 
 def _sharded_agg(msgs: Pytree, robust: RobustConfig, mesh,
                  param_specs: Pytree, *,
-                 row_weights: Optional[jnp.ndarray] = None) -> Pytree:
+                 row_weights: Optional[jnp.ndarray] = None,
+                 diagnostics: bool = False) -> Pytree:
     """Beyond-paper: all_to_all coordinate resharding + slice-local rules
     inside a FULLY-manual shard_map (worker axes and model axis): every leaf
     arrives as its local shard, the flatten/all_to_all stay local, and global
@@ -520,7 +545,12 @@ def _sharded_agg(msgs: Pytree, robust: RobustConfig, mesh,
     moved per device: O(2 * p_shard) instead of the gather master's
     O(W * p_shard).  ``row_weights``: optional (W,) staleness weights,
     passed in REPLICATED (``P()``) so every device's slice rule sees the
-    same per-row mass (DESIGN.md Sec. 10)."""
+    same per-row mass (DESIGN.md Sec. 10).
+
+    With ``diagnostics`` the shard_map also returns the replicated
+    :class:`repro.telemetry.AggDiagnostics` struct (every field rides out
+    as a ``P()`` output -- the in-graph psums already made it identical on
+    all devices)."""
     wa = mesh_lib.worker_axes(mesh)
     w = mesh_lib.num_workers(mesh)
     waxes = wa if len(wa) > 1 else wa[0]
@@ -528,24 +558,30 @@ def _sharded_agg(msgs: Pytree, robust: RobustConfig, mesh,
     in_specs = jax.tree_util.tree_map(
         lambda s: P(waxes, *tuple(s)), param_specs,
         is_leaf=lambda x: isinstance(x, P))
+    out_specs = param_specs
+    if diagnostics:
+        out_specs = (param_specs,
+                     telemetry.AggDiagnostics(
+                         *(P() for _ in telemetry.AggDiagnostics._fields)))
 
     if row_weights is None:
         def agg_fn(local_msgs):
             local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
             return sharded_aggregate(local, robust, worker_axes=wa,
-                                     model_axes=("model",), num_workers=w)
+                                     model_axes=("model",), num_workers=w,
+                                     diagnostics=diagnostics)
 
         return compat.shard_map(agg_fn, mesh=mesh, in_specs=(in_specs,),
-                                out_specs=param_specs, check_vma=False)(msgs)
+                                out_specs=out_specs, check_vma=False)(msgs)
 
     def agg_fn_w(local_msgs, rw):
         local = jax.tree_util.tree_map(lambda z: z[0], local_msgs)
         return sharded_aggregate(local, robust, worker_axes=wa,
                                  model_axes=("model",), num_workers=w,
-                                 row_weights=rw)
+                                 row_weights=rw, diagnostics=diagnostics)
 
     return compat.shard_map(agg_fn_w, mesh=mesh, in_specs=(in_specs, P()),
-                            out_specs=param_specs,
+                            out_specs=out_specs,
                             check_vma=False)(msgs, row_weights)
 
 

@@ -15,6 +15,7 @@ be wrong.)
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -22,11 +23,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro import telemetry
 from repro.checkpoint import CheckpointManager
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.core.robust_step import RobustConfig
 from repro.data.synthetic import token_stream
+from repro.launch import hlo_analysis
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as shard_lib
 from repro.launch import steps as steps_lib
@@ -125,9 +128,25 @@ def main() -> None:
                     help="restore the newest checkpoint in --checkpoint-dir "
                     "(full train state: params + opt + VR state + step) and "
                     "continue from there")
+    ap.add_argument("--diagnostics", action="store_true",
+                    help="compute in-graph aggregation diagnostics "
+                    "(per-worker distance / implicit weight / krum scores, "
+                    "DESIGN.md Sec. 11) inside the compiled step and log "
+                    "them alongside the loss")
+    ap.add_argument("--log-dir", default="",
+                    help="run-telemetry directory (repro.telemetry): writes "
+                    "<dir>/metrics.jsonl + <dir>/meta.json; empty keeps the "
+                    "console-only progress line")
+    ap.add_argument("--log-every", type=int, default=1,
+                    help="keep every N-th step in metrics.jsonl")
+    ap.add_argument("--profile-steps", type=int, default=0,
+                    help="capture a profiler trace of this many post-warmup "
+                    "steps into <log-dir>/profile (needs --log-dir)")
     args = ap.parse_args()
     if args.resume and not args.checkpoint_dir:
         raise SystemExit("--resume needs --checkpoint-dir")
+    if args.profile_steps and not args.log_dir:
+        raise SystemExit("--profile-steps needs --log-dir")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -156,7 +175,8 @@ def main() -> None:
         participation_seed=args.participation_seed,
         max_staleness=args.max_staleness,
         staleness_decay=args.staleness_decay,
-        straggler_k=args.straggler_k)
+        straggler_k=args.straggler_k,
+        diagnostics=args.diagnostics)
     train = TrainConfig(optimizer=args.optimizer, lr=args.lr)
     from repro.core.robust_step import resolve_schedule
     sched = resolve_schedule(robust, w)
@@ -210,20 +230,75 @@ def main() -> None:
         # State donation lives in the step compiler (launch/steps.py):
         # params, opt moments and the VR state are all in arg 0.
         jstep = steps_lib.compile_train_step(step_fn)
+        log_dir = args.log_dir or None
         t0 = time.time()
+
+        def console(step_i, row):
+            # Progress line, fired from RunLogger.flush so the loop itself
+            # never syncs on a metric value per step.
+            extra = (f" consensus={row['consensus_dist']:.5f}"
+                     if decentralized else "")
+            wall = row.get("time_wall_s", time.time() - t0)
+            print(f"step {step_i:4d} loss={row['loss']:.4f} "
+                  f"agg_norm={row['agg_norm']:.4f}{extra} "
+                  f"({wall/(step_i-start+1):.2f}s/step)")
+
+        logger = telemetry.RunLogger(
+            log_dir, log_every=args.log_every,
+            console=console, console_every=max(args.steps // 10, 1))
+        if log_dir is not None:
+            # AOT-lower the step once so meta.json records the compiled
+            # executable's cost analysis + parsed collective traffic.  The
+            # throwaway Compiled never executes, so argument donation in the
+            # hot-loop jit is untouched (second compile is the price).
+            batch0 = make_batch(jax.random.fold_in(key, 1000 + start), cfg,
+                                w, args.per_worker_batch, args.seq)
+            compiled = jstep.lower(state, batch0,
+                                   jax.random.fold_in(key, start)).compile()
+            ca = compat.cost_analysis(compiled)
+            logger.write_meta(
+                config=vars(args), jax_version=jax.__version__,
+                backend=jax.default_backend(), device_count=ndev,
+                mesh_shape=dict(zip(mesh.axis_names,
+                                    (int(s) for s in mesh.devices.shape))),
+                num_workers=w, start_step=start,
+                cost_analysis={k: float(v) for k, v in sorted(ca.items())
+                               if isinstance(v, (int, float))},
+                collective_bytes=hlo_analysis.collective_bytes(
+                    compiled.as_text()))
+            del compiled, batch0
+
+        timer = telemetry.PhaseTimer()
+        prof = None
+        profile_until = 0
         for i in range(start, args.steps):
-            bkey = jax.random.fold_in(key, 1000 + i)
-            batch = make_batch(bkey, cfg, w, args.per_worker_batch, args.seq)
-            state, metrics = jstep(state, batch, jax.random.fold_in(key, i))
-            if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
-                extra = (f" consensus={float(metrics['consensus_dist']):.5f}"
-                         if decentralized else "")
-                print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
-                      f"agg_norm={float(metrics['agg_norm']):.4f}{extra} "
-                      f"({(time.time()-t0)/(i-start+1):.2f}s/step)")
-            if ckpt and args.checkpoint_every and (i + 1) % args.checkpoint_every == 0:
-                ckpt.save_train_state(i + 1, state)
-    print("done")
+            if args.profile_steps and i == start + 1:
+                # Skip the compile step, then trace N steady-state steps.
+                prof = compat.profiler_trace(os.path.join(log_dir, "profile"))
+                prof.__enter__()
+                profile_until = i + args.profile_steps
+            with timer.phase("data"):
+                bkey = jax.random.fold_in(key, 1000 + i)
+                batch = make_batch(bkey, cfg, w, args.per_worker_batch,
+                                   args.seq)
+            with timer.phase("step"):
+                state, metrics = jstep(state, batch,
+                                       jax.random.fold_in(key, i))
+            with timer.phase("host"):
+                host = timer.snapshot()
+                host["time_wall_s"] = round(time.time() - t0, 3)
+                logger.log_step(i, metrics, host=host)
+                if ckpt and args.checkpoint_every and (i + 1) % args.checkpoint_every == 0:
+                    ckpt.save_train_state(i + 1, state)
+            if prof is not None and i + 1 >= profile_until:
+                jax.block_until_ready(jax.tree_util.tree_leaves(state))
+                prof.__exit__(None, None, None)
+                prof = None
+        if prof is not None:
+            jax.block_until_ready(jax.tree_util.tree_leaves(state))
+            prof.__exit__(None, None, None)
+        logger.close()
+    print(f"done ({args.steps - start} steps, {time.time() - t0:.1f}s)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,38 @@
+"""Run telemetry: in-graph aggregation diagnostics + structured run logging.
+
+Three pieces (DESIGN.md Sec. 11):
+
+- :mod:`repro.telemetry.diagnostics` — the fixed-shape ``AggDiagnostics``
+  struct every flat/masked/sharded engine can emit alongside its aggregate
+  (``diagnostics=True``), computed inside the compiled step.
+- :mod:`repro.telemetry.metrics` — the shared scalar-metric helpers
+  (``honest_variance`` / ``consensus_dist`` / ``staleness_metrics``) all six
+  step builders emit through.
+- :mod:`repro.telemetry.runlogger` / :mod:`repro.telemetry.profiling` —
+  the host-side JSONL sink (batched ``device_get``, never a per-step sync)
+  and the per-phase wall-clock timers used by ``launch/train.py``.
+
+Import discipline: these modules are imported BY ``repro.core`` (the
+aggregators build diagnostics structs), so nothing here may import
+``repro.core`` — only jax/numpy and ``repro.compat``.
+"""
+from repro.telemetry.diagnostics import (AggDiagnostics, diagnostics_metrics,
+                                         flat_diagnostics, masked_diagnostics,
+                                         reduce_masked_diagnostics)
+from repro.telemetry.metrics import (consensus_dist, honest_variance,
+                                     staleness_metrics)
+from repro.telemetry.profiling import PhaseTimer
+from repro.telemetry.runlogger import RunLogger
+
+__all__ = [
+    "AggDiagnostics",
+    "PhaseTimer",
+    "RunLogger",
+    "consensus_dist",
+    "diagnostics_metrics",
+    "flat_diagnostics",
+    "honest_variance",
+    "masked_diagnostics",
+    "reduce_masked_diagnostics",
+    "staleness_metrics",
+]

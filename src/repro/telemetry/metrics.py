@@ -1,0 +1,64 @@
+"""Shared scalar-metric helpers for the six step builders (DESIGN.md Sec. 11).
+
+``mean_staleness`` / ``honest_variance`` / ``consensus_dist`` used to be
+re-derived ad hoc in ``core/robust_step.py``, ``topology/
+decentralized_step.py`` and ``launch/steps.py``; every builder now emits
+them through these three functions so the formulas (and their metric names)
+cannot drift between execution paths.
+
+Import discipline: pulled in by ``repro.core`` -- only jax here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_FLOOR = 1e-8
+
+
+def honest_variance(honest, num_honest: int) -> jnp.ndarray:
+    """Mean squared deviation of the honest messages around their mean
+    (the paper's bottom-row variance curves): ``sum_w ||z_w - z_bar||^2 / W_h``.
+
+    ``honest``: the packed ``(W_h, D)`` buffer, or a pytree whose leaves
+    carry a leading ``(W_h,)`` worker axis (the per-leaf paths).  Both forms
+    keep the exact op order of the pre-telemetry inline code, so packed vs
+    per-leaf trajectory pins are unaffected.
+    """
+    if isinstance(honest, jnp.ndarray):
+        h32 = honest.astype(jnp.float32)
+        return jnp.sum((h32 - jnp.mean(h32, axis=0)[None]) ** 2) / num_honest
+    hm = jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0), honest)
+    return sum(
+        jnp.sum((z.astype(jnp.float32) - m.astype(jnp.float32)[None]) ** 2)
+        for z, m in zip(jax.tree_util.tree_leaves(honest),
+                        jax.tree_util.tree_leaves(hm))
+    ) / num_honest
+
+
+def consensus_dist(params, honest_mask: jnp.ndarray,
+                   num_honest: int) -> jnp.ndarray:
+    """Honest-node consensus drift of a decentralized parameter state:
+    mean squared distance of each honest node's model to the honest mean.
+
+    ``params``: pytree with a leading ``(N,)`` node axis on every leaf.
+    ``honest_mask``: ``(N,)`` 0/1 selector of the honest nodes -- mask-
+    select, never a slice of the (possibly mesh-sharded) node axis
+    (the old-XLA hazard, DESIGN.md Sec. 1).
+    """
+    mask = honest_mask.astype(jnp.float32)
+    cons = jnp.float32(0.0)
+    for x in jax.tree_util.tree_leaves(params):
+        x32 = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        m = jnp.sum(mask[:, None] * x32, axis=0) / num_honest
+        cons = cons + jnp.sum(mask[:, None] * (x32 - m[None]) ** 2)
+    return cons / num_honest
+
+
+def staleness_metrics(slot_staleness) -> dict:
+    """``{"mean_staleness": ...}`` from the round's per-slot staleness
+    counters, or ``{}`` under full participation (``None``) -- the one
+    conditional all six builders share."""
+    if slot_staleness is None:
+        return {}
+    return {"mean_staleness": jnp.mean(slot_staleness.astype(jnp.float32))}

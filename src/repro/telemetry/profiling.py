@@ -1,0 +1,37 @@
+"""Per-phase wall-clock timers for the train loop (DESIGN.md Sec. 11).
+
+``PhaseTimer`` accumulates host-side wall time per named phase (``data`` /
+``step`` / ``host`` in ``launch/train.py``) between snapshots.  Note the
+dispatch caveat: jax returns control before device work finishes, so the
+``step`` phase measures dispatch+blocking only when something downstream
+synchronizes -- the hardware truth lives in the ``--profile-steps``
+profiler trace (``repro.compat.profiler_trace``), these timers are the
+cheap always-on complement.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+
+class PhaseTimer:
+    """Accumulate wall-clock seconds per phase; ``snapshot()`` drains."""
+
+    def __init__(self):
+        self._acc: dict[str, float] = {}
+
+    @contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._acc[name] = (self._acc.get(name, 0.0)
+                               + time.perf_counter() - t0)
+
+    def snapshot(self) -> dict[str, float]:
+        """``{"time_<phase>_s": seconds}`` accumulated since the last
+        snapshot, then reset."""
+        out = {f"time_{k}_s": round(v, 6) for k, v in self._acc.items()}
+        self._acc = {}
+        return out

@@ -1,0 +1,118 @@
+"""Buffered JSONL run logging (DESIGN.md Sec. 11).
+
+``RunLogger`` is the host-side sink of the telemetry subsystem: the train
+loop hands it the step's (still-on-device) metrics dict and moves on --
+references are buffered and materialized with ONE batched
+``jax.device_get`` per flush, so the hot loop never blocks on a per-step
+device->host sync (the ``float(metrics[...])`` anti-pattern this replaces).
+
+Layout of a run directory::
+
+    runs/<name>/metrics.jsonl   one JSON object per logged step
+    runs/<name>/meta.json       config + jax/mesh facts + HLO cost analysis
+    runs/<name>/profile/        profiler trace (``--profile-steps``,
+                                ``repro.compat.profiler_trace``)
+
+With ``log_dir=None`` the logger is console-only: the same buffered
+batching drives the progress line, nothing is written to disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+def _jsonable(x):
+    if isinstance(x, (np.ndarray, np.generic)):
+        if x.ndim == 0:
+            return x.item()
+        return np.asarray(x).tolist()
+    return x
+
+
+class RunLogger:
+    """Buffered metrics sink: JSONL file + optional console line.
+
+    ``log_every``: keep every N-th step (1 = all).  ``flush_every``: how
+    many buffered rows trigger a batched ``device_get`` + write.
+    ``console``: optional callback ``(step, row_dict) -> None`` invoked at
+    flush time for the rows where ``console_every`` hits (the train loop's
+    progress printing, moved off the hot path).
+    """
+
+    def __init__(self, log_dir: Optional[str] = None, *, log_every: int = 1,
+                 flush_every: int = 32,
+                 console: Optional[Callable[[int, dict], None]] = None,
+                 console_every: int = 0):
+        self.log_dir = log_dir
+        self.log_every = max(int(log_every), 1)
+        self.flush_every = max(int(flush_every), 1)
+        self.console = console
+        self.console_every = max(int(console_every), 0)
+        self._buf: list[tuple[int, dict, dict]] = []
+        self._file = None
+        if log_dir is not None:
+            os.makedirs(log_dir, exist_ok=True)
+            self._file = open(os.path.join(log_dir, "metrics.jsonl"), "w")
+
+    # -- meta ---------------------------------------------------------------
+
+    def write_meta(self, **fields: Any) -> None:
+        """Write ``meta.json`` (config, jax version, mesh shape, HLO cost
+        analysis...).  No-op in console-only mode."""
+        if self.log_dir is None:
+            return
+        path = os.path.join(self.log_dir, "meta.json")
+        with open(path, "w") as f:
+            json.dump(fields, f, indent=2, sort_keys=True, default=str)
+            f.write("\n")
+
+    # -- metrics ------------------------------------------------------------
+
+    def log_step(self, step: int, metrics: dict, host: Optional[dict] = None
+                 ) -> None:
+        """Buffer one step's metrics.  ``metrics`` values may be live device
+        arrays -- they are NOT materialized here.  ``host`` carries values
+        already on the host (phase timings, wall-clock)."""
+        printing = self.console is not None and self.console_every and (
+            step % self.console_every == 0)
+        if step % self.log_every != 0 and not printing:
+            return
+        self._buf.append((step, dict(metrics), dict(host or {})))
+        if len(self._buf) >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> None:
+        """One batched ``device_get`` over everything buffered, then write
+        JSONL rows / emit console lines."""
+        if not self._buf:
+            return
+        buf, self._buf = self._buf, []
+        fetched = jax.device_get([m for _, m, _ in buf])
+        for (step, _, host), metrics in zip(buf, fetched):
+            row = {"step": step}
+            row.update({k: _jsonable(v) for k, v in metrics.items()})
+            row.update({k: _jsonable(v) for k, v in host.items()})
+            if self._file is not None and step % self.log_every == 0:
+                self._file.write(json.dumps(row) + "\n")
+            if (self.console is not None and self.console_every
+                    and step % self.console_every == 0):
+                self.console(step, row)
+        if self._file is not None:
+            self._file.flush()
+
+    def close(self) -> None:
+        self.flush()
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+
+    def __enter__(self) -> "RunLogger":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

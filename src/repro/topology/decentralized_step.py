@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro import telemetry
 from repro.core import attacks as attack_lib
 from repro.core import packing
 from repro.core.robust_step import (FederatedState, _flatten_concat,
@@ -408,12 +409,10 @@ def make_decentralized_step(
             grads_at=grads_at, full_grads_at=full_grads_at)
 
     def consensus(params):
+        # Consensus drift IS the honest-variance formula applied to the
+        # honest nodes' parameter copies (telemetry helper, Sec. 11).
         xh = jax.tree_util.tree_map(lambda x: x[:wh], params)
-        return sum(
-            jnp.sum((x.astype(jnp.float32)
-                     - jnp.mean(x.astype(jnp.float32), axis=0)[None]) ** 2)
-            for x in jax.tree_util.tree_leaves(xh)
-        ) / wh
+        return telemetry.honest_variance(xh, wh)
 
     def step_fn_perleaf(state):
         """Pre-refactor per-leaf pipeline (cfg.packed=False): the bench
@@ -433,17 +432,21 @@ def make_decentralized_step(
         wmask = mask if sw is None else mask * sw[None, :]
 
         # Honest-message variance (same metric as the master path).
-        hm = jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0), honest)
-        var = sum(
-            jnp.sum((z.astype(jnp.float32) - m.astype(jnp.float32)[None]) ** 2)
-            for z, m in zip(jax.tree_util.tree_leaves(honest),
-                            jax.tree_util.tree_leaves(hm))
-        ) / wh
+        var = telemetry.honest_variance(honest, wh)
 
         # Byzantine node rows carry zeros until the attack replaces them.
         msgs = jax.tree_util.tree_map(
             lambda g: jnp.zeros((n,) + g.shape[1:], g.dtype).at[:wh].set(g),
             honest)
+
+        def gossip_agg(wire):
+            exchange = build_exchange(wire, attack_cfg, wmask, is_byz,
+                                      k_attack)
+            out = masked_aggregate(
+                cfg.aggregator, exchange, wmask, perleaf=True,
+                diagnostics=cfg.diagnostics,
+                **_agg_opts(cfg, mixing * wmask))
+            return out if cfg.diagnostics else (out, None)
 
         if gossip == "params":
             # Local step first, then robust PARAMETER gossip: the messages
@@ -451,17 +454,9 @@ def make_decentralized_step(
             updates, opt_state = optimizer.update(
                 msgs, state.opt_state, state.params, state.step)
             half = optim_lib.apply_updates(state.params, updates)
-            exchange = build_exchange(half, attack_cfg, wmask, is_byz,
-                                      k_attack)
-            params = masked_aggregate(
-                cfg.aggregator, exchange, wmask, perleaf=True,
-                **_agg_opts(cfg, mixing * wmask))
+            params, diag = gossip_agg(half)
         else:
-            exchange = build_exchange(msgs, attack_cfg, wmask, is_byz,
-                                      k_attack)
-            agg = masked_aggregate(
-                cfg.aggregator, exchange, wmask, perleaf=True,
-                **_agg_opts(cfg, mixing * wmask))
+            agg, diag = gossip_agg(msgs)
             updates, opt_state = optimizer.update(
                 agg, state.opt_state, state.params, state.step)
             params = optim_lib.apply_updates(state.params, updates)
@@ -469,9 +464,11 @@ def make_decentralized_step(
         new_state = FederatedState(params, opt_state, vr_state,
                                    state.step + 1, key, staleness)
         metrics = {"honest_variance": var,
-                   "consensus_dist": consensus(params), **vr_metrics}
-        if slot_stal is not None:
-            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
+                   "consensus_dist": consensus(params), **vr_metrics,
+                   **telemetry.staleness_metrics(slot_stal)}
+        if diag is not None:
+            metrics.update(telemetry.diagnostics_metrics(
+                telemetry.reduce_masked_diagnostics(diag, wmask)))
         return new_state, metrics
 
     def step_fn_packed(state):
@@ -493,8 +490,7 @@ def make_decentralized_step(
         sw, slot_stal = sender_weights(honest_stal)
         wmask = mask if sw is None else mask * sw[None, :]
 
-        h32 = honest.astype(jnp.float32)
-        var = jnp.sum((h32 - jnp.mean(h32, axis=0)[None]) ** 2) / wh
+        var = telemetry.honest_variance(honest, wh)
 
         # Byzantine node rows carry zeros until the attack replaces them.
         msgs = jnp.zeros((n,) + honest.shape[1:], honest.dtype).at[:wh].set(honest)
@@ -504,17 +500,19 @@ def make_decentralized_step(
                                       k_attack, spec=spec)     # (N, N, D)
             out = masked_aggregate_flat(
                 cfg.aggregator, exchange, wmask, spec=spec,
+                diagnostics=cfg.diagnostics,
                 **_agg_opts(cfg, mixing * wmask))              # (N, D) f32
-            return spec.unpack(out, batch_ndim=1)
+            out, diag = out if cfg.diagnostics else (out, None)
+            return spec.unpack(out, batch_ndim=1), diag
 
         if gossip == "params":
             updates, opt_state = optimizer.update(
                 spec.unpack(msgs, batch_ndim=1), state.opt_state,
                 state.params, state.step)
             half = optim_lib.apply_updates(state.params, updates)
-            params = flat_gossip(spec.pack(half))
+            params, diag = flat_gossip(spec.pack(half))
         else:
-            agg = flat_gossip(msgs)
+            agg, diag = flat_gossip(msgs)
             updates, opt_state = optimizer.update(
                 agg, state.opt_state, state.params, state.step)
             params = optim_lib.apply_updates(state.params, updates)
@@ -522,9 +520,11 @@ def make_decentralized_step(
         new_state = FederatedState(params, opt_state, vr_state,
                                    state.step + 1, key, staleness)
         metrics = {"honest_variance": var,
-                   "consensus_dist": consensus(params), **vr_metrics}
-        if slot_stal is not None:
-            metrics["mean_staleness"] = jnp.mean(slot_stal.astype(jnp.float32))
+                   "consensus_dist": consensus(params), **vr_metrics,
+                   **telemetry.staleness_metrics(slot_stal)}
+        if diag is not None:
+            metrics.update(telemetry.diagnostics_metrics(
+                telemetry.reduce_masked_diagnostics(diag, wmask)))
         return new_state, metrics
 
     return init_fn, (step_fn_packed if cfg.packed else step_fn_perleaf)
@@ -547,6 +547,7 @@ def decentralized_aggregate(
     round_index: Optional[jax.Array] = None,
     use_topology_kernel: Optional[bool] = None,
     row_weights: Optional[jnp.ndarray] = None,
+    diagnostics: Optional[bool] = None,
 ) -> Pytree:
     """Per-node robust neighborhood aggregation inside ``shard_map``.
 
@@ -572,9 +573,17 @@ def decentralized_aggregate(
     uniformly); default: on for TPU backends only, off elsewhere -- on
     CPU the interpret-mode kernel is slower than the jnp rules (it still
     runs under ``interpret=True`` when the flag is forced, for tests).
+
+    ``diagnostics`` (default ``cfg.diagnostics``): when on, additionally
+    returns the REPLICATED per-sender :class:`repro.telemetry.AggDiagnostics`
+    summary (``reduce_masked_diagnostics`` folds the per-receiver fields
+    with the psums matching each comm mode), so every node reports the
+    same sender-suspicion trace.
     """
     if comm not in ("gather", "sharded"):
         raise ValueError(f"comm must be 'gather' or 'sharded', got {comm!r}")
+    diag_on = (getattr(cfg, "diagnostics", False) if diagnostics is None
+               else diagnostics)
     w = num_workers
     sched = as_schedule(topology)
     validate_schedule(cfg, sched, w)
@@ -611,8 +620,16 @@ def decentralized_aggregate(
                                       k, spec=spec)           # (1, S, D)
             agg = masked_aggregate_flat(
                 cfg.aggregator, exchange, mask_row, spec=spec,
+                diagnostics=diag_on,
                 **_agg_opts(cfg, mix_row * mask_row,
                             axis_names=model_axes, sync_axes=worker_axes))
+            if diag_on:
+                agg, diag = agg
+                # Each device holds ONE receiver row; the cross-receiver
+                # folds psum over the worker axes.
+                return (spec.unpack(agg[0], batch_ndim=0),
+                        telemetry.reduce_masked_diagnostics(
+                            diag, mask_row, axis_names=worker_axes))
             return spec.unpack(agg[0], batch_ndim=0)
         stacked = jax.tree_util.tree_map(
             lambda g: compat.all_gather(g, worker_axes, axis=0, tiled=False),
@@ -620,8 +637,14 @@ def decentralized_aggregate(
         exchange = build_exchange(stacked, attack_cfg, mask_row, is_byz, k)
         agg = masked_aggregate(
             cfg.aggregator, exchange, mask_row, perleaf=True,
+            diagnostics=diag_on,
             **_agg_opts(cfg, mix_row * mask_row,
                         axis_names=model_axes, sync_axes=worker_axes))
+        if diag_on:
+            agg, diag = agg
+            return (jax.tree_util.tree_map(lambda a: a[0], agg),
+                    telemetry.reduce_masked_diagnostics(
+                        diag, mask_row, axis_names=worker_axes))
         return jax.tree_util.tree_map(lambda a: a[0], agg)
 
     # comm == "sharded": reuse the coordinate-resharding plumbing of
@@ -639,12 +662,25 @@ def decentralized_aggregate(
     k = jax.random.fold_in(key, wid) if key is not None else None
     exchange = build_exchange(z_local, attack_cfg, mask_all,
                               is_byz, k)                      # (S, S, chunk)
+    diag = None
     if cfg.aggregator == "geomed_blockwise":
         seg = _local_leaf_ids(leaf_sizes, pad, w, worker_axes)
         agg = masked_weiszfeld_segments(
             exchange, mask_all, seg, len(leaf_sizes) + 1,
             axis_names=comm_axes, max_iters=cfg.weiszfeld_iters,
             tol=cfg.weiszfeld_tol)
+        if diag_on:
+            # Generic distance/weight diagnostics against the segmented
+            # aggregate (the per-block loop exposes no iteration info;
+            # the neutral residual/iters defaults apply).
+            diag = telemetry.masked_diagnostics(
+                exchange, agg, mask_all, axis_names=comm_axes)
+    elif diag_on:
+        out = masked_aggregate_flat(
+            cfg.aggregator, exchange, mask_all, diagnostics=True,
+            **_agg_opts(cfg, mixing_all * mask_all,
+                        axis_names=comm_axes))
+        agg, diag = out
     elif _use_topology_kernel(use_topology_kernel) and (
             cfg.aggregator == "trimmed_mean") and row_weights is None:
         # (The fused kernel reduces by 0/1 mask counts, so fractional
@@ -665,6 +701,12 @@ def decentralized_aggregate(
     agg = agg.astype(jnp.float32)                             # (R, chunk)
     mine = compat.all_to_all(agg, worker_axes, split_axis=0,
                              concat_axis=0, tiled=False).reshape(-1)
+    if diag_on:
+        # The (R, S) fields already carry full-vector geometry (their sq
+        # partials psum'd over comm_axes) and every device holds ALL
+        # receiver rows, so the fold needs no further psum.
+        return unflatten(mine[:p]), telemetry.reduce_masked_diagnostics(
+            diag, mask_all)
     return unflatten(mine[:p])
 
 

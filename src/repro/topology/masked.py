@@ -48,6 +48,8 @@ import numpy as np
 
 from repro import compat
 from repro.core import packing
+from repro.core.geomed import WeiszfeldInfo
+from repro.telemetry.diagnostics import masked_diagnostics
 
 Pytree = Any
 
@@ -156,11 +158,14 @@ def masked_weiszfeld(
     tol: float = 1e-6,
     axis_names: Sequence[str] = (),
     sync_axes: Sequence[str] = (),
+    return_info: bool = False,
 ) -> Pytree:
     """Per-receiver geometric median of the masked neighborhood, all
     receivers iterating in lockstep (one fused (R, S) distance psum per
     iteration when sharded).  Non-neighbors get zero Weiszfeld weight, so
-    the restriction is exact, not approximate."""
+    the restriction is exact, not approximate.  ``return_info=True``
+    additionally returns the loop's :class:`...geomed.WeiszfeldInfo`
+    (already in the while carry; the default return is unchanged)."""
     ex32 = _leaves32(exchange)
     y0 = _weighted_mean(ex32, mask)
 
@@ -182,9 +187,14 @@ def masked_weiszfeld(
             move = part if move is None else move + part
         return y_new, _global_delta(move, axis_names, sync_axes), it + 1
 
-    y, _, _ = jax.lax.while_loop(
+    y, delta, it = jax.lax.while_loop(
         cond, body, (y0, jnp.asarray(jnp.inf, jnp.float32), 0))
-    return _restore_dtypes(y, exchange)
+    out = _restore_dtypes(y, exchange)
+    if return_info:
+        return out, WeiszfeldInfo(residual=delta,
+                                  iters=jnp.asarray(it, jnp.int32),
+                                  converged=delta <= tol)
+    return out
 
 
 def masked_geomed_groups(
@@ -234,6 +244,7 @@ def masked_geomed_blockwise(
 def masked_krum(
     exchange: Pytree, mask: jnp.ndarray, *, num_byzantine: int,
     axis_names: Sequence[str] = (),
+    return_scores: bool = False,
 ) -> Pytree:
     """Per-receiver Krum over the masked neighborhood: candidate scores sum
     the ``m_r - B - 2`` smallest pairwise distances BETWEEN neighborhood
@@ -273,7 +284,10 @@ def masked_krum(
         idx = best.reshape((-1, 1) + (1,) * (z.ndim - 2))
         return jnp.take_along_axis(z, idx, axis=1)[:, 0]
 
-    return jax.tree_util.tree_map(leaf, exchange)
+    out = jax.tree_util.tree_map(leaf, exchange)
+    if return_scores:
+        return out, scores, best
+    return out
 
 
 def masked_centered_clip(
@@ -406,6 +420,7 @@ def _check_masked_name(name: str) -> None:
 
 def masked_aggregate_flat(name: str, buf: jnp.ndarray, mask: jnp.ndarray,
                           *, spec: Optional[packing.PackSpec] = None,
+                          diagnostics: bool = False,
                           **opts) -> jnp.ndarray:
     """Flat masked engine: packed ``(R, S, D)`` exchange buffer -> ``(R,
     D)`` float32 per-receiver aggregates.  One fused sender-axis reduction
@@ -415,6 +430,10 @@ def masked_aggregate_flat(name: str, buf: jnp.ndarray, mask: jnp.ndarray,
     come from slicing the buffer at the spec's static block boundaries,
     each block running its own lockstep masked Weiszfeld like the per-leaf
     dispatch did.  Padding coordinates aggregate to zero.
+
+    ``diagnostics=True`` returns ``(out, AggDiagnostics)`` with (R, S)
+    receiver-by-sender ``dist``/``weight``/``score`` fields (DESIGN.md
+    Sec. 11); False keeps every rule byte-identical.
     """
     _check_masked_name(name)
     b32 = buf.astype(jnp.float32)
@@ -424,21 +443,60 @@ def masked_aggregate_flat(name: str, buf: jnp.ndarray, mask: jnp.ndarray,
                 "masked_aggregate_flat('geomed_blockwise') needs spec= for "
                 "the block boundaries (or use masked_weiszfeld_segments on "
                 "coordinate slices)")
-        parts = [
-            masked_weiszfeld(
+        parts, infos = [], []
+        for a, b in spec.boundaries:
+            part = masked_weiszfeld(
                 b32[:, :, a:b], mask,
                 max_iters=opts.get("max_iters", 64), tol=opts.get("tol", 1e-6),
                 axis_names=opts.get("axis_names", ()),
-                sync_axes=opts.get("sync_axes", ()))
-            for a, b in spec.boundaries
-        ]
-        return packing.assemble(parts, pad=spec.pad,
-                                batch_shape=buf.shape[:1])
-    return _MASKED[name](b32, mask, opts)
+                sync_axes=opts.get("sync_axes", ()),
+                return_info=diagnostics)
+            if diagnostics:
+                part, info = part
+                infos.append(info)
+            parts.append(part)
+        out = packing.assemble(parts, pad=spec.pad, batch_shape=buf.shape[:1])
+        if diagnostics:
+            return out, masked_diagnostics(
+                b32, out, mask, axis_names=opts.get("axis_names", ()),
+                residual=jnp.max(jnp.stack([i.residual for i in infos])),
+                iters=jnp.max(jnp.stack([i.iters for i in infos])),
+                converged=jnp.all(jnp.stack([i.converged for i in infos])))
+        return out
+    if not diagnostics:
+        return _MASKED[name](b32, mask, opts)
+    extras = {}
+    if name == "geomed":
+        out, info = masked_weiszfeld(
+            b32, mask, max_iters=opts.get("max_iters", 64),
+            tol=opts.get("tol", 1e-6), axis_names=opts.get("axis_names", ()),
+            sync_axes=opts.get("sync_axes", ()), return_info=True)
+        extras = dict(residual=info.residual, iters=info.iters,
+                      converged=info.converged)
+    elif name == "krum":
+        out, scores, best = masked_krum(
+            b32, mask, num_byzantine=opts.get("num_byzantine", 0),
+            axis_names=opts.get("axis_names", ()), return_scores=True)
+        # Non-neighbor scores are +inf sentinels; zero them so the struct
+        # (and its JSONL trace) stays finite.
+        extras = dict(score=jnp.where(mask > 0, scores, 0.0), selected=best)
+    else:
+        out = _MASKED[name](b32, mask, opts)
+    diag = masked_diagnostics(b32, out, mask,
+                              axis_names=opts.get("axis_names", ()), **extras)
+    if name == "centered_clip":
+        # A live sender whose residual to the final center exceeds the
+        # radius had its influence truncated this round.
+        live = (mask > 0).astype(jnp.float32)
+        clipped = live * (diag.dist > opts.get("clip_radius", 1.0))
+        diag = diag._replace(clip_frac=jnp.sum(clipped)
+                             / jnp.maximum(jnp.sum(live), 1.0))
+    return out, diag
 
 
 def masked_aggregate(name: str, exchange: Pytree, mask: jnp.ndarray,
-                     *, perleaf: bool = False, **opts) -> Pytree:
+                     *, perleaf: bool = False, diagnostics: bool = False,
+                     **opts) -> Pytree:
     """Dispatch a masked neighborhood aggregation by registry name.
 
     Options mirror :func:`repro.core.aggregators.get_aggregator` plus
@@ -448,13 +506,23 @@ def masked_aggregate(name: str, exchange: Pytree, mask: jnp.ndarray,
     ``perleaf=True`` keeps the pre-refactor leaf-by-leaf dispatch (the
     bench baseline).  An exchange that is already a single array is
     treated as a packed buffer and returned as one.
+
+    ``diagnostics=True`` returns ``(out, AggDiagnostics)``.  Diagnostics
+    are a flat-engine feature, so they route even a ``perleaf=True`` call
+    through the packed engine (mirroring how the step builders handle
+    staleness weights on the per-leaf baseline).
     """
     _check_masked_name(name)
     if isinstance(exchange, jnp.ndarray):
-        return masked_aggregate_flat(name, exchange, mask, **opts)
-    if perleaf:
+        return masked_aggregate_flat(name, exchange, mask,
+                                     diagnostics=diagnostics, **opts)
+    if perleaf and not diagnostics:
         return _MASKED[name](exchange, mask, opts)
     spec = packing.pack_spec(exchange, batch_ndim=2)
     out = masked_aggregate_flat(name, spec.pack(exchange, batch_ndim=2),
-                                mask, spec=spec, **opts)
+                                mask, spec=spec, diagnostics=diagnostics,
+                                **opts)
+    if diagnostics:
+        out, diag = out
+        return spec.unpack(out, batch_ndim=1), diag
     return spec.unpack(out, batch_ndim=1)

@@ -118,7 +118,7 @@ def test_compat_layer_is_the_only_jax_version_gate():
     banned = re.compile(
         r"jax\.shard_map|jax\.set_mesh|jax\.sharding\.AxisType"
         r"|from jax\.sharding import .*AxisType|jax\.experimental\.shard_map"
-        r"|jax\.make_mesh|jax\.lax\.axis_size")
+        r"|jax\.make_mesh|jax\.lax\.axis_size|jax\.profiler")
     offenders = []
     for sub in ("src", "tests", "examples", "benchmarks"):
         for path in glob.glob(os.path.join(repo, sub, "**", "*.py"), recursive=True):

@@ -1,0 +1,244 @@
+"""Telemetry subsystem tests (DESIGN.md Sec. 11).
+
+Three layers:
+
+* engine pins -- ``diagnostics=True`` must not perturb the aggregate
+  (bitwise, eager) for every registry aggregator, flat and masked,
+  weighted and not;
+* semantics -- under seeded sign_flip / gaussian corruption the known-
+  Byzantine rows rank worst by implicit geomed weight and are never the
+  krum selection;
+* host sinks -- RunLogger JSONL/meta layout, PhaseTimer, and the shared
+  metric helpers.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.core import RobustConfig, make_federated_step
+from repro.core import aggregators as agg_lib
+from repro.core import packing
+from repro.data import ijcnn1_like, logreg_loss, partition
+from repro.optim import get_optimizer
+from repro.topology import masked as masked_lib
+
+W, B = 8, 2          # rows per aggregation / Byzantine count
+OPTS = {"trimmed_mean": {"trim": 1}, "krum": {"num_byzantine": B},
+        "geomed_groups": {"num_groups": 4},
+        "centered_clip": {"clip_radius": 1.0}}
+
+
+def _spec():
+    # Two-leaf tree so geomed_blockwise has real block boundaries.
+    tree = {"a": jnp.zeros((W, 20), jnp.float32),
+            "b": jnp.zeros((W, 13), jnp.float32)}
+    return packing.pack_spec(tree, batch_ndim=1)
+
+
+def _buf(spec, key):
+    return jax.random.normal(key, (W, spec.padded_dim), jnp.float32)
+
+
+def _attacked(spec, key, attack):
+    """(W, D) buffer whose LAST B rows are corrupted."""
+    base = 0.3 * jax.random.normal(key, (W, spec.padded_dim), jnp.float32)
+    honest = base.at[:, 0].add(2.0)          # coherent honest direction
+    hmean = jnp.mean(honest[:W - B], axis=0)
+    if attack == "sign_flip":
+        poison = -4.0 * hmean
+    else:                                    # gaussian
+        poison = hmean + 8.0 * jax.random.normal(
+            jax.random.fold_in(key, 1), (B, spec.padded_dim), jnp.float32)
+    return honest.at[W - B:].set(poison)
+
+
+# ---------------- engine pins: diagnostics=True never moves the aggregate
+
+
+@pytest.mark.parametrize("name", agg_lib.AGGREGATOR_NAMES)
+def test_flat_engine_diag_off_is_bitexact(name):
+    spec = _spec()
+    buf = _buf(spec, jax.random.PRNGKey(0))
+    opts = OPTS.get(name, {})
+    off = agg_lib.get_flat_aggregator(name, spec, **opts)(buf)
+    assert isinstance(off, jnp.ndarray)      # bare array, no tuple
+    on, diag = agg_lib.get_flat_aggregator(
+        name, spec, diagnostics=True, **opts)(buf)
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(on))
+    assert isinstance(diag, telemetry.AggDiagnostics)
+    assert diag.dist.shape == (W,) and diag.weight.shape == (W,)
+    w = np.asarray(diag.weight)
+    assert np.all(w >= 0) and abs(w.sum() - 1.0) < 1e-5
+
+
+@pytest.mark.parametrize("name", agg_lib.AGGREGATOR_NAMES)
+def test_flat_engine_diag_weighted_bitexact(name):
+    spec = _spec()
+    buf = _buf(spec, jax.random.PRNGKey(1))
+    rw = jnp.array([1.0, 0.0, 1.0, 1.0, 0.5, 1.0, 1.0, 1.0], jnp.float32)
+    opts = OPTS.get(name, {})
+    off = agg_lib.get_flat_aggregator(name, spec, **opts)(
+        buf, row_weights=rw)
+    on, diag = agg_lib.get_flat_aggregator(
+        name, spec, diagnostics=True, **opts)(buf, row_weights=rw)
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(on))
+    # A zero-weight row contributes nothing, and the implicit weight says so.
+    if name in ("mean", "geomed", "geomed_groups", "geomed_blockwise",
+                "centered_clip"):
+        assert float(diag.weight[1]) == 0.0
+
+
+@pytest.mark.parametrize("name", masked_lib.MASKED_AGGREGATOR_NAMES)
+def test_masked_engine_diag_off_is_bitexact(name):
+    spec = _spec()
+    key = jax.random.PRNGKey(2)
+    buf = jax.random.normal(key, (W, W, spec.padded_dim), jnp.float32)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (W, W)) < 0.7)
+    mask = jnp.asarray(mask, jnp.float32)
+    mask = jnp.maximum(mask, jnp.eye(W))     # self-loops keep rows live
+    opts = dict(OPTS.get(name, {}), spec=spec)
+    off = masked_lib.masked_aggregate_flat(name, buf, mask, **opts)
+    on, diag = masked_lib.masked_aggregate_flat(
+        name, buf, mask, diagnostics=True, **opts)
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(on))
+    assert diag.dist.shape == (W, W)
+    # Non-neighbors carry exactly zero weight and distance.
+    dead = np.asarray(mask) == 0
+    assert np.all(np.asarray(diag.weight)[dead] == 0)
+    assert np.all(np.asarray(diag.dist)[dead] == 0)
+    red = telemetry.reduce_masked_diagnostics(diag, mask)
+    assert red.dist.shape == (W,) and red.weight.shape == (W,)
+    assert abs(float(jnp.sum(red.weight)) - 1.0) < 1e-5
+
+
+# ---------------- semantics under seeded corruption
+
+
+@pytest.mark.parametrize("attack", ["sign_flip", "gaussian"])
+def test_geomed_implicit_weight_ranks_byzantine_last(attack):
+    spec = _spec()
+    for seed in range(3):
+        buf = _attacked(spec, jax.random.PRNGKey(10 + seed), attack)
+        _, diag = agg_lib.get_flat_aggregator(
+            "geomed", spec, diagnostics=True, max_iters=64)(buf)
+        w = np.asarray(diag.weight)
+        assert w[W - B:].max() < w[:W - B].min(), (seed, w)
+        assert bool(diag.converged)
+
+
+@pytest.mark.parametrize("attack", ["sign_flip", "gaussian"])
+def test_krum_never_selects_byzantine(attack):
+    spec = _spec()
+    for seed in range(3):
+        buf = _attacked(spec, jax.random.PRNGKey(20 + seed), attack)
+        _, diag = agg_lib.get_flat_aggregator(
+            "krum", spec, diagnostics=True, num_byzantine=B)(buf)
+        sel = int(diag.selected)
+        assert 0 <= sel < W - B, (seed, sel)
+        # Byzantine krum scores are the worst of the field.
+        s = np.asarray(diag.score)
+        assert s[W - B:].min() > s[:W - B].max(), (seed, s)
+        # weight is the selection one-hot.
+        np.testing.assert_allclose(
+            np.asarray(diag.weight), np.eye(W)[sel], atol=1e-6)
+
+
+# ---------------- step-level integration (sim federation)
+
+
+def _sim(aggregator, *, diagnostics, steps=25, attack="sign_flip"):
+    data = ijcnn1_like(jax.random.PRNGKey(0), n=240)
+    wd = partition({"a": data.x, "b": data.y}, 6, seed=1)
+    cfg = RobustConfig(aggregator=aggregator, vr="sgd", attack=attack,
+                       num_byzantine=B, weiszfeld_iters=32,
+                       diagnostics=diagnostics)
+    init_fn, step_fn = make_federated_step(
+        logreg_loss(0.01), wd, cfg, get_optimizer("sgd", 0.05))
+    st = init_fn({"w": jnp.zeros((22,), jnp.float32)}, jax.random.PRNGKey(7))
+    jstep = jax.jit(step_fn)
+    metrics = {}
+    for _ in range(steps):
+        st, metrics = jstep(st)
+    return st.params, metrics
+
+
+def test_step_diagnostics_off_is_bitexact_and_on_ranks_byzantine():
+    p_off, m_off = _sim("geomed", diagnostics=False)
+    p_on, m_on = _sim("geomed", diagnostics=True)
+    np.testing.assert_array_equal(np.asarray(p_off["w"]),
+                                  np.asarray(p_on["w"]))
+    assert "diag_weight" not in m_off and "honest_variance" in m_off
+    w = np.asarray(m_on["diag_weight"])      # sim appends Byzantine LAST
+    assert w.shape == (6 + B,)
+    assert w[-B:].max() < w[:-B].min()
+    assert float(m_on["honest_variance"]) >= 0.0
+
+
+def test_step_krum_diag_selects_honest():
+    _, m = _sim("krum", diagnostics=True, steps=8)
+    assert 0 <= int(m["diag_selected"]) < 6
+
+
+# ---------------- host sinks
+
+
+def test_runlogger_jsonl_and_meta(tmp_path):
+    d = os.path.join(tmp_path, "run")
+    seen = []
+    with telemetry.RunLogger(d, log_every=2, flush_every=4,
+                             console=lambda s, row: seen.append(s),
+                             console_every=5) as lg:
+        lg.write_meta(config={"lr": 0.1}, jax_version=jax.__version__)
+        for i in range(11):
+            lg.log_step(i, {"loss": jnp.float32(i), "vec": jnp.arange(2.0)},
+                        host={"time_step_s": 0.5})
+    rows = [json.loads(l) for l in open(os.path.join(d, "metrics.jsonl"))]
+    assert [r["step"] for r in rows] == [0, 2, 4, 6, 8, 10]
+    assert rows[3] == {"step": 6, "loss": 6.0, "vec": [0.0, 1.0],
+                       "time_step_s": 0.5}
+    assert seen == [0, 5, 10]                # console cadence, incl. step 5
+    meta = json.load(open(os.path.join(d, "meta.json")))
+    assert meta["config"] == {"lr": 0.1}
+
+
+def test_runlogger_console_only_mode(tmp_path):
+    seen = []
+    with telemetry.RunLogger(None, console=lambda s, row: seen.append(row),
+                             console_every=2) as lg:
+        lg.write_meta(anything=1)            # no-op without a directory
+        for i in range(4):
+            lg.log_step(i, {"loss": jnp.float32(i)})
+    assert [r["loss"] for r in seen] == [0.0, 2.0]
+    assert not os.listdir(tmp_path)
+
+
+def test_phase_timer_accumulates_and_drains():
+    t = telemetry.PhaseTimer()
+    with t.phase("data"):
+        pass
+    with t.phase("data"):
+        pass
+    with t.phase("step"):
+        pass
+    snap = t.snapshot()
+    assert set(snap) == {"time_data_s", "time_step_s"}
+    assert all(v >= 0 for v in snap.values())
+    assert t.snapshot() == {}                # drained
+
+
+def test_metric_helpers():
+    h = jnp.ones((4, 3), jnp.float32)
+    assert float(telemetry.honest_variance(h, 4)) == 0.0
+    tree = {"w": jnp.stack([jnp.zeros(3), jnp.ones(3), 5 * jnp.ones(3)])}
+    mask = jnp.array([1.0, 1.0, 0.0])
+    assert float(telemetry.consensus_dist(tree, mask, 2)) > 0.0
+    same = {"w": jnp.ones((3, 2))}
+    assert float(telemetry.consensus_dist(same, jnp.ones(3), 3)) == 0.0
+    assert telemetry.staleness_metrics(None) == {}
+    out = telemetry.staleness_metrics(jnp.array([0.0, 2.0]))
+    assert float(out["mean_staleness"]) == 1.0

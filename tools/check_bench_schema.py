@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""Bench-artifact schema checker: every ``BENCH_*.json`` matches its schema.
+
+The benchmark scripts under benchmarks/ stamp a ``schema`` version string
+(e.g. ``BENCH_step/v3``) into every artifact they write.  This tool pins
+those stamps to an explicit registry of required top-level and per-row keys,
+so a bench script that silently drops a field (or bumps its output shape
+without bumping the version) fails CI instead of producing artifacts that
+downstream tooling half-understands.
+
+    python tools/check_bench_schema.py [files...]   # default: BENCH_*.json
+                                                    # in the repo root
+
+Unknown schema stamps fail too: adding a new bench artifact means adding
+its registry entry here in the same change.  Run by
+.github/workflows/ci.yml next to tools/check_doc_links.py.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Per schema version: required top-level keys, required per-row keys, and
+# (optionally) required keys of nested top-level objects.  Extra keys are
+# allowed everywhere -- the registry pins a floor, not an exact shape.
+SCHEMAS = {
+    "BENCH_step/v3": {
+        "top": {"schema", "jax_version", "platform", "device_count",
+                "sim_workers", "gate", "rows"},
+        "nested": {"gate": {"speedup_cells", "speedup_floor",
+                            "noise_margin"}},
+        "row": {"path", "aggregator", "packed", "num_workers",
+                "num_byzantine", "vr", "attack", "vr_state_bytes",
+                "leaves", "coords", "steps", "reps", "wall_us_mean",
+                "wall_us_min"},
+        # Only the sim path carries per-client VR accounting; the
+        # distributed-lowering rows legitimately omit these.
+        "row_when": {("path", "sim"): {"num_samples", "num_clients"}},
+    },
+    "BENCH_comm_modes/v1": {
+        "top": {"schema", "jax_version", "platform", "device_count",
+                "coords_requested", "weiszfeld_iters", "rows"},
+        "row": {"mesh", "axes", "worker_axes", "num_workers", "aggregator",
+                "comm", "coords", "reps", "model_bytes_per_device",
+                "wall_us_mean", "wall_us_min"},
+    },
+    "BENCH_topologies/v2": {
+        "top": {"schema", "jax_version", "platform", "num_honest",
+                "num_byzantine", "steps", "rows"},
+        "row": {"topology", "aggregator", "attack", "gossip", "schedule",
+                "schedule_period", "num_nodes", "num_byzantine", "steps",
+                "reps", "spectral_gap", "wall_us_mean", "wall_us_min",
+                "final_honest_loss", "consensus_dist"},
+    },
+}
+
+# Keys whose values must be finite numbers in every row that has them.
+NUMERIC_ROW_KEYS = ("wall_us_mean", "wall_us_min", "final_honest_loss",
+                    "consensus_dist", "model_bytes_per_device")
+
+
+def check_file(path: str) -> list[str]:
+    rel = os.path.relpath(path, REPO)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{rel}: unreadable ({e})"]
+    errs = []
+    schema = doc.get("schema")
+    if schema not in SCHEMAS:
+        return [f"{rel}: unknown schema {schema!r} "
+                f"(registered: {sorted(SCHEMAS)})"]
+    spec = SCHEMAS[schema]
+    missing = spec["top"] - set(doc)
+    if missing:
+        errs.append(f"{rel}: missing top-level keys {sorted(missing)}")
+    for key, req in spec.get("nested", {}).items():
+        sub = doc.get(key)
+        if not isinstance(sub, dict):
+            errs.append(f"{rel}: {key!r} must be an object")
+        elif req - set(sub):
+            errs.append(f"{rel}: {key!r} missing {sorted(req - set(sub))}")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errs.append(f"{rel}: 'rows' must be a non-empty list")
+        return errs
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errs.append(f"{rel}: rows[{i}] is not an object")
+            continue
+        required = set(spec["row"])
+        for (key, val), extra in spec.get("row_when", {}).items():
+            if row.get(key) == val:
+                required |= extra
+        missing = required - set(row)
+        if missing:
+            errs.append(f"{rel}: rows[{i}] missing {sorted(missing)}")
+        for k in NUMERIC_ROW_KEYS:
+            v = row.get(k)
+            if k in row and (not isinstance(v, (int, float))
+                             or isinstance(v, bool) or v != v):
+                errs.append(f"{rel}: rows[{i}][{k!r}] not a finite "
+                            f"number: {v!r}")
+    return errs
+
+
+def main(argv: list[str]) -> int:
+    files = argv or sorted(glob.glob(os.path.join(REPO, "BENCH_*.json")))
+    if not files:
+        print("check_bench_schema: no BENCH_*.json artifacts found")
+        return 0
+    errs = []
+    for path in files:
+        errs.extend(check_file(path))
+    for e in errs:
+        print(e)
+    if not errs:
+        print(f"check_bench_schema: {len(files)} artifact(s) OK "
+              f"({', '.join(os.path.basename(p) for p in files)})")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
