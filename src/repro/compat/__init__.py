@@ -37,7 +37,7 @@ __all__ = [
     "JAX_VERSION", "AxisType", "HAS_AXIS_TYPE", "HAS_SHARD_MAP",
     "HAS_AMBIENT_MESH", "make_mesh", "use_mesh", "active_mesh", "shard_map",
     "axis_size", "axis_group", "axis_index", "all_gather", "all_to_all",
-    "psum", "cost_analysis", "profiler_trace", "require_distributed",
+    "psum", "pmax", "cost_analysis", "profiler_trace", "require_distributed",
 ]
 
 JAX_VERSION: tuple[int, ...] = tuple(
@@ -293,6 +293,11 @@ def all_to_all(x, axis_names, *, split_axis: int, concat_axis: int,
 def psum(x, axis_names):
     """``jax.lax.psum`` over one or several mesh axes."""
     return jax.lax.psum(x, axis_group(axis_names))
+
+
+def pmax(x, axis_names):
+    """``jax.lax.pmax`` over one or several mesh axes."""
+    return jax.lax.pmax(x, axis_group(axis_names))
 
 
 _NO_SHARD_MAP_MSG = (

@@ -26,7 +26,14 @@ from repro.core.geomed import (
     weiszfeld_pytree,
     weiszfeld_sharded,
 )
-from repro.core.packing import PackSpec, pack_spec
+from repro.core.packing import (
+    WIRE_FORMAT_NAMES,
+    WIRE_FORMATS,
+    PackSpec,
+    WireFormat,
+    pack_spec,
+    resolve_wire_format,
+)
 from repro.core.participation import (
     ParticipationPlan,
     gather_rows,

@@ -12,8 +12,18 @@ single ``(W, D)`` matrix end-to-end:
 * :class:`PackSpec` -- built once per model from the per-message leaf
   shapes/dtypes: flat sizes, cumulative offsets, the raveled dimension
   ``D``, an optional pad to a multiple (``pad_to``), and the on-wire
-  ``message_dtype`` (``float32``, or ``bfloat16`` to halve communication
-  volume -- robust rules still accumulate in f32, DESIGN.md Sec. 8).
+  format (``wire``, a :data:`WIRE_FORMATS` name -- robust rules always
+  accumulate in f32, DESIGN.md Secs. 8 and 12).
+
+Wire formats (DESIGN.md Sec. 12): the :data:`WIRE_FORMATS` registry is
+the single source of truth for what a message looks like on the wire --
+``float32``, ``bfloat16`` (pack-time cast, halves volume), ``int8``
+(per-block symmetric scales from the static leaf boundaries,
+:meth:`PackSpec.encode` / :meth:`PackSpec.decode`), and ``sign1`` (1-bit
+sign messages with a per-client error-feedback residual,
+:meth:`PackSpec.transmit`).  The CLI choices, the unknown-name errors and
+the wire-byte accounting all derive from the registry, same dict-registry
+pattern as the aggregator/attack/reducer registries.
 * :meth:`PackSpec.pack` -- pytree with any number of leading batch axes
   (worker axis, (receiver, sender) exchange axes, SAGA (W, J) table axes)
   ``->`` one ``(*batch, D_padded)`` buffer.  Pure reshape+concat+cast at
@@ -39,7 +49,64 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """One on-wire message format (a :data:`WIRE_FORMATS` registry entry).
+
+    ``cast_dtype`` is what :meth:`PackSpec.pack` casts the buffer to -- the
+    quantized formats keep the in-memory buffer f32 and quantize explicitly
+    through :meth:`PackSpec.encode`/:meth:`PackSpec.decode` at the comm
+    boundary.  ``bits_per_coord`` drives the wire-byte accounting
+    (:meth:`PackSpec.wire_bytes`); quantized formats additionally ship one
+    f32 scale per leaf block.  ``error_feedback`` marks formats whose
+    senders carry an O(D) residual state (sign1, DESIGN.md Sec. 12)."""
+
+    name: str
+    cast_dtype: Any
+    bits_per_coord: int
+    quantized: bool = False
+    error_feedback: bool = False
+
+
+# name -> WireFormat.  The SINGLE source of truth: ``WIRE_FORMAT_NAMES``,
+# the --message-dtype CLI choices and every unknown-name error derive from
+# this dict, so registering here is the one place a new wire format is
+# added (same pattern as the aggregator/attack/reducer registries).
+WIRE_FORMATS: dict[str, WireFormat] = {
+    "float32": WireFormat("float32", jnp.float32, 32),
+    "bfloat16": WireFormat("bfloat16", jnp.bfloat16, 16),
+    "int8": WireFormat("int8", jnp.float32, 8, quantized=True),
+    "sign1": WireFormat("sign1", jnp.float32, 1, quantized=True,
+                        error_feedback=True),
+}
+
+WIRE_FORMAT_NAMES = tuple(WIRE_FORMATS)
+
+
+def resolve_wire_format(name: str | WireFormat | Any) -> WireFormat:
+    """Map a ``RobustConfig.message_dtype`` value to its :class:`WireFormat`.
+
+    Strings resolve through the registry (unknown names raise with the
+    registered set); a raw dtype is wrapped as a plain cast format so
+    pre-registry callers that passed ``jnp.bfloat16`` directly keep
+    working."""
+    if isinstance(name, WireFormat):
+        return name
+    if isinstance(name, str):
+        try:
+            return WIRE_FORMATS[name]
+        except KeyError:
+            raise ValueError(
+                f"message_dtype must be one of {sorted(WIRE_FORMATS)}, "
+                f"got {name!r}") from None
+    dt = jnp.dtype(name)
+    return WIRE_FORMATS.get(dt.name,
+                            WireFormat(dt.name, dt, dt.itemsize * 8))
 
 
 def assemble(parts, *, pad: int = 0, batch_shape: tuple[int, ...] = (),
@@ -80,10 +147,21 @@ class PackSpec:
     dim: int
     padded_dim: int
     message_dtype: Any = jnp.float32
+    wire: str = "float32"
 
     @property
     def num_leaves(self) -> int:
         return len(self.shapes)
+
+    @property
+    def wire_format(self) -> WireFormat:
+        fmt = WIRE_FORMATS.get(self.wire)
+        return fmt if fmt is not None else resolve_wire_format(
+            self.message_dtype)
+
+    @property
+    def quantized(self) -> bool:
+        return self.wire_format.quantized
 
     @property
     def boundaries(self) -> tuple[tuple[int, int], ...]:
@@ -137,6 +215,109 @@ class PackSpec:
             out.append(jnp.reshape(piece, batch + shape).astype(dtype))
         return self.treedef.unflatten(out)
 
+    def encode(self, buf: jnp.ndarray, *, axis_names: Sequence[str] = ()
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Quantize a packed buffer: ``(*batch, padded_dim)`` ->
+        ``(codes int8 (*batch, padded_dim), scales f32 (*batch, num_leaves))``.
+
+        Scales are per leaf block, read off the static :attr:`boundaries`:
+        ``int8`` uses symmetric ``amax/127`` scaling (round-trip error at
+        most ``amax/254`` per coordinate), ``sign1`` the EF-signSGD
+        ``mean |v|`` magnitude.  When the buffer's coordinate axis is
+        sharded over mesh axes, pass them as ``axis_names`` so the block
+        statistics reduce over the FULL leaf -- the resulting codes then
+        match the single-host encode exactly (int8) and the scales match
+        up to summation order (sign1).  Padding coordinates encode to 0.
+        """
+        fmt = self.wire_format
+        if not fmt.quantized:
+            raise ValueError(f"wire format {fmt.name!r} is not quantized")
+        v32 = buf.astype(jnp.float32)
+        batch = buf.shape[:-1]
+        code_parts, scales = [], []
+        for a, b in self.boundaries:
+            v = v32[..., a:b]
+            if fmt.name == "int8":
+                amax = jnp.max(jnp.abs(v), axis=-1)
+                if axis_names:
+                    amax = compat.pmax(amax, axis_names)
+                scale = amax / 127.0
+                safe = jnp.where(amax > 0.0, scale, 1.0)
+                codes = jnp.clip(jnp.round(v / safe[..., None]),
+                                 -127.0, 127.0).astype(jnp.int8)
+            else:  # sign1: codes are exactly +-1, never 0
+                s_sum = jnp.sum(jnp.abs(v), axis=-1)
+                cnt = jnp.full(batch, float(b - a), jnp.float32)
+                if axis_names:
+                    # psum-ing the local count too keeps the mean right for
+                    # both sharded leaves (counts add up to the leaf size)
+                    # and replicated ones (numerator and denominator scale
+                    # by the same device count).
+                    s_sum = compat.psum(s_sum, axis_names)
+                    cnt = compat.psum(cnt, axis_names)
+                scale = s_sum / jnp.maximum(cnt, 1.0)
+                codes = jnp.where(v >= 0.0, 1, -1).astype(jnp.int8)
+            code_parts.append(codes)
+            scales.append(scale)
+        codes = assemble(code_parts, pad=self.pad, batch_shape=batch,
+                         dtype=jnp.int8)
+        if scales:
+            scale_arr = jnp.stack(scales, axis=-1).astype(jnp.float32)
+        else:
+            scale_arr = jnp.zeros(batch + (0,), jnp.float32)
+        return codes, scale_arr
+
+    def decode(self, codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+        """Inverse of :meth:`encode`: f32 ``(*batch, padded_dim)`` buffer."""
+        batch = codes.shape[:-1]
+        parts = [codes[..., a:b].astype(jnp.float32) * scales[..., i:i + 1]
+                 for i, (a, b) in enumerate(self.boundaries)]
+        return assemble(parts, pad=self.pad, batch_shape=batch,
+                        dtype=jnp.float32)
+
+    def wire_roundtrip(self, buf: jnp.ndarray, *,
+                       axis_names: Sequence[str] = ()) -> jnp.ndarray:
+        """What the receiver sees: ``decode(encode(buf))`` for quantized
+        formats, ``buf`` itself (the byte-identical bypass -- the SAME
+        array object, no copy) otherwise."""
+        if not self.quantized:
+            return buf
+        return self.decode(*self.encode(buf, axis_names=axis_names))
+
+    def transmit(self, buf: jnp.ndarray, residual: jnp.ndarray | None = None,
+                 *, axis_names: Sequence[str] = ()
+                 ) -> tuple[jnp.ndarray, jnp.ndarray | None]:
+        """Sender-side wire step: ``(wire_buf, new_residual)``.
+
+        Non-quantized formats pass both through untouched.  Error-feedback
+        formats (sign1) require ``residual`` (the sender's O(D) carried
+        state, same leading batch as ``buf``): the residual is folded into
+        the message before quantization and the fresh quantization error
+        comes back as the new residual, so the error is re-sent -- not
+        lost -- next round (arXiv:2108.06658).
+        """
+        fmt = self.wire_format
+        if not fmt.quantized:
+            return buf, residual
+        if fmt.error_feedback:
+            if residual is None:
+                raise ValueError(
+                    f"wire format {fmt.name!r} carries error feedback; "
+                    "pass the per-client residual state")
+            t = buf.astype(jnp.float32) + residual
+            wire = self.wire_roundtrip(t, axis_names=axis_names)
+            return wire, t - wire
+        return self.wire_roundtrip(buf, axis_names=axis_names), residual
+
+    def wire_bytes(self) -> int:
+        """Bytes one message occupies on the wire (codes + per-block
+        scales for quantized formats) -- the ``meta.json`` accounting."""
+        fmt = self.wire_format
+        n = (fmt.bits_per_coord * self.padded_dim + 7) // 8
+        if fmt.quantized:
+            n += 4 * self.num_leaves
+        return n
+
     def seg_ids(self) -> jnp.ndarray:
         """(padded_dim,) int32 leaf id per packed coordinate; padding
         coordinates carry the dummy id ``num_leaves`` so they join no real
@@ -152,15 +333,45 @@ class PackSpec:
                                     self.message_dtype)
 
 
+def dequantize_slice(codes: jnp.ndarray, scales: jnp.ndarray,
+                     seg_ids: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize an arbitrary coordinate slice of a packed buffer.
+
+    The sharded paths ship int8 codes through the all_to_all and only then
+    dequantize the local coordinate slice, where the leaf boundaries no
+    longer line up with the slice -- so decoding is per-coordinate:
+    ``codes`` is ``(*batch, n)`` int8, ``scales`` is ``(*batch,
+    num_leaves)`` f32, ``seg_ids`` is ``(n,)`` int32 leaf id per slice
+    coordinate (dummy id ``num_leaves`` for padding, which decodes to 0
+    via an appended zero scale column).
+    """
+    zero = jnp.zeros(scales.shape[:-1] + (1,), scales.dtype)
+    padded = jnp.concatenate([scales, zero], axis=-1)
+    return codes.astype(jnp.float32) * jnp.take(padded, seg_ids, axis=-1)
+
+
 def pack_spec(tree: Pytree, *, batch_ndim: int = 1,
-              message_dtype: Any = jnp.float32, pad_to: int = 1) -> PackSpec:
+              message_dtype: Any = None, pad_to: int = 1,
+              wire: str | WireFormat | None = None) -> PackSpec:
     """Build the :class:`PackSpec` of ``tree``.
 
     ``tree`` leaves may be arrays or ShapeDtypeStructs; their first
     ``batch_ndim`` axes are treated as batch (worker/exchange axes) and the
     rest as the per-message shape.  ``pad_to`` rounds the packed dimension
     up to a multiple (e.g. the worker count for all_to_all resharding).
+    ``wire`` names a :data:`WIRE_FORMATS` entry (the buffer dtype follows
+    the format's ``cast_dtype``); ``message_dtype`` is the legacy raw-dtype
+    spelling -- pass one or the other, not both.
     """
+    if wire is not None:
+        if message_dtype is not None:
+            raise ValueError("pass either wire= or message_dtype=, not both")
+        fmt = resolve_wire_format(wire)
+        mdt, wname = jnp.dtype(fmt.cast_dtype), fmt.name
+    else:
+        mdt = jnp.dtype(message_dtype if message_dtype is not None
+                        else jnp.float32)
+        wname = mdt.name
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     shapes = tuple(tuple(l.shape[batch_ndim:]) for l in leaves)
     dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
@@ -171,17 +382,17 @@ def pack_spec(tree: Pytree, *, batch_ndim: int = 1,
     padded = dim + ((-dim) % max(pad_to, 1))
     return PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
                     sizes=sizes, offsets=offsets, dim=dim, padded_dim=padded,
-                    message_dtype=jnp.dtype(message_dtype))
+                    message_dtype=mdt, wire=wname)
 
 
 def resolve_message_dtype(name: str | Any) -> Any:
-    """Map a RobustConfig.message_dtype string to a jnp dtype."""
+    """Map a RobustConfig.message_dtype value to the pack-time jnp dtype.
+
+    Registry-driven: string names resolve through :data:`WIRE_FORMATS`
+    (so the error message and the CLI choices can never go stale), and
+    quantized formats resolve to their f32 ``cast_dtype`` -- the buffer
+    stays f32 and quantization happens at the comm boundary.
+    """
     if isinstance(name, str):
-        allowed = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
-        try:
-            return allowed[name]
-        except KeyError:
-            raise ValueError(
-                f"message_dtype must be one of {sorted(allowed)}, "
-                f"got {name!r}") from None
+        return jnp.dtype(resolve_wire_format(name).cast_dtype)
     return jnp.dtype(name)

@@ -95,9 +95,13 @@ class RobustConfig:
     # attacks and aggregation on it end-to-end; False keeps the pre-refactor
     # per-leaf pipeline (the benchmarks' baseline).
     packed: bool = True
-    # On-wire dtype of the packed messages: "float32", or "bfloat16" to
-    # halve communication volume (robust rules still accumulate in f32).
-    # Only honoured on the packed path.
+    # On-wire format of the packed messages, a repro.core.packing
+    # WIRE_FORMATS name (DESIGN.md Sec. 12): "float32"; "bfloat16" (halves
+    # communication volume via a pack-time cast); "int8" (per-block
+    # symmetric scales, 4x smaller); "sign1" (1-bit signs + per-client
+    # error-feedback residual state, 32x smaller).  Robust rules always
+    # accumulate in f32.  Only honoured on the packed path; the quantized
+    # formats REQUIRE packed=True.
     message_dtype: str = "float32"
     # Attack knobs (paper defaults).
     gaussian_variance: float = 30.0
@@ -163,12 +167,16 @@ class RobustConfig:
             clip_radius=self.clip_radius,
         )
 
+    def wire_format(self) -> packing.WireFormat:
+        """The :data:`repro.core.packing.WIRE_FORMATS` entry named by
+        ``self.message_dtype`` -- the ONE dispatch point for the wire."""
+        return packing.resolve_wire_format(self.message_dtype)
+
     def message_spec(self, tree: Pytree, *, batch_ndim: int = 1,
                      pad_to: int = 1) -> packing.PackSpec:
         """PackSpec of this config's wire messages for ``tree``."""
-        return packing.pack_spec(
-            tree, batch_ndim=batch_ndim, pad_to=pad_to,
-            message_dtype=packing.resolve_message_dtype(self.message_dtype))
+        return packing.pack_spec(tree, batch_ndim=batch_ndim, pad_to=pad_to,
+                                 wire=self.wire_format())
 
     def flat_aggregator_fn(self, spec: packing.PackSpec,
                            axis_names: Sequence[str] = (),
@@ -201,6 +209,11 @@ class FederatedState(NamedTuple):
     # (num_clients,) int32 rounds-since-last-participation counters, or None
     # under full participation (keeps the pre-participation pytree).
     staleness: Optional[jnp.ndarray] = None
+    # (num_clients, D) f32 error-feedback residuals for the sign1 wire
+    # (DESIGN.md Sec. 12), gathered/scattered with the cohort like the VR
+    # tables, or None for formats without error feedback (keeps the
+    # pre-quantization pytree).
+    ef: Optional[jnp.ndarray] = None
 
 
 def resolve_topology(cfg: RobustConfig, num_nodes: int,
@@ -314,6 +327,11 @@ def make_federated_step(
     grad_fn = jax.grad(loss_fn)
     attack_cfg = cfg.attack_config()
     reducer = cfg.reducer()
+    wire_fmt = cfg.wire_format()
+    if wire_fmt.quantized and not cfg.packed:
+        raise ValueError(
+            f"message_dtype={cfg.message_dtype!r} is a quantized wire "
+            "format and needs the packed path (cfg.packed=True)")
 
     def sample_batch(data_w, idx):
         """Select samples ``idx`` (vector) of one worker -> batch pytree."""
@@ -362,8 +380,14 @@ def make_federated_step(
             num_workers=num_clients, pack_fn=pack_fn)
         staleness = (participation_lib.init_staleness(num_clients)
                      if plan is not None else None)
+        # Error-feedback residuals start at zero: the first round transmits
+        # plain quantized messages and banks the quantization error.
+        ef = None
+        if wire_fmt.error_feedback:
+            d = cfg.message_spec(params, batch_ndim=0).padded_dim
+            ef = jnp.zeros((num_clients, d), jnp.float32)
         return FederatedState(params, opt_state, vr_state,
-                              jnp.zeros((), jnp.int32), key, staleness)
+                              jnp.zeros((), jnp.int32), key, staleness, ef)
 
     def honest_grads(params, k_idx, data):
         """Per-worker raw honest gradients + the drawn indices.  Returned
@@ -483,7 +507,7 @@ def make_federated_step(
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
         params = optim_lib.apply_updates(params, updates)
         new_state = FederatedState(params, opt_state, vr_state,
-                                   state.step + 1, key, staleness)
+                                   state.step + 1, key, staleness, state.ef)
         return new_state, metrics
 
     def step_fn_packed(state: FederatedState):
@@ -503,10 +527,32 @@ def make_federated_step(
                                               k_idx, data=data, spec=spec)
         vr_state, staleness = finish_round(state, cohort, vr_rows)
 
+        # Wire quantization (DESIGN.md Sec. 12): honest senders transmit
+        # post-VR-correction -- what the master sees (and what the variance
+        # metric and the attacks observe) is the DEQUANTIZED wire.  sign1
+        # folds each client's carried residual in before quantizing and
+        # banks the fresh error; the cohort gather/scatter brackets the
+        # residual table exactly like the VR state.
+        ef_state = state.ef
+        if wire_fmt.quantized:
+            ef_rows = state.ef
+            if wire_fmt.error_feedback and plan is not None:
+                ef_rows = participation_lib.gather_rows(state.ef, cohort)
+            honest, ef_rows = spec.transmit(honest, ef_rows)
+            if wire_fmt.error_feedback:
+                ef_state = (participation_lib.scatter_rows(
+                    state.ef, cohort, ef_rows)
+                    if plan is not None else ef_rows)
+
         var = telemetry.honest_variance(honest, wh)
 
         msgs = attack_lib.apply_attack(attack_cfg, honest, k_attack,
                                        spec=spec)             # (W, D)
+        if wire_fmt.quantized:
+            # Byzantine payloads are wire-constrained too: re-quantizing the
+            # full buffer sends the attack rows through the same format
+            # (honest rows are already a fixed point of the round-trip).
+            msgs = spec.wire_roundtrip(msgs)
         rw, slot_stal = row_weights_for(honest_stal)
         metrics = {"honest_variance": var, **vr_metrics,
                    **telemetry.staleness_metrics(slot_stal)}
@@ -521,7 +567,7 @@ def make_federated_step(
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
         params = optim_lib.apply_updates(params, updates)
         new_state = FederatedState(params, opt_state, vr_state,
-                                   state.step + 1, key, staleness)
+                                   state.step + 1, key, staleness, ef_state)
         return new_state, metrics
 
     return init_fn, (step_fn_packed if cfg.packed else step_fn_perleaf)
@@ -594,7 +640,19 @@ def distributed_aggregate(
     if cfg.packed:
         spec = cfg.message_spec(grads, batch_ndim=0)
         buf = spec.pack(grads, batch_ndim=0)                  # (D_shard,)
-        stacked = compat.all_gather(buf, worker_axes, axis=0, tiled=False)
+        if spec.quantized:
+            # The QUANTIZED buffer is what crosses the wire: int8 codes (+
+            # one f32 scale per block) are all_gather'd and dequantized on
+            # the receiver.  Block statistics reduce over the model axes so
+            # the per-block scales are the FULL-leaf scales and the codes
+            # match the single-host encode (DESIGN.md Sec. 12).
+            codes, scales = spec.encode(buf, axis_names=model_axes)
+            stacked = spec.decode(
+                compat.all_gather(codes, worker_axes, axis=0, tiled=False),
+                compat.all_gather(scales, worker_axes, axis=0, tiled=False))
+        else:
+            stacked = compat.all_gather(buf, worker_axes, axis=0,
+                                        tiled=False)
         flat_fn = cfg.flat_aggregator_fn(
             spec, axis_names=model_axes, sync_axes=worker_axes,
             diagnostics=diag_on)
@@ -614,6 +672,10 @@ def distributed_aggregate(
         raise ValueError(
             "aggregation diagnostics need the packed gather path "
             "(cfg.packed=True); the per-leaf baseline has no flat buffer")
+    if cfg.wire_format().quantized:
+        raise ValueError(
+            f"message_dtype={cfg.message_dtype!r} is a quantized wire "
+            "format and needs the packed gather path (cfg.packed=True)")
     # Multi-axis all_gather already collapses the worker axes into ONE
     # leading (W_total,) axis in row-major worker order (compat.all_gather),
     # so single- and multi-pod meshes land on the same stacked layout.
@@ -731,12 +793,33 @@ def sharded_aggregate(
     flat, unflatten, leaf_sizes = _flatten_concat(grads)
     p = flat.shape[0]
     pad = (-p) % w
-    flat = jnp.pad(flat, (0, pad))
-    chunks = flat.reshape(w, -1)  # row r = my message's slice destined to worker r
-    # After all_to_all: row r = worker r's slice for MY coordinate range.
-    z_local = compat.all_to_all(chunks, worker_axes, split_axis=0,
-                                concat_axis=0, tiled=False)
-    z_local = z_local.reshape(w, -1)
+    wire_fmt = cfg.wire_format()
+    if wire_fmt.quantized:
+        # Quantized coordinates through the all_to_all (the comm-volume
+        # win ROADMAP item 3 targets): each worker encodes its FULL local
+        # message once (block stats psum'd over the model axes so the
+        # scales are whole-leaf), ships int8 code slices, all_gathers the
+        # tiny (W, num_leaves) scale matrix, and dequantizes its slice
+        # per-coordinate -- the slice cuts across leaf boundaries, so
+        # the seg-id map picks each coordinate's scale (padding
+        # coordinates hit the dummy zero column).  Everything after this
+        # point accumulates in f32, unchanged.
+        wspec = packing.pack_spec(grads, batch_ndim=0, wire=wire_fmt)
+        codes, scales = wspec.encode(flat, axis_names=model_axes)
+        codes = jnp.pad(codes, (0, pad)).reshape(w, -1)
+        z_codes = compat.all_to_all(codes, worker_axes, split_axis=0,
+                                    concat_axis=0, tiled=False).reshape(w, -1)
+        z_local = packing.dequantize_slice(
+            z_codes,
+            compat.all_gather(scales, worker_axes, axis=0, tiled=False),
+            _local_leaf_ids(leaf_sizes, pad, w, worker_axes))
+    else:
+        flat = jnp.pad(flat, (0, pad))
+        chunks = flat.reshape(w, -1)  # row r = my message's slice destined to worker r
+        # After all_to_all: row r = worker r's slice for MY coordinate range.
+        z_local = compat.all_to_all(chunks, worker_axes, split_axis=0,
+                                    concat_axis=0, tiled=False)
+        z_local = z_local.reshape(w, -1)
     comm_axes = tuple(worker_axes) + tuple(model_axes)
     rw = row_weights
 

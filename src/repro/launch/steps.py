@@ -124,6 +124,12 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
     attack_cfg = robust.attack_config()
     reducer = robust.reducer()
     use_vr = reducer.wants_state(saga_num_samples)
+    wire_fmt = robust.wire_format()
+    use_ef = wire_fmt.error_feedback
+    if wire_fmt.quantized and not robust.packed:
+        raise ValueError(
+            f"message_dtype={robust.message_dtype!r} is a quantized wire "
+            "format and needs the packed path (robust.packed=True)")
 
     def row_weights_for(state):
         """Replicated (W,) staleness weights of the mesh's message slots
@@ -188,6 +194,30 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
         else:
             msgs, vr_state, vr_metrics = grads, state.get("vr"), {}
 
+        # Sender-side wire step (DESIGN.md Sec. 12): quantized formats pack
+        # the messages once, fold in / bank the per-slot error-feedback
+        # residual (sign1), and continue with the DEQUANTIZED wire -- what
+        # the attacks observe and the variance metric measures, mirroring
+        # the sim path.  The EF state is updated for ALL w slots HERE,
+        # before the comm-mode branch, so gather and sharded runs carry
+        # bit-identical residual tables.
+        ef_state = state.get("ef")
+        if wire_fmt.quantized:
+            wspec = robust.message_spec(msgs, batch_ndim=1)
+            wbuf = jax.lax.with_sharding_constraint(
+                wspec.pack(msgs),
+                jax.sharding.NamedSharding(mesh, P(wa if len(wa) > 1
+                                                   else wa[0])))
+            ef_rows = ef_state
+            if use_ef and plan is not None:
+                ef_rows = participation_lib.gather_rows(state["ef"], cohort)
+            wbuf, ef_rows = wspec.transmit(wbuf, ef_rows)
+            if use_ef:
+                ef_state = (participation_lib.scatter_rows(
+                    state["ef"], cohort, ef_rows)
+                    if plan is not None else ef_rows)
+            msgs = wspec.unpack(wbuf)
+
         # Honest-message variance BEFORE attack injection (mask-replace hits
         # the FIRST B slots, so the honest workers are the slots >= B).
         b = robust.num_byzantine if robust.attack != "none" else 0
@@ -196,7 +226,8 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
 
         diag = None
         if robust.comm == "gather" and (weighted or robust.diagnostics or (
-                robust.packed and robust.aggregator in PACKED_GATHER_RULES)):
+                robust.packed and (wire_fmt.quantized or
+                                   robust.aggregator in PACKED_GATHER_RULES))):
             # Flat-packed hot path (DESIGN.md Sec. 8): one (W, D) buffer
             # carries the messages through attack + aggregation.  The
             # FULL-VECTOR rules route here by default -- they replicate the
@@ -212,6 +243,12 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
                 spec.pack(msgs), jax.sharding.NamedSharding(mesh, P(waxes)))
             buf = attack_lib.apply_attack_stacked(
                 attack_cfg, buf, jax.random.fold_in(key, 2), spec=spec)
+            if wire_fmt.quantized:
+                # Byzantine payloads are wire-constrained too (the honest
+                # rows are already a fixed point of the round-trip); the
+                # sharded branch gets the same treatment inside
+                # sharded_aggregate's encode.
+                buf = spec.wire_roundtrip(buf)
             flat_fn = robust.flat_aggregator_fn(spec)
             out = flat_fn(buf) if rw is None else flat_fn(
                 buf, row_weights=rw)
@@ -245,6 +282,8 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
         new_state = {"params": params, "opt": opt_state, "step": state["step"] + 1}
         if use_vr:
             new_state["vr"] = vr_state
+        if use_ef:
+            new_state["ef"] = ef_state
         if plan is not None:
             new_state["staleness"] = participation_lib.tick_staleness(
                 state["staleness"], cohort)
@@ -271,6 +310,10 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
               "step": P()}
         if use_vr:
             sp["vr"] = reducer.state_specs(pspecs, wa_spec)
+        if use_ef:
+            # (num_clients, D) residual rows sharded over the worker axes,
+            # like the per-client VR tables (DESIGN.md Sec. 12).
+            sp["ef"] = P(wa_spec)
         if plan is not None:
             sp["staleness"] = P()   # (num_clients,) int32, replicated
         return sp
@@ -283,6 +326,11 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
             # Per-client resident rows under partial participation.
             st["vr"] = reducer.state_structs(ps, num_clients,
                                              saga_num_samples)
+        if use_ef:
+            st["ef"] = jax.ShapeDtypeStruct(
+                (num_clients,
+                 robust.message_spec(ps, batch_ndim=0).padded_dim),
+                jnp.float32)
         if plan is not None:
             st["staleness"] = jax.ShapeDtypeStruct((num_clients,), jnp.int32)
         return st
@@ -340,6 +388,12 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
     optimizer = optim_lib.get_optimizer(train.optimizer, train.lr)
     reducer = robust.reducer()
     use_vr = reducer.wants_state(saga_num_samples)
+    wire_fmt = robust.wire_format()
+    use_ef = wire_fmt.error_feedback
+    if wire_fmt.quantized and not robust.packed:
+        raise ValueError(
+            f"message_dtype={robust.message_dtype!r} is a quantized wire "
+            "format and needs the packed path (robust.packed=True)")
     b = robust.num_byzantine if robust.attack != "none" else 0
     honest = (jnp.arange(w) >= b).astype(jnp.float32)  # first B nodes attack
     wh = max(w - b, 1)
@@ -441,6 +495,34 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
                     out_specs=out_specs, check_vma=False,
                 )(wire_msgs, state["step"], jax.random.fold_in(key, 2), rw)
 
+        # Sender-side wire step for the gossiped channel (DESIGN.md
+        # Sec. 12): same packed transmit as the master step, applied to
+        # whichever tree goes on the wire -- gradients in gradient gossip,
+        # the half-stepped models in params gossip.  Updated in the
+        # auto-jit region before the shard_map, so both comm modes carry
+        # bit-identical residual tables; decentralized_aggregate then
+        # ships/dequantizes the (idempotently re-encoded) wire.
+        ef_state = state.get("ef")
+
+        def wire_transmit(tree):
+            nonlocal ef_state
+            if not wire_fmt.quantized:
+                return tree
+            wspec = robust.message_spec(tree, batch_ndim=1)
+            wbuf = wspec.pack(tree)
+            ef_rows = state.get("ef")
+            if use_ef and plan is not None:
+                ef_rows = participation_lib.gather_rows(state["ef"], cohort)
+            wbuf, ef_rows = wspec.transmit(wbuf, ef_rows)
+            if use_ef:
+                ef_state = (participation_lib.scatter_rows(
+                    state["ef"], cohort, ef_rows)
+                    if plan is not None else ef_rows)
+            return wspec.unpack(wbuf)
+
+        if robust.gossip != "params":
+            msgs = wire_transmit(msgs)
+
         # Honest-message variance BEFORE the gossip (first B nodes attack).
         var = telemetry.consensus_dist(msgs, honest, wh)
 
@@ -454,7 +536,7 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
             updates, opt_state = optimizer.update(msgs, state["opt"], params,
                                                   state["step"])
             half = optim_lib.apply_updates(params, updates)
-            agg = gossip_agg(half)
+            agg = gossip_agg(wire_transmit(half))
             if robust.diagnostics:
                 agg, diag = agg
             agg_move = jax.tree_util.tree_map(
@@ -473,6 +555,8 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
                      "step": state["step"] + 1}
         if use_vr:
             new_state["vr"] = vr_state
+        if use_ef:
+            new_state["ef"] = ef_state
         if plan is not None:
             new_state["staleness"] = participation_lib.tick_staleness(
                 state["staleness"], cohort)
@@ -499,6 +583,8 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
               "step": P()}
         if use_vr:
             sp["vr"] = reducer.state_specs(pspecs, wa_spec)
+        if use_ef:
+            sp["ef"] = P(wa_spec)
         if plan is not None:
             sp["staleness"] = P()   # (num_clients,) int32, replicated
         return sp
@@ -512,6 +598,11 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
         if use_vr:
             st["vr"] = reducer.state_structs(ps, num_clients,
                                              saga_num_samples)
+        if use_ef:
+            st["ef"] = jax.ShapeDtypeStruct(
+                (num_clients,
+                 robust.message_spec(ps, batch_ndim=0).padded_dim),
+                jnp.float32)
         if plan is not None:
             st["staleness"] = jax.ShapeDtypeStruct((num_clients,), jnp.int32)
         return st

@@ -27,6 +27,7 @@ from repro import telemetry
 from repro.checkpoint import CheckpointManager
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ShapeConfig, TrainConfig
+from repro.core import packing
 from repro.core.robust_step import RobustConfig
 from repro.data.synthetic import token_stream
 from repro.launch import hlo_analysis
@@ -93,10 +94,13 @@ def main() -> None:
                     help="disable the flat-packed hot path (DESIGN.md "
                     "Sec. 8) and run the pre-refactor per-leaf pipeline")
     ap.add_argument("--message-dtype", default="float32",
-                    choices=["float32", "bfloat16"],
-                    help="on-wire dtype of the packed worker messages; "
-                    "bfloat16 halves communication volume (robust rules "
-                    "still accumulate in f32)")
+                    choices=list(packing.WIRE_FORMAT_NAMES),
+                    help="wire format of the packed worker messages "
+                    "(repro.core.packing.WIRE_FORMATS): bfloat16 halves "
+                    "communication volume, int8 quarters it with per-block "
+                    "symmetric scales, sign1 sends 1-bit signs with "
+                    "per-client error feedback (robust rules still "
+                    "accumulate in f32)")
     from repro.core.variance import VR_NAMES
     ap.add_argument("--vr", default="sgd", choices=list(VR_NAMES),
                     help="variance reduction (repro.core.variance): sgd "
@@ -220,6 +224,13 @@ def main() -> None:
         if plan is not None:
             state["staleness"] = participation_lib.init_staleness(
                 plan.num_clients)
+        wspec = robust.message_spec(params0, batch_ndim=0)
+        if robust.wire_format().error_feedback:
+            # Per-client error-feedback residual for 1-bit wire formats.
+            # Resident per CLIENT (like the VR tables): sampled cohorts
+            # gather/scatter their rows alongside the SAGA/LSVRG state.
+            rows = plan.num_clients if plan is not None else w
+            state["ef"] = jnp.zeros((rows, wspec.padded_dim), jnp.float32)
         ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
         start = 0
         if args.resume:
@@ -265,7 +276,12 @@ def main() -> None:
                 cost_analysis={k: float(v) for k, v in sorted(ca.items())
                                if isinstance(v, (int, float))},
                 collective_bytes=hlo_analysis.collective_bytes(
-                    compiled.as_text()))
+                    compiled.as_text()),
+                wire={"message_dtype": args.message_dtype,
+                      "bits_per_coord": wspec.wire_format.bits_per_coord,
+                      "coords": wspec.padded_dim,
+                      "bytes_per_message": wspec.wire_bytes(),
+                      "bytes_per_round": wspec.wire_bytes() * w})
             del compiled, batch0
 
         timer = telemetry.PhaseTimer()

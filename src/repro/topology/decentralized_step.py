@@ -287,6 +287,11 @@ def make_decentralized_step(
     grad_fn = jax.grad(loss_fn)
     attack_cfg = cfg.attack_config()
     reducer = cfg.reducer()
+    wire_fmt = cfg.wire_format()
+    if wire_fmt.quantized and not cfg.packed:
+        raise ValueError(
+            f"message_dtype={cfg.message_dtype!r} is a quantized wire "
+            "format and needs the packed path (cfg.packed=True)")
     is_byz = jnp.arange(n) >= wh
 
     def sample_batch(data_w, idx):
@@ -333,8 +338,12 @@ def make_decentralized_step(
             num_workers=num_clients, pack_fn=pack_fn)
         staleness = (participation_lib.init_staleness(num_clients)
                      if plan is not None else None)
+        ef = None
+        if wire_fmt.error_feedback:
+            d = cfg.message_spec(params, batch_ndim=0).padded_dim
+            ef = jnp.zeros((num_clients, d), jnp.float32)
         return FederatedState(nodes, opt_state, vr_state,
-                              jnp.zeros((), jnp.int32), key, staleness)
+                              jnp.zeros((), jnp.int32), key, staleness, ef)
 
     def round_inputs(state):
         """The round's (data, vr rows, honest staleness, cohort) -- the
@@ -462,7 +471,7 @@ def make_decentralized_step(
             params = optim_lib.apply_updates(state.params, updates)
 
         new_state = FederatedState(params, opt_state, vr_state,
-                                   state.step + 1, key, staleness)
+                                   state.step + 1, key, staleness, state.ef)
         metrics = {"honest_variance": var,
                    "consensus_dist": consensus(params), **vr_metrics,
                    **telemetry.staleness_metrics(slot_stal)}
@@ -490,6 +499,35 @@ def make_decentralized_step(
         sw, slot_stal = sender_weights(honest_stal)
         wmask = mask if sw is None else mask * sw[None, :]
 
+        ef_state = state.ef
+
+        def wire_transmit(rows):
+            """Honest senders' wire step (DESIGN.md Sec. 12): fold in / bank
+            the error-feedback residual and return the dequantized wire rows
+            the neighbors would see.  Identity for the float formats.  The
+            per-edge Byzantine payloads stay f32 -- build_exchange replaces
+            Byzantine sender entries wholesale, so there is no honest wire
+            to constrain them to (the master paths DO re-quantize their
+            single shared attack vector)."""
+            nonlocal ef_state
+            if not wire_fmt.quantized:
+                return rows
+            ef_rows = state.ef
+            if wire_fmt.error_feedback and plan is not None:
+                ef_rows = participation_lib.gather_rows(state.ef, cohort)
+            rows, ef_rows = spec.transmit(rows, ef_rows)
+            if wire_fmt.error_feedback:
+                ef_state = (participation_lib.scatter_rows(
+                    state.ef, cohort, ef_rows)
+                    if plan is not None else ef_rows)
+            return rows
+
+        if gossip == "gradient":
+            # Gradient gossip transmits the VR-corrected gradients; params
+            # gossip keeps them local and transmits the half-stepped models
+            # (below), so only ONE of the two channels pays the wire.
+            honest = wire_transmit(honest)
+
         var = telemetry.honest_variance(honest, wh)
 
         # Byzantine node rows carry zeros until the attack replaces them.
@@ -510,7 +548,13 @@ def make_decentralized_step(
                 spec.unpack(msgs, batch_ndim=1), state.opt_state,
                 state.params, state.step)
             half = optim_lib.apply_updates(state.params, updates)
-            params, diag = flat_gossip(spec.pack(half))
+            wire = spec.pack(half)                             # (N, D)
+            # Honest nodes transmit their half-stepped model over the
+            # quantized wire (EF residuals track the PARAM channel here);
+            # sim node arrays are not mesh-sharded, so the row slice is
+            # safe (the old-XLA hazard only bites sharded worker axes).
+            wire = wire.at[:wh].set(wire_transmit(wire[:wh]))
+            params, diag = flat_gossip(wire)
         else:
             agg, diag = flat_gossip(msgs)
             updates, opt_state = optimizer.update(
@@ -518,7 +562,7 @@ def make_decentralized_step(
             params = optim_lib.apply_updates(state.params, updates)
 
         new_state = FederatedState(params, opt_state, vr_state,
-                                   state.step + 1, key, staleness)
+                                   state.step + 1, key, staleness, ef_state)
         metrics = {"honest_variance": var,
                    "consensus_dist": consensus(params), **vr_metrics,
                    **telemetry.staleness_metrics(slot_stal)}
@@ -605,6 +649,12 @@ def decentralized_aggregate(
     is_byz = jnp.arange(w) < cfg.num_byzantine
     wid = compat.axis_index(worker_axes)
     packed = getattr(cfg, "packed", True)
+    wire_fmt = packing.resolve_wire_format(
+        getattr(cfg, "message_dtype", "float32"))
+    if wire_fmt.quantized and not packed:
+        raise ValueError(
+            f"message_dtype={cfg.message_dtype!r} is a quantized wire "
+            "format and needs the packed path (cfg.packed=True)")
 
     if comm == "gather":
         mask_row = jnp.take(mask_all, wid, axis=0)[None]      # (1, S)
@@ -615,7 +665,20 @@ def decentralized_aggregate(
             # buffer, run the flat masked engine on this node's row.
             spec = cfg.message_spec(grads, batch_ndim=0)
             buf = spec.pack(grads, batch_ndim=0)
-            stacked = compat.all_gather(buf, worker_axes, axis=0, tiled=False)
+            if spec.quantized:
+                # The quantized buffer crosses the wire; the receiver
+                # dequantizes BEFORE building the exchange, so the per-edge
+                # attacks observe the dequantized honest messages -- the
+                # same view the sim path's build_exchange gets.
+                codes, scales = spec.encode(buf, axis_names=model_axes)
+                stacked = spec.decode(
+                    compat.all_gather(codes, worker_axes, axis=0,
+                                      tiled=False),
+                    compat.all_gather(scales, worker_axes, axis=0,
+                                      tiled=False))
+            else:
+                stacked = compat.all_gather(buf, worker_axes, axis=0,
+                                            tiled=False)
             exchange = build_exchange(stacked, attack_cfg, mask_row, is_byz,
                                       k, spec=spec)           # (1, S, D)
             agg = masked_aggregate_flat(
@@ -654,10 +717,28 @@ def decentralized_aggregate(
     flat, unflatten, leaf_sizes = _flatten_concat(grads)
     p = flat.shape[0]
     pad = (-p) % w
-    flat = jnp.pad(flat, (0, pad))
-    z_local = compat.all_to_all(flat.reshape(w, -1), worker_axes,
-                                split_axis=0, concat_axis=0, tiled=False)
-    z_local = z_local.reshape(w, -1)                          # (S, chunk)
+    if wire_fmt.quantized:
+        # Quantized coordinates through the first all_to_all (the comm
+        # volume win): encode the full local message (block stats over the
+        # model axes), ship int8 slices + the (S, num_leaves) scales, and
+        # dequantize this device's slice per-coordinate BEFORE the per-edge
+        # attack -- so attacks observe the dequantized honest wire.  The
+        # second all_to_all (each receiver collecting its own aggregate)
+        # routes f32 results, unchanged.
+        wspec = packing.pack_spec(grads, batch_ndim=0, wire=wire_fmt)
+        codes, scales = wspec.encode(flat, axis_names=model_axes)
+        z_codes = compat.all_to_all(
+            jnp.pad(codes, (0, pad)).reshape(w, -1), worker_axes,
+            split_axis=0, concat_axis=0, tiled=False).reshape(w, -1)
+        z_local = packing.dequantize_slice(
+            z_codes,
+            compat.all_gather(scales, worker_axes, axis=0, tiled=False),
+            _local_leaf_ids(leaf_sizes, pad, w, worker_axes))
+    else:
+        flat = jnp.pad(flat, (0, pad))
+        z_local = compat.all_to_all(flat.reshape(w, -1), worker_axes,
+                                    split_axis=0, concat_axis=0, tiled=False)
+        z_local = z_local.reshape(w, -1)                      # (S, chunk)
     comm_axes = tuple(worker_axes) + tuple(model_axes)
     k = jax.random.fold_in(key, wid) if key is not None else None
     exchange = build_exchange(z_local, attack_cfg, mask_all,

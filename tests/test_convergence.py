@@ -156,6 +156,27 @@ def test_lsvrg_matches_saga_floor_and_beats_sgd(problem, attack):
     assert gaps["lsvrg"] < factor * gaps["sgd"], (attack, gaps)
 
 
+@pytest.mark.slow
+def test_quantized_wire_keeps_convergence_floor(problem):
+    """ISSUE 9 tier-2 gate (DESIGN.md Sec. 12): quantized wire formats
+    keep Byrd-SAGA's error floor under sign_flip.  int8's per-block
+    symmetric scales perturb each coordinate by at most amax/254, leaving
+    the floor within 2x of full-precision; sign1 re-sends its much larger
+    quantization error through the per-client error-feedback residual, so
+    it still converges to a floor within 4x rather than stalling at the
+    compressor's bias."""
+    loss, batch, f_star, wd, _ = problem
+    gaps = {}
+    for dtype in ("float32", "int8", "sign1"):
+        gaps[dtype] = gap(loss, batch, f_star, run(
+            loss, wd, RobustConfig(aggregator="geomed", vr="saga",
+                                   attack="sign_flip", num_byzantine=B,
+                                   message_dtype=dtype))[0])
+    assert gaps["int8"] < 2 * max(gaps["float32"], 0.03), gaps
+    assert gaps["sign1"] < 4 * max(gaps["float32"], 0.03), gaps
+    assert gaps["sign1"] < 0.2, f"sign1+EF failed outright: {gaps}"
+
+
 def test_geomed_groups_low_byzantine(problem):
     """geomed_groups trades breakdown point for variance reduction: with G
     groups it tolerates < G/2 poisoned groups, so test it in its design

@@ -28,18 +28,24 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # (optionally) required keys of nested top-level objects.  Extra keys are
 # allowed everywhere -- the registry pins a floor, not an exact shape.
 SCHEMAS = {
-    "BENCH_step/v3": {
+    "BENCH_step/v4": {
         "top": {"schema", "jax_version", "platform", "device_count",
                 "sim_workers", "gate", "rows"},
+        # v4: gate cells are keyed by message_dtype too (keyed_by pins the
+        # key fields), and every row names its wire format.
         "nested": {"gate": {"speedup_cells", "speedup_floor",
-                            "noise_margin"}},
+                            "noise_margin", "keyed_by"}},
         "row": {"path", "aggregator", "packed", "num_workers",
-                "num_byzantine", "vr", "attack", "vr_state_bytes",
-                "leaves", "coords", "steps", "reps", "wall_us_mean",
-                "wall_us_min"},
-        # Only the sim path carries per-client VR accounting; the
-        # distributed-lowering rows legitimately omit these.
-        "row_when": {("path", "sim"): {"num_samples", "num_clients"}},
+                "num_byzantine", "vr", "attack", "message_dtype",
+                "vr_state_bytes", "leaves", "coords", "steps", "reps",
+                "wall_us_mean", "wall_us_min"},
+        # Only the sim/grid paths carry per-client VR accounting; the
+        # distributed-lowering rows legitimately omit these.  Grid rows
+        # (the v4 attack x wire-format robustness characterization)
+        # additionally score the run by its final honest-data loss.
+        "row_when": {("path", "sim"): {"num_samples", "num_clients"},
+                     ("path", "grid"): {"num_samples", "num_clients",
+                                        "final_honest_loss"}},
     },
     "BENCH_comm_modes/v1": {
         "top": {"schema", "jax_version", "platform", "device_count",
