@@ -21,6 +21,12 @@ federation, each cell reporting the final honest-data loss of a short
 Byrd-SAGA run -- the quantized wire formats (int8 per-block scales,
 sign1 + error feedback) must keep every rule's error floor, not just
 survive attack-free.  Gate keys carry ``message_dtype`` since v4.
+Schema v5 adds the fault-containment grid (DESIGN.md Sec. 13):
+fault attack (nan / inf_overflow / bitflip) x robust rule x guards
+on/off (``path="fault"`` rows), each cell reporting ``loss_finite``
+plus the final honest loss when it IS finite -- the in-graph guards
+must keep every rule's run finite under faults that destroy the
+unguarded step, at the usual wall-clock readout.
 
     PYTHONPATH=src python benchmarks/bench_step.py [--quick] [--gate] \\
         [--steps N] [--reps R] [--out BENCH_step.json]
@@ -67,7 +73,7 @@ from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
 from repro.optim import get_optimizer
 
-SCHEMA = "BENCH_step/v4"
+SCHEMA = "BENCH_step/v5"
 
 QUICK_AGGREGATORS = ("geomed", "krum", "mean")
 # Robustness characterization grid (schema v4, DESIGN.md Sec. 12): every
@@ -77,6 +83,12 @@ GRID_ATTACKS = ("none", "gaussian", "sign_flip", "straggler")
 GRID_DTYPES = ("float32", "bfloat16", "int8", "sign1")
 GRID_AGGREGATORS = ("geomed", "krum", "trimmed_mean")
 GRID_STEPS = 150
+# Fault-containment grid (schema v5, DESIGN.md Sec. 13): the fault
+# injections that produce garbage rows rather than adversarial ones, run
+# with the in-graph guards off and on.  bitflip_prob is raised well past
+# the registry default so the D=22 logreg rows actually take hits.
+FAULT_ATTACKS = ("nan", "inf_overflow", "bitflip")
+FAULT_BITFLIP_PROB = 0.5
 # Cohort-size scaling cells (schema v3): the packed sim geomed/saga step
 # with num_clients virtual clients feeding the same 16-slot cohort --
 # gather/scatter + staleness weighting cost as C grows past W.
@@ -260,6 +272,62 @@ def bench_grid(wd, batch, steps: int = GRID_STEPS) -> list:
     return rows
 
 
+def bench_fault(wd, batch, steps: int = GRID_STEPS) -> list:
+    """The schema-v5 fault-containment grid: fault x rule x guards cells on
+    the same logreg federation as :func:`bench_grid`.  Guards-on runs must
+    stay finite (the poisoned rows get aggregation weight exactly 0);
+    guards-off nan runs go non-finite, which the row records as
+    ``loss_finite`` instead of a NaN loss value the schema checker (and
+    JSON) cannot represent."""
+    import math as _math
+
+    from repro.data import logreg_loss
+    loss = logreg_loss(0.01)
+    j = jax.tree_util.tree_leaves(wd)[0].shape[1]
+    rows = []
+    for name in GRID_AGGREGATORS:
+        for attack in FAULT_ATTACKS:
+            for guards in (False, True):
+                cfg = RobustConfig(aggregator=name, vr="saga", attack=attack,
+                                   num_byzantine=SIM_BYZANTINE,
+                                   weiszfeld_iters=32, trim=SIM_BYZANTINE,
+                                   bitflip_prob=FAULT_BITFLIP_PROB,
+                                   guards=guards)
+                init_fn, step_fn = make_federated_step(
+                    loss, wd, cfg, get_optimizer("sgd", 0.05))
+                state = init_fn({"w": jnp.zeros((22,), jnp.float32)},
+                                jax.random.PRNGKey(3))
+                jstep = steps_lib.compile_train_step(step_fn)
+                state = jstep(state)[0]          # compile + warm
+                t0 = time.perf_counter()
+                for _ in range(steps):
+                    state, _ = jstep(state)
+                jax.block_until_ready(state.params["w"])
+                wall_us = (time.perf_counter() - t0) / steps * 1e6
+                final = float(loss(state.params, batch))
+                finite = _math.isfinite(final)
+                row = {
+                    "path": "fault", "aggregator": name, "packed": True,
+                    "num_workers": SIM_HONEST + SIM_BYZANTINE,
+                    "num_byzantine": SIM_BYZANTINE, "vr": cfg.vr,
+                    "attack": attack, "message_dtype": cfg.message_dtype,
+                    "guards": guards, "loss_finite": finite,
+                    "vr_state_bytes": sum(
+                        int(l.size) * l.dtype.itemsize
+                        for l in jax.tree_util.tree_leaves(state.vr)),
+                    "num_samples": j, "num_clients": 0,
+                    "leaves": 1, "coords": 22, "steps": steps, "reps": 1,
+                    "wall_us_mean": wall_us, "wall_us_min": wall_us,
+                }
+                if finite:
+                    row["final_honest_loss"] = final
+                rows.append(row)
+                print(f"  fault   {name:14s} {attack:12s} "
+                      f"guards={guards!s:5s} loss="
+                      f"{final if finite else float('nan'):.4f}")
+    return rows
+
+
 def run_gate(rows) -> list:
     """The step-level perf gate: packed must never lose beyond noise, and
     must beat the floor on the aggregation-dominated sim cells.  Gates on
@@ -398,6 +466,9 @@ def main() -> None:
         # Robustness grid cells (v4): attack x wire format x rule.
         rows += bench_grid(wd, {"a": data.x, "b": data.y},
                            steps=GRID_STEPS if not args.quick else 100)
+        # Fault-containment cells (v5): fault x rule x guards.
+        rows += bench_fault(wd, {"a": data.x, "b": data.y},
+                            steps=GRID_STEPS if not args.quick else 100)
         if not args.skip_distributed:
             rows += spawn_distributed(args)
 
@@ -423,7 +494,7 @@ def main() -> None:
     print("|------|------------|----|-------------|-----------|---------|-------------|")
     by_key = {(r["path"], r["aggregator"], r["vr"],
                r.get("num_clients", 0), r["packed"]): r
-              for r in rows if r["path"] != "grid"}
+              for r in rows if r["path"] not in ("grid", "fault")}
     for (path, name, vr, nc, packed), r in sorted(by_key.items()):
         if packed:
             continue
@@ -451,6 +522,19 @@ def main() -> None:
                 vals = " | ".join(f"{cell[(name, attack, d)]:.4f}"
                                   for d in GRID_DTYPES)
                 print(f"| {name} | {attack} | {vals} |")
+
+    fault = [r for r in rows if r["path"] == "fault"]
+    if fault:
+        print("\n| aggregator | fault | guards off | guards on |"
+              "  (final honest loss; -- = non-finite)")
+        print("|------------|-------|------------|-----------|")
+        cell = {(r["aggregator"], r["attack"], r["guards"]):
+                (f"{r['final_honest_loss']:.4f}" if r["loss_finite"]
+                 else "--") for r in fault}
+        for name in GRID_AGGREGATORS:
+            for attack in FAULT_ATTACKS:
+                print(f"| {name} | {attack} | {cell[(name, attack, False)]} "
+                      f"| {cell[(name, attack, True)]} |")
 
     if args.gate:
         failures = run_gate(rows)

@@ -6,13 +6,24 @@ state -- SAGA tables, lsvrg snapshots/anchors, whatever the configured
 to a single ``.npz`` with a JSON sidecar describing the tree structure,
 and restores it bit-exactly.  Supports atomic writes and a rolling
 ``keep`` window for periodic training checkpoints.
+
+Integrity + recovery (DESIGN.md Sec. 13): the manager keeps a
+``manifest.json`` next to the checkpoints with a sha256 content checksum
+per file and an optional ``last_good`` step marker.  ``restore_latest``
+verifies the checksum before deserializing and walks newest->oldest past
+corrupted files (truncated npz, bit rot) with a warning instead of
+crashing the resume; ``mark_good`` / ``restore_last_good`` give the
+host-side rollback state machine (``launch/health.py``) a verified
+anchor that the rolling GC never deletes.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
 import tempfile
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -88,8 +99,17 @@ def _flatten_with_paths_struct(tree: Pytree) -> dict[str, Any]:
     return flat
 
 
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
 class CheckpointManager:
-    """Rolling checkpoint directory: ``step_000123.npz``, keep last N."""
+    """Rolling checkpoint directory: ``step_000123.npz``, keep last N (plus
+    the ``last_good`` anchor, which the GC never deletes)."""
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
@@ -99,11 +119,48 @@ class CheckpointManager:
     def _path(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:08d}.npz")
 
+    # -- manifest (checksums + last-good marker) -------------------------
+
+    @property
+    def _manifest_path(self) -> str:
+        return os.path.join(self.directory, "manifest.json")
+
+    def _manifest(self) -> dict:
+        try:
+            with open(self._manifest_path) as f:
+                m = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            m = {}
+        m.setdefault("checksums", {})
+        m.setdefault("last_good", None)
+        return m
+
+    def _write_manifest(self, m: dict) -> None:
+        # Atomic like the checkpoints themselves: a crash mid-write must
+        # not destroy the previous (valid) manifest.
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(m, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self._manifest_path)
+
     def save(self, step: int, tree: Pytree) -> str:
         p = self._path(step)
         save(p, tree)
+        m = self._manifest()
+        m["checksums"][os.path.basename(p)] = _sha256_file(p)
+        self._write_manifest(m)
         self._gc()
         return p
+
+    def verify(self, step: int) -> bool:
+        """True when the checkpoint file exists and matches its manifest
+        checksum (legacy files with no recorded checksum pass)."""
+        p = self._path(step)
+        if not os.path.exists(p):
+            return False
+        expect = self._manifest()["checksums"].get(os.path.basename(p))
+        return expect is None or _sha256_file(p) == expect
 
     def latest_step(self) -> Optional[int]:
         steps = sorted(self.all_steps())
@@ -138,16 +195,72 @@ class CheckpointManager:
         return self.save(step, state)
 
     def restore_latest(self, like: Pytree) -> tuple[Optional[int], Pytree]:
-        """Restore the newest checkpoint into the structure of ``like``
-        (arrays or ShapeDtypeStructs).  Returns ``(step, state)``, or
-        ``(None, like)`` when the directory holds no checkpoint yet --
-        callers can start fresh without special-casing."""
-        step = self.latest_step()
-        if step is None:
-            return None, like
-        return step, self.restore(step, like)
+        """Restore the newest VALID checkpoint into the structure of
+        ``like`` (arrays or ShapeDtypeStructs).  Each candidate's content
+        checksum is verified against the manifest before deserializing; a
+        corrupted or unreadable file (truncated npz, bit rot) is skipped
+        with a warning and the next-older checkpoint is tried.  Returns
+        ``(step, state)``, or ``(None, like)`` when no restorable
+        checkpoint exists -- callers can start fresh without
+        special-casing."""
+        for step in reversed(self.all_steps()):
+            if not self.verify(step):
+                warnings.warn(
+                    f"checkpoint {self._path(step)} fails its manifest "
+                    f"checksum; skipping to the previous checkpoint")
+                continue
+            try:
+                return step, self.restore(step, like)
+            except Exception as e:  # truncated/corrupt npz, missing leaves
+                warnings.warn(
+                    f"checkpoint {self._path(step)} is unreadable "
+                    f"({type(e).__name__}: {e}); skipping to the previous "
+                    f"checkpoint")
+        return None, like
+
+    # -- last-good anchor (host-side rollback, launch/health.py) ---------
+
+    def mark_good(self, step: int) -> None:
+        """Record ``step`` as the last KNOWN-GOOD checkpoint (the run was
+        healthy when it was taken).  The GC never deletes it."""
+        if not os.path.exists(self._path(step)):
+            raise FileNotFoundError(f"cannot mark step {step} good: "
+                                    f"{self._path(step)} does not exist")
+        m = self._manifest()
+        m["last_good"] = int(step)
+        self._write_manifest(m)
+
+    def last_good_step(self) -> Optional[int]:
+        step = self._manifest()["last_good"]
+        if step is None or not os.path.exists(self._path(step)):
+            return None
+        return int(step)
+
+    def restore_last_good(self, like: Pytree) -> tuple[Optional[int], Pytree]:
+        """Restore the last checkpoint marked good (verified), or fall back
+        to :meth:`restore_latest`'s newest-valid walk when no good marker
+        exists."""
+        step = self.last_good_step()
+        if step is not None and self.verify(step):
+            try:
+                return step, self.restore(step, like)
+            except Exception as e:
+                warnings.warn(
+                    f"last-good checkpoint {self._path(step)} is unreadable "
+                    f"({type(e).__name__}: {e}); falling back to the "
+                    f"newest valid checkpoint")
+        return self.restore_latest(like)
 
     def _gc(self) -> None:
         steps = self.all_steps()
-        for s in steps[: -self.keep] if self.keep else []:
+        good = self._manifest()["last_good"]
+        doomed = [s for s in (steps[: -self.keep] if self.keep else [])
+                  if s != good]
+        for s in doomed:
             os.unlink(self._path(s))
+        if doomed:
+            m = self._manifest()
+            live = {f"step_{s:08d}.npz" for s in self.all_steps()}
+            m["checksums"] = {k: v for k, v in m["checksums"].items()
+                              if k in live}
+            self._write_manifest(m)

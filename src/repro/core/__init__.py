@@ -14,9 +14,17 @@ from repro.core.aggregators import (
 )
 from repro.core.attacks import (
     ATTACK_NAMES,
+    FAULT_ATTACKS,
     STALENESS_ATTACKS,
     AttackConfig,
     apply_attack,
+)
+from repro.core.guards import (
+    guard_mask,
+    init_health,
+    pairwise_guard_mask,
+    round_verdict,
+    sanitize_rows,
 )
 from repro.core.geomed import (
     geomed_objective,

@@ -34,6 +34,28 @@ Beyond-paper attacks (used to stress the aggregators harder):
                        without weights see an all-zeros outlier row.
 * ``none``          -- no Byzantine rows appended (W = W_h).
 
+Fault-injection attacks (``FAULT_ATTACKS``, DESIGN.md Sec. 13): these step
+OUTSIDE the paper's threat model -- the payloads are not finite vectors a
+statistical rule can outvote, they are the hardware/serialization faults
+the ``repro.core.guards`` containment layer exists for:
+
+* ``nan``           -- every Byzantine coordinate is NaN: one such row
+                       poisons every distance computation and the
+                       Weiszfeld iteration itself.
+* ``inf_overflow``  -- huge finite payload (+-1e30, signed like the honest
+                       mean): finite, so it passes NaN checks, but its
+                       squared norms overflow f32 and the magnitude gate
+                       (not the non-finite detector) must catch it.
+* ``bitflip``       -- seeded coordinate corruption: a deterministic
+                       integer-hash of (row, leaf, coordinate, seed) picks
+                       ~``bitflip_prob`` of the coordinates and XORs the
+                       high exponent bit of their f32 encoding (a memory
+                       bitflip proxy: values blow up by ~2^128 or become
+                       Inf/NaN).  No ``jax.random`` -- the hash makes the
+                       corruption layout- and sharding-invariant, so
+                       packed/per-leaf and sharded/replicated runs corrupt
+                       the SAME coordinates.
+
 Flat-packed execution (DESIGN.md Sec. 8): every attack is a composition of
 axis-0 reductions over the worker axis and elementwise ops, so the SAME
 code runs on a packed ``(W, D)`` message buffer (a single-leaf pytree) --
@@ -69,6 +91,16 @@ class AttackConfig:
     alie_z: float = 1.0
     ipm_eps: float = 0.5
     straggler_k: int = 4
+    # Fault-injection knobs (module docstring): per-coordinate corruption
+    # probability and hash seed of the ``bitflip`` attack.
+    bitflip_prob: float = 0.02
+    bitflip_seed: int = 0
+
+
+# Magnitude of the ``inf_overflow`` payload: finite in f32 (and bf16), but
+# its squared norm overflows to +inf, which is the failure mode the
+# guards' magnitude gate exists for.
+OVERFLOW_MAGNITUDE = 1e30
 
 
 def _honest_mean(honest: Pytree) -> Pytree:
@@ -178,6 +210,165 @@ def none_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array) -> Pytree:
     return honest
 
 
+# ---------------------------------------------------------------------------
+# Fault-injection attacks (module docstring; DESIGN.md Sec. 13).
+# ---------------------------------------------------------------------------
+
+def _fault_fill(value_fn, mean: Pytree,
+                spec: Optional[packing.PackSpec]) -> Pytree:
+    """Coordinate-wise fault payload built from the honest-mean rows.  On
+    the packed path the padding coordinates stay 0 (they are zero in every
+    honest row, so filling them would make the packed trajectory diverge
+    from the per-leaf one through the full-vector distance geometry)."""
+    if spec is None:
+        return jax.tree_util.tree_map(value_fn, mean)
+
+    def one(m):
+        keep = jax.lax.iota(jnp.int32, spec.padded_dim) < spec.dim
+        return jnp.where(keep, value_fn(m), jnp.zeros_like(m))
+
+    return jax.tree_util.tree_map(one, mean)
+
+
+def _hash01(row_ids: jnp.ndarray, n: int, salt: int) -> jnp.ndarray:
+    """(R, n) deterministic pseudo-uniforms in [0, 1) from an integer hash
+    of (row id, coordinate, salt).  Wrapping uint32 arithmetic only -- no
+    ``jax.random`` -- so the draw is independent of sharding, jit
+    partitioning and buffer layout (module docstring)."""
+    r = row_ids.astype(jnp.uint32)[:, None]
+    c = jax.lax.iota(jnp.uint32, n)[None, :]
+    h = (r * jnp.uint32(0x9E3779B9) + c * jnp.uint32(0x85EBCA6B)
+         + jnp.uint32(salt & 0xFFFFFFFF) * jnp.uint32(0xC2B2AE35))
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> jnp.uint32(16))
+    return h.astype(jnp.float32) / jnp.float32(4294967296.0)
+
+
+def _flip_exponent_bit(x: jnp.ndarray) -> jnp.ndarray:
+    """XOR the high exponent bit of the f32 encoding: magnitudes jump by
+    ~2^128 (values in [1, 4) become Inf/NaN) -- the memory-corruption
+    proxy the ``bitflip`` attack injects."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return jax.lax.bitcast_convert_type(bits ^ jnp.uint32(1 << 30),
+                                        jnp.float32)
+
+
+def _bitflip_segment(rows: jnp.ndarray, row_ids: jnp.ndarray,
+                     leaf_index: int, prob: float, seed: int) -> jnp.ndarray:
+    """Corrupt one leaf's (R, n) flat rows at the hash-selected coords."""
+    u = _hash01(row_ids, rows.shape[-1], seed * 1000003 + leaf_index)
+    return jnp.where(u < prob, _flip_exponent_bit(rows), rows)
+
+
+def bitflip_rows(mean: Pytree, row_ids: jnp.ndarray, *, prob: float,
+                 seed: int, spec: Optional[packing.PackSpec] = None
+                 ) -> Pytree:
+    """Byzantine rows for the ``bitflip`` attack: the honest mean broadcast
+    to ``len(row_ids)`` rows, with the exponent bit of ~``prob`` of each
+    row's coordinates flipped.  ``row_ids`` are the rows' RELATIVE
+    Byzantine indices (the hash input), so the append-last sim layout and
+    the replace-first distributed layout corrupt identically.  With
+    ``spec`` the rows are a packed buffer and the hash runs per ORIGINAL
+    leaf segment (spec.boundaries), keeping packed and per-leaf
+    trajectories bit-identical; padding coordinates are never corrupted."""
+    r = row_ids.shape[0]
+
+    if spec is not None:
+        def one(m):
+            rows = jnp.broadcast_to(m[None].astype(jnp.float32),
+                                    (r,) + m.shape)
+            parts = [_bitflip_segment(rows[:, a:b], row_ids, i, prob, seed)
+                     for i, (a, b) in enumerate(spec.boundaries)]
+            if spec.pad:
+                parts.append(rows[:, spec.dim:])
+            return jnp.concatenate(parts, axis=-1).astype(m.dtype)
+        return jax.tree_util.tree_map(one, mean)
+
+    leaves, treedef = jax.tree_util.tree_flatten(mean)
+    out = []
+    for i, m in enumerate(leaves):
+        rows = jnp.broadcast_to(m[None].astype(jnp.float32), (r,) + m.shape)
+        flat = _bitflip_segment(rows.reshape(r, -1), row_ids, i, prob, seed)
+        out.append(flat.reshape((r,) + m.shape).astype(m.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def bitflip_edges(mean: Pytree, sender_ids: jnp.ndarray, *, prob: float,
+                  seed: int, spec: Optional[packing.PackSpec] = None
+                  ) -> Pytree:
+    """Per-edge ``bitflip`` payloads for the decentralized exchange:
+    (R, S, ...) leaves where Byzantine sender ``s``'s message toward
+    receiver ``r`` is receiver ``r``'s neighborhood mean with the exponent
+    bit of ~``prob`` of its coordinates flipped.  The flip coordinates are
+    hashed per (SENDER, coordinate), so a sender corrupts the same
+    positions toward every receiver (corruption, not equivocation).  With
+    ``spec`` the hash runs per original leaf segment and padding is never
+    corrupted -- the packed/per-leaf trajectory pins hold exactly as for
+    :func:`bitflip_rows`."""
+    s = sender_ids.shape[0]
+
+    def corrupt(rows, u):                  # rows (R, S, n), u (S, n)
+        return jnp.where(u[None] < prob, _flip_exponent_bit(rows), rows)
+
+    if spec is not None:
+        def one(m):                        # m: (R, padded_dim)
+            r = m.shape[0]
+            rows = jnp.broadcast_to(m[:, None].astype(jnp.float32),
+                                    (r, s) + m.shape[1:])
+            parts = [corrupt(rows[..., a:b],
+                             _hash01(sender_ids, b - a, seed * 1000003 + i))
+                     for i, (a, b) in enumerate(spec.boundaries)]
+            if spec.pad:
+                parts.append(rows[..., spec.dim:])
+            return jnp.concatenate(parts, axis=-1).astype(m.dtype)
+        return jax.tree_util.tree_map(one, mean)
+
+    leaves, treedef = jax.tree_util.tree_flatten(mean)
+    out = []
+    for i, m in enumerate(leaves):
+        r = m.shape[0]
+        rows = jnp.broadcast_to(m[:, None].astype(jnp.float32),
+                                (r, s) + m.shape[1:]).reshape(r, s, -1)
+        flat = corrupt(rows, _hash01(sender_ids, rows.shape[-1],
+                                     seed * 1000003 + i))
+        out.append(flat.reshape((r, s) + m.shape[1:]).astype(m.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def nan_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array,
+               spec: Optional[packing.PackSpec] = None) -> Pytree:
+    """Every Byzantine coordinate is NaN (module docstring)."""
+    del key
+    byz = _fault_fill(lambda m: jnp.full_like(m, jnp.nan),
+                      _honest_mean(honest), spec)
+    return _append(honest, _broadcast_rows(byz, cfg.num_byzantine))
+
+
+def inf_overflow_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array,
+                        spec: Optional[packing.PackSpec] = None) -> Pytree:
+    """Huge finite payload signed like the honest mean (module docstring)."""
+    del key
+    byz = _fault_fill(
+        lambda m: jnp.where(m < 0, -OVERFLOW_MAGNITUDE, OVERFLOW_MAGNITUDE
+                            ).astype(m.dtype),
+        _honest_mean(honest), spec)
+    return _append(honest, _broadcast_rows(byz, cfg.num_byzantine))
+
+
+def bitflip_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array,
+                   spec: Optional[packing.PackSpec] = None) -> Pytree:
+    """Seeded coordinate corruption of the honest mean (module docstring)."""
+    del key
+    byz = bitflip_rows(_honest_mean(honest),
+                       jnp.arange(cfg.num_byzantine, dtype=jnp.int32),
+                       prob=cfg.bitflip_prob, seed=cfg.bitflip_seed,
+                       spec=spec)
+    return _append(honest, byz)
+
+
 # name -> attack.  The SINGLE source of truth: ``ATTACK_NAMES`` and every
 # unknown-name error derive from this dict, so registering here is the one
 # place a new attack is added (same pattern as the aggregator registry).
@@ -190,6 +381,9 @@ _ATTACKS: dict[str, Attack] = {
     "ipm": ipm_attack,
     "straggler": straggler_attack,
     "dropout": dropout_attack,
+    "nan": nan_attack,
+    "inf_overflow": inf_overflow_attack,
+    "bitflip": bitflip_attack,
 }
 
 ATTACK_NAMES = tuple(_ATTACKS)
@@ -198,6 +392,18 @@ ATTACK_NAMES = tuple(_ATTACKS)
 # builders switch to the staleness-weighted aggregation path when one of
 # these (or partial participation) is active.
 STALENESS_ATTACKS = ("straggler", "dropout")
+
+# Fault-injection attacks (module docstring): payloads with non-finite or
+# norm-overflowing coordinates that step outside the paper's threat model.
+# Tests that assert finite messages for statistical attacks exempt these;
+# the repro.core.guards containment layer is what handles them.
+FAULT_ATTACKS = ("nan", "inf_overflow", "bitflip")
+
+# Attacks whose byz payload construction is packed-layout aware: they take
+# the optional PackSpec so packed and per-leaf trajectories stay
+# bit-identical (gaussian mirrors its draws per leaf; the fault attacks
+# keep padding coordinates at zero and hash per leaf segment).
+_SPEC_AWARE = ("gaussian", "nan", "inf_overflow", "bitflip")
 
 
 def _check_attack_name(name: str) -> None:
@@ -216,8 +422,8 @@ def apply_attack(cfg: AttackConfig, honest: Pytree, key: jax.Array,
     _check_attack_name(cfg.name)
     if cfg.num_byzantine == 0:
         return honest
-    if cfg.name == "gaussian":
-        return gaussian_attack(cfg, honest, key, spec)
+    if cfg.name in _SPEC_AWARE:
+        return _ATTACKS[cfg.name](cfg, honest, key, spec)
     return _ATTACKS[cfg.name](cfg, honest, key)
 
 
@@ -269,6 +475,19 @@ def apply_attack_stacked(cfg: AttackConfig, msgs: Pytree, key: jax.Array,
         byz = jax.tree_util.tree_map(
             lambda m, s: m + cfg.alie_z * jnp.sqrt(jnp.maximum(s - m * m, 0.0)),
             mean, sq)
+    elif name == "nan":
+        byz = _fault_fill(lambda m: jnp.full_like(m, jnp.nan), mean, spec)
+    elif name == "inf_overflow":
+        byz = _fault_fill(
+            lambda m: jnp.where(m < 0, -OVERFLOW_MAGNITUDE,
+                                OVERFLOW_MAGNITUDE).astype(m.dtype),
+            mean, spec)
+    elif name == "bitflip":
+        # Relative Byzantine index == row index (the byz rows are rows
+        # 0..B-1 here), matching the sim path's appended-row indices.
+        byz = bitflip_rows(mean, jnp.arange(w, dtype=jnp.int32),
+                           prob=cfg.bitflip_prob, seed=cfg.bitflip_seed,
+                           spec=spec)
     elif name == "gaussian":
         std = jnp.sqrt(cfg.gaussian_variance)
         if spec is not None:

@@ -1,0 +1,279 @@
+"""In-graph fault containment + round-health verdicts (DESIGN.md Sec. 13).
+
+The paper's threat model assumes Byzantine messages are *finite* vectors
+the geometric median can outvote -- but a single NaN/Inf row poisons every
+distance computation (and the Weiszfeld iteration itself).  This module is
+the containment layer underneath the statistical aggregators:
+
+* :func:`guard_mask` -- per-row message sanitization computed inside the
+  compiled step: non-finite detection (any NaN/Inf coordinate) plus a
+  robust magnitude gate (per-round median-of-norms x a static multiplier)
+  produce a (W,) validity mask in {0, 1}.  The mask folds multiplicatively
+  into the existing ``row_weights`` of the flat/masked/sharded engines, so
+  quarantined rows get weight exactly 0 -- no slicing, no new engine code.
+
+* :func:`guarded_flat_call` -- the fold itself, with a bit-identity
+  guarantee: an honest-only round with guards ON produces the SAME BITS as
+  guards OFF.  The all-ones-weight path of the flat engines is NOT
+  bit-identical to the unweighted path (the weighted median picks the
+  lower-middle row where ``jnp.median`` averages the two middles), so when
+  no base weights exist the call evaluates both the unweighted and the
+  mask-weighted rule and selects with one ``jnp.where`` on the replicated
+  "every row valid" scalar.  Both branches run unconditionally on every
+  device (no ``lax.cond`` around collectives), and any NaN in the
+  discarded branch is dropped by the select.  When base weights are
+  already active, ``rw * 1.0 == rw`` exactly and the fold is free.
+
+* :func:`sanitize_rows` -- zero the quarantined rows before they meet a
+  weighted engine.  Weight 0 removes a row's *mass* but ``0 * NaN == NaN``
+  inside the weighted sums, so containment needs the payload gone too;
+  ``jnp.where(mask, z, 0)`` with an all-ones mask returns ``z`` bit-exact.
+
+* :func:`round_verdict` -- the round-health layer: accept/reject each
+  round in-graph from the aggregate's norm (non-finite => reject;
+  z-score vs an EMA mean/second-moment carried in the train state =>
+  reject).  A rejected round holds params/opt/VR state via
+  :func:`select_tree` (pure ``jnp.where`` -- no host sync, donation-safe)
+  and increments the ``rejected_rounds`` counter inside the health vector.
+
+Everything here is jnp + ``compat.psum`` only: the same helpers run in
+the single-host simulation (no axis names), under auto-sharded jit, and
+inside ``shard_map`` where rows or coordinates are device-local and the
+per-row partial sums must be restored with psums over ``axis_names``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+
+Pytree = Any
+
+# Rows with norms at/below this floor are never magnitude-quarantined, so a
+# converged round of near-zero gradients cannot gate itself (the median of
+# norms may be ~0 while an honest straggler row is merely small).
+_NORM_FLOOR = 1e-12
+
+# Layout of the (4,) f32 health vector carried in the train state:
+# [EMA of aggregate norm, EMA of squared norm, rejected rounds, accepted
+# rounds].  A flat f32 vector (not a NamedTuple) keeps the train-state
+# pytree a single extra leaf -- trivially checkpointable and shard-spec'd
+# as replicated.
+HEALTH_WIDTH = 4
+
+
+def init_health() -> jnp.ndarray:
+    """Zeroed (HEALTH_WIDTH,) health vector for a fresh run."""
+    return jnp.zeros((HEALTH_WIDTH,), jnp.float32)
+
+
+def _row_stats(msgs: Pytree, axis_names: Sequence[str]
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row (non-finite coordinate count, squared norm) over every leaf
+    of ``msgs`` (leading axis W on each leaf), psum'd over ``axis_names``
+    when the coordinates are sharded.  Non-finite coordinates contribute 0
+    to the squared norm so the norm itself stays finite-or-inf-by-magnitude
+    (an inf norm means genuinely huge finite values, which the gate
+    quarantines via ``inf <= limit`` being False)."""
+    bad = None
+    sq = None
+    for z in jax.tree_util.tree_leaves(msgs):
+        zf = z.astype(jnp.float32).reshape(z.shape[0], -1)
+        finite = jnp.isfinite(zf)
+        zb = jnp.sum((~finite).astype(jnp.float32), axis=1)
+        zs = jnp.sum(jnp.where(finite, zf, 0.0) ** 2, axis=1)
+        bad = zb if bad is None else bad + zb
+        sq = zs if sq is None else sq + zs
+    if axis_names:
+        bad = compat.psum(bad, tuple(axis_names))
+        sq = compat.psum(sq, tuple(axis_names))
+    return bad, sq
+
+
+def _masked_median(x: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Median of ``x`` over the rows where ``valid`` -- invalid rows sort
+    to +inf and the two middle indices are picked from the valid count.
+    With zero valid rows this returns +inf (the magnitude gate then passes
+    nothing, which is what an all-poisoned round deserves)."""
+    s = jnp.sort(jnp.where(valid, x, jnp.inf))
+    n = jnp.sum(valid.astype(jnp.int32))
+    lo = jnp.maximum((n - 1) // 2, 0)
+    hi = n // 2
+    return 0.5 * (s[lo] + s[hi])
+
+
+def guard_mask(msgs: Pytree, *, multiplier: float = 10.0,
+               base_weights: Optional[jnp.ndarray] = None,
+               axis_names: Sequence[str] = ()) -> jnp.ndarray:
+    """(W,) f32 validity mask in {0, 1} for a stacked message set.
+
+    A row is quarantined (mask 0) when it has >= 1 non-finite coordinate,
+    or when its L2 norm exceeds ``multiplier`` x the median norm of the
+    finite rows (``multiplier <= 0`` disables the magnitude gate).  The
+    median votes come from finite rows with positive ``base_weights`` (when
+    given), so already-masked-out slots (dropout, stale cohort rows) don't
+    drag the scale estimate down.  ``axis_names``: mesh axes the row
+    COORDINATES are sharded over (the per-row partials psum over them, so
+    the mask is replicated)."""
+    bad, sq = _row_stats(msgs, axis_names)
+    finite_row = bad == 0
+    mask = finite_row
+    if multiplier > 0:
+        norms = jnp.sqrt(sq)
+        votes = finite_row
+        if base_weights is not None:
+            votes = votes & (base_weights > 0)
+        med = _masked_median(norms, votes)
+        limit = jnp.maximum(multiplier * med, _NORM_FLOOR)
+        mask = mask & ((norms <= limit) | (norms <= _NORM_FLOOR))
+    return mask.astype(jnp.float32)
+
+
+def pairwise_guard_mask(exchange: Pytree, mask: jnp.ndarray, *,
+                        multiplier: float = 10.0,
+                        axis_names: Sequence[str] = ()) -> jnp.ndarray:
+    """(R, S) validity mask for a decentralized per-edge exchange.
+
+    ``exchange`` leaves are (R, S, ...) -- what receiver r heard from
+    sender s; ``mask`` is the (R, S) neighbor mask (possibly already
+    weight-scaled).  Each receiver sanitizes its own in-neighborhood: the
+    median-of-norms is per RECEIVER over its unmasked finite senders, so a
+    Byzantine sender quarantined at one receiver can still count against
+    the budget at another (exactly the decentralized trust model)."""
+    bad = None
+    sq = None
+    for z in jax.tree_util.tree_leaves(exchange):
+        zf = z.astype(jnp.float32).reshape(z.shape[0], z.shape[1], -1)
+        finite = jnp.isfinite(zf)
+        zb = jnp.sum((~finite).astype(jnp.float32), axis=-1)
+        zs = jnp.sum(jnp.where(finite, zf, 0.0) ** 2, axis=-1)
+        bad = zb if bad is None else bad + zb
+        sq = zs if sq is None else sq + zs
+    if axis_names:
+        bad = compat.psum(bad, tuple(axis_names))
+        sq = compat.psum(sq, tuple(axis_names))
+    finite_rs = bad == 0
+    out = finite_rs
+    if multiplier > 0:
+        norms = jnp.sqrt(sq)
+        votes = finite_rs & (mask > 0)
+        med = jax.vmap(_masked_median)(norms, votes)          # (R,)
+        limit = jnp.maximum(multiplier * med, _NORM_FLOOR)[:, None]
+        out = out & ((norms <= limit) | (norms <= _NORM_FLOOR))
+    return out.astype(jnp.float32)
+
+
+def sanitize_rows(msgs: Pytree, mask: jnp.ndarray) -> Pytree:
+    """Zero the rows ``mask`` quarantines (leading-axis select on every
+    leaf).  With an all-ones mask this is a bit-exact identity; with a
+    partial mask it removes the payload whose weight just went to 0, so
+    ``0 * NaN`` can never leak back in through a weighted sum."""
+    def one(z):
+        m = mask.reshape(mask.shape + (1,) * (z.ndim - mask.ndim))
+        return jnp.where(m > 0, z, jnp.zeros_like(z))
+    return jax.tree_util.tree_map(one, msgs)
+
+
+def all_valid(mask: jnp.ndarray) -> jnp.ndarray:
+    """Replicated scalar: True iff no row/edge was quarantined."""
+    return jnp.all(mask >= 1.0)
+
+
+def guarded_flat_call(flat_fn: Callable[..., Any], buf: jnp.ndarray,
+                      mask: jnp.ndarray, *,
+                      row_weights: Optional[jnp.ndarray] = None) -> Any:
+    """Run a flat aggregator with the guard mask folded into its row
+    weights, bit-identical to the unguarded call on clean rounds.
+
+    With base ``row_weights`` the fold is ``rw * mask`` (exact when the
+    mask is all ones).  Without them, both the unweighted and the
+    mask-weighted rule are evaluated and a single ``jnp.where`` on the
+    replicated all-valid scalar picks the unweighted bits on clean rounds
+    (module docstring: all-ones weights are NOT bit-identical to the
+    unweighted engines, and ``lax.cond`` around collectives is off-limits
+    inside shard_map).  The redundant aggregation is the price of the
+    guarantee and only exists while guards are armed."""
+    clean_buf = sanitize_rows(buf, mask)
+    # Double-compute + select: the masked branch digests quarantined rows,
+    # the raw branch reproduces the EXACT guards-off computation (weights
+    # stay untouched constants, no sanitize elementwise feeding the
+    # reduce), and the clean-round select picks the raw one -- so a clean
+    # round is bit-identical to the unguarded engine.  The optimization
+    # barriers keep XLA from multi-output-fusing the two reductions
+    # (sibling fusion changes the accumulation order and breaks the
+    # clean-round bit-identity the registry pins).
+    if row_weights is not None:
+        out_w = flat_fn(clean_buf, row_weights=row_weights * mask)
+        out_u = jax.lax.optimization_barrier(
+            flat_fn(jax.lax.optimization_barrier(buf),
+                    row_weights=row_weights))
+    else:
+        out_w = flat_fn(clean_buf, row_weights=mask)
+        out_u = jax.lax.optimization_barrier(
+            flat_fn(jax.lax.optimization_barrier(buf)))
+    clean = all_valid(mask)
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(clean, a, b), out_u, out_w)
+
+
+def select_tree(pred: jnp.ndarray, on_true: Pytree, on_false: Pytree
+                ) -> Pytree:
+    """Elementwise ``jnp.where(pred, a, b)`` over matching pytrees -- the
+    donation-safe hold used when a round is rejected (same shapes in and
+    out, no host sync)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
+def tree_norm(tree: Pytree, axis_names: Sequence[str] = ()) -> jnp.ndarray:
+    """Global L2 norm over every leaf of ``tree`` (psum'd over
+    ``axis_names`` when the leaves are shards) -- the scalar the round
+    verdict watches."""
+    sq = None
+    for z in jax.tree_util.tree_leaves(tree):
+        zs = jnp.sum(z.astype(jnp.float32) ** 2)
+        sq = zs if sq is None else sq + zs
+    if sq is None:
+        sq = jnp.zeros((), jnp.float32)
+    if axis_names:
+        sq = compat.psum(sq, tuple(axis_names))
+    return jnp.sqrt(sq)
+
+
+def round_verdict(agg_norm: jnp.ndarray, health: jnp.ndarray, *,
+                  decay: float = 0.9, zmax: float = 6.0,
+                  warmup: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """In-graph accept/reject for one round -> (accept bool, new health).
+
+    Reject when the aggregate norm is non-finite, or (after ``warmup``
+    accepted rounds have seeded the tracker) when its one-sided z-score vs
+    the EMA mean/second-moment exceeds ``zmax``.  The z denominator has a
+    5% relative floor so a collapsed variance on a smooth trajectory can't
+    reject ordinary noise, and the one-sided form never rejects a norm
+    BELOW the EMA (descent shrinks gradients; only blow-ups are faults).
+    The EMA advances only on accepted rounds -- a sustained attack cannot
+    drag the tracker up to meet it.  ``zmax <= 0`` keeps the non-finite
+    check only."""
+    ema, ema_sq = health[0], health[1]
+    rejected, seen = health[2], health[3]
+    agg_norm = agg_norm.astype(jnp.float32)
+    finite = jnp.isfinite(agg_norm)
+    if zmax > 0:
+        var = jnp.maximum(ema_sq - ema * ema, 0.0)
+        scale = jnp.sqrt(var) + 0.05 * ema + _NORM_FLOOR
+        z = (agg_norm - ema) / scale
+        accept = finite & ((seen < warmup) | (z <= zmax))
+    else:
+        accept = finite
+    norm0 = jnp.where(finite, agg_norm, 0.0)
+    d = jnp.where(seen > 0.5, jnp.float32(decay), 0.0)  # first round seeds
+    new_ema = jnp.where(accept, d * ema + (1.0 - d) * norm0, ema)
+    new_sq = jnp.where(accept, d * ema_sq + (1.0 - d) * norm0 * norm0,
+                       ema_sq)
+    okf = accept.astype(jnp.float32)
+    new_health = jnp.stack([new_ema, new_sq, rejected + (1.0 - okf),
+                            seen + okf])
+    return accept, new_health

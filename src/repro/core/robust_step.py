@@ -40,6 +40,7 @@ from repro import compat
 from repro import telemetry
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
+from repro.core import guards as guards_lib
 from repro.core import packing
 from repro.core import participation as participation_lib
 from repro.core import variance as vr_lib
@@ -134,6 +135,27 @@ class RobustConfig:
     # flat-engine feature: they route per-leaf aggregation through one
     # pack -> flat rule -> unpack detour.
     diagnostics: bool = False
+    # Self-healing resilience layer (repro.core.guards, DESIGN.md Sec. 13).
+    # guards=True arms (a) in-graph per-row fault containment: rows with a
+    # non-finite coordinate, or whose norm exceeds guard_multiplier x the
+    # round's median-of-norms, get row_weight exactly 0 (mask-select; the
+    # engines never change); and (b) the round-health verdict: a round
+    # whose aggregate norm is non-finite, or z-scores above reject_zmax vs
+    # the EMA tracker carried in the train state (after reject_warmup
+    # accepted rounds), is REJECTED -- params/opt/VR state hold via
+    # jnp.where and the rejected_rounds counter advances.  False (default)
+    # keeps every path byte-identical to the unguarded step (pinned per
+    # registry rule like the diagnostics invariant); on clean rounds
+    # guards=True is ALSO bit-identical by construction (guards module
+    # docstring).
+    guards: bool = False
+    guard_multiplier: float = 10.0    # magnitude gate; <= 0 disables it
+    reject_ema: float = 0.9           # decay of the aggregate-norm EMA
+    reject_zmax: float = 6.0          # z threshold; <= 0 -> finite-check only
+    reject_warmup: int = 8            # accepted rounds before the z-gate arms
+    # Fault-injection knobs of the ``bitflip`` attack (repro.core.attacks).
+    bitflip_prob: float = 0.02
+    bitflip_seed: int = 0
 
     def reducer(self) -> vr_lib.VarianceReducer:
         """The :class:`repro.core.variance.VarianceReducer` named by
@@ -149,6 +171,8 @@ class RobustConfig:
             alie_z=self.alie_z,
             ipm_eps=self.ipm_eps,
             straggler_k=self.straggler_k,
+            bitflip_prob=self.bitflip_prob,
+            bitflip_seed=self.bitflip_seed,
         )
 
     def aggregator_fn(self, *, perleaf: Optional[bool] = None
@@ -214,6 +238,10 @@ class FederatedState(NamedTuple):
     # tables, or None for formats without error feedback (keeps the
     # pre-quantization pytree).
     ef: Optional[jnp.ndarray] = None
+    # (guards.HEALTH_WIDTH,) f32 round-health vector (aggregate-norm EMA +
+    # rejected/accepted counters, DESIGN.md Sec. 13) when cfg.guards, or
+    # None -- the default keeps the pre-guards pytree (and checkpoints).
+    health: Optional[jnp.ndarray] = None
 
 
 def resolve_topology(cfg: RobustConfig, num_nodes: int,
@@ -386,8 +414,10 @@ def make_federated_step(
         if wire_fmt.error_feedback:
             d = cfg.message_spec(params, batch_ndim=0).padded_dim
             ef = jnp.zeros((num_clients, d), jnp.float32)
+        health = guards_lib.init_health() if cfg.guards else None
         return FederatedState(params, opt_state, vr_state,
-                              jnp.zeros((), jnp.int32), key, staleness, ef)
+                              jnp.zeros((), jnp.int32), key, staleness, ef,
+                              health)
 
     def honest_grads(params, k_idx, data):
         """Per-worker raw honest gradients + the drawn indices.  Returned
@@ -491,13 +521,36 @@ def make_federated_step(
         rw, slot_stal = row_weights_for(honest_stal)
         metrics = {"honest_variance": var, **vr_metrics,
                    **telemetry.staleness_metrics(slot_stal)}
+        gmask = None
+        if cfg.guards:
+            # Containment (DESIGN.md Sec. 13): the validity mask is
+            # computed on a packed view of the messages and folds into the
+            # row weights; the per-leaf baseline below stays the bit-exact
+            # clean-round path via the all-valid select.
+            gspec = packing.pack_spec(msgs)
+            gbuf = gspec.pack(msgs)
+            gmask = guards_lib.guard_mask(
+                gbuf, multiplier=cfg.guard_multiplier, base_weights=rw)
+            metrics["quarantined_rows"] = jnp.sum(1.0 - gmask)
         if rw is None and not cfg.diagnostics:
             agg = cfg.aggregator_fn(perleaf=True)(msgs)
+            if gmask is not None:
+                flat_fn = cfg.flat_aggregator_fn(gspec, diagnostics=False)
+                agg_w = gspec.unpack(
+                    flat_fn(guards_lib.sanitize_rows(gbuf, gmask),
+                            row_weights=gmask), batch_ndim=0)
+                agg = guards_lib.select_tree(guards_lib.all_valid(gmask),
+                                             agg, agg_w)
         else:
             spec = packing.pack_spec(msgs)
             flat_fn = cfg.flat_aggregator_fn(spec)
-            out = (flat_fn(spec.pack(msgs)) if rw is None
-                   else flat_fn(spec.pack(msgs), row_weights=rw))
+            buf = spec.pack(msgs)
+            if gmask is not None:
+                out = guards_lib.guarded_flat_call(flat_fn, buf, gmask,
+                                                   row_weights=rw)
+            else:
+                out = (flat_fn(buf) if rw is None
+                       else flat_fn(buf, row_weights=rw))
             if cfg.diagnostics:
                 agg_vec, diag = out
                 metrics.update(telemetry.diagnostics_metrics(diag))
@@ -505,9 +558,23 @@ def make_federated_step(
                 agg_vec = out
             agg = spec.unpack(agg_vec, batch_ndim=0)
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
-        params = optim_lib.apply_updates(params, updates)
-        new_state = FederatedState(params, opt_state, vr_state,
-                                   state.step + 1, key, staleness, state.ef)
+        new_params = optim_lib.apply_updates(params, updates)
+        health = state.health
+        if cfg.guards:
+            # Round-health verdict: a rejected round holds params/opt/VR
+            # (pure jnp.where -- donation-safe, no host sync); step/key/
+            # staleness advance so the next round draws fresh randomness.
+            accept, health = guards_lib.round_verdict(
+                guards_lib.tree_norm(agg), state.health,
+                decay=cfg.reject_ema, zmax=cfg.reject_zmax,
+                warmup=cfg.reject_warmup)
+            new_params, opt_state, vr_state = guards_lib.select_tree(
+                accept, (new_params, opt_state, vr_state),
+                (params, state.opt_state, state.vr))
+            metrics.update(telemetry.health_metrics(health, accept))
+        new_state = FederatedState(new_params, opt_state, vr_state,
+                                   state.step + 1, key, staleness, state.ef,
+                                   health)
         return new_state, metrics
 
     def step_fn_packed(state: FederatedState):
@@ -557,7 +624,18 @@ def make_federated_step(
         metrics = {"honest_variance": var, **vr_metrics,
                    **telemetry.staleness_metrics(slot_stal)}
         flat_fn = cfg.flat_aggregator_fn(spec)
-        out = flat_fn(msgs) if rw is None else flat_fn(msgs, row_weights=rw)
+        if cfg.guards:
+            # Containment on the DEQUANTIZED wire (the roundtrip above
+            # already ran): the guard sees exactly what the rule would
+            # consume -- dequantize-then-guard ordering, DESIGN.md Sec. 13.
+            gmask = guards_lib.guard_mask(
+                msgs, multiplier=cfg.guard_multiplier, base_weights=rw)
+            out = guards_lib.guarded_flat_call(flat_fn, msgs, gmask,
+                                               row_weights=rw)
+            metrics["quarantined_rows"] = jnp.sum(1.0 - gmask)
+        else:
+            out = (flat_fn(msgs) if rw is None
+                   else flat_fn(msgs, row_weights=rw))
         if cfg.diagnostics:
             agg_vec, diag = out                               # (D,) f32
             metrics.update(telemetry.diagnostics_metrics(diag))
@@ -565,9 +643,22 @@ def make_federated_step(
             agg_vec = out                                     # (D,) f32
         agg = spec.unpack(agg_vec, batch_ndim=0)
         updates, opt_state = optimizer.update(agg, state.opt_state, params, state.step)
-        params = optim_lib.apply_updates(params, updates)
-        new_state = FederatedState(params, opt_state, vr_state,
-                                   state.step + 1, key, staleness, ef_state)
+        new_params = optim_lib.apply_updates(params, updates)
+        health = state.health
+        if cfg.guards:
+            # Round-health verdict (same hold as the per-leaf step).
+            accept, health = guards_lib.round_verdict(
+                guards_lib.tree_norm(agg_vec), state.health,
+                decay=cfg.reject_ema, zmax=cfg.reject_zmax,
+                warmup=cfg.reject_warmup)
+            new_params, opt_state, vr_state, ef_state = \
+                guards_lib.select_tree(
+                    accept, (new_params, opt_state, vr_state, ef_state),
+                    (params, state.opt_state, state.vr, state.ef))
+            metrics.update(telemetry.health_metrics(health, accept))
+        new_state = FederatedState(new_params, opt_state, vr_state,
+                                   state.step + 1, key, staleness, ef_state,
+                                   health)
         return new_state, metrics
 
     return init_fn, (step_fn_packed if cfg.packed else step_fn_perleaf)
@@ -656,7 +747,16 @@ def distributed_aggregate(
         flat_fn = cfg.flat_aggregator_fn(
             spec, axis_names=model_axes, sync_axes=worker_axes,
             diagnostics=diag_on)
-        if row_weights is None:
+        if cfg.guards:
+            # Row norms/finiteness psum over the MODEL axes only: after the
+            # all_gather the worker axes are replicated, so every device
+            # computes the same full-vector validity mask.
+            gmask = guards_lib.guard_mask(
+                stacked, multiplier=cfg.guard_multiplier,
+                base_weights=row_weights, axis_names=model_axes)
+            out = guards_lib.guarded_flat_call(flat_fn, stacked, gmask,
+                                               row_weights=row_weights)
+        elif row_weights is None:
             out = flat_fn(stacked)
         else:
             out = flat_fn(stacked, row_weights=row_weights)
@@ -668,6 +768,11 @@ def distributed_aggregate(
         raise ValueError(
             "staleness row_weights need the packed gather path "
             "(cfg.packed=True); the per-leaf baseline is unweighted")
+    if cfg.guards:
+        raise ValueError(
+            "fault-containment guards need the packed gather path "
+            "(cfg.packed=True); the per-leaf baseline has no flat buffer "
+            "to mask")
     if diag_on:
         raise ValueError(
             "aggregation diagnostics need the packed gather path "
@@ -822,13 +927,26 @@ def sharded_aggregate(
         z_local = z_local.reshape(w, -1)
     comm_axes = tuple(worker_axes) + tuple(model_axes)
     rw = row_weights
+    gmask = None
+    if cfg.guards:
+        # Guard geometry on the coordinate slices: the per-row partial
+        # stats psum over worker+model axes, so the (W,) validity mask
+        # reflects FULL-vector norms and is replicated on every device.
+        gmask = guards_lib.guard_mask(
+            z_local, multiplier=cfg.guard_multiplier, base_weights=rw,
+            axis_names=comm_axes)
 
     name = cfg.aggregator
     if diag_on:
         # Diagnostics route every rule through the registry flat engines
         # (same per-row math as the inline branches below, plus the struct):
         # the engines psum their per-row partials over ``comm_axes``, so the
-        # struct reflects full-vector geometry and is replicated.
+        # struct reflects full-vector geometry and is replicated.  With
+        # guards the mask simply folds into the row weights (diagnostics
+        # carries no bit-identity promise).
+        if gmask is not None:
+            z_local = guards_lib.sanitize_rows(z_local, gmask)
+            rw = gmask if rw is None else rw * gmask
         common = dict(axis_names=comm_axes, row_weights=rw, diagnostics=True)
         if name == "mean":
             slice_agg, diag = agg_lib.mean_flat(z_local, **common)
@@ -871,75 +989,93 @@ def sharded_aggregate(
         full = compat.all_gather(slice_agg, worker_axes, axis=0,
                                  tiled=False).reshape(-1)
         return unflatten(full[:p]), diag
-    if name == "mean":
-        slice_agg = (jnp.mean(z_local, axis=0) if rw is None
-                     else agg_lib.mean_flat(z_local, row_weights=rw))
-    elif name == "median":
-        slice_agg = (jnp.median(z_local, axis=0) if rw is None
-                     else agg_lib.median_flat(z_local, row_weights=rw))
-    elif name == "trimmed_mean":
-        if rw is None:
-            s = jnp.sort(z_local, axis=0)
-            slice_agg = jnp.mean(s[cfg.trim : w - cfg.trim], axis=0)
-        else:
-            slice_agg = agg_lib.trimmed_mean_flat(z_local, trim=cfg.trim,
-                                                  row_weights=rw)
-    elif name == "geomed":
-        slice_agg = weiszfeld_flat(
-            z_local, max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
-            axis_names=comm_axes, row_weights=rw,
-        )
-    elif name == "geomed_groups":
-        if rw is None:
-            slice_agg = weiszfeld_flat(
-                agg_lib.group_means(z_local, cfg.num_groups),
-                max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
-                axis_names=comm_axes,
+    def run(z, rw_):
+        # One closure over the (slice, weights) pair so the guards path can
+        # evaluate the SAME inline branches twice (unweighted baseline +
+        # mask-weighted fold) and select -- see below.
+        if name == "mean":
+            return (jnp.mean(z, axis=0) if rw_ is None
+                    else agg_lib.mean_flat(z, row_weights=rw_))
+        if name == "median":
+            return (jnp.median(z, axis=0) if rw_ is None
+                    else agg_lib.median_flat(z, row_weights=rw_))
+        if name == "trimmed_mean":
+            if rw_ is None:
+                s = jnp.sort(z, axis=0)
+                return jnp.mean(s[cfg.trim : w - cfg.trim], axis=0)
+            return agg_lib.trimmed_mean_flat(z, trim=cfg.trim,
+                                             row_weights=rw_)
+        if name == "geomed":
+            return weiszfeld_flat(
+                z, max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+                axis_names=comm_axes, row_weights=rw_,
             )
-        else:
+        if name == "geomed_groups":
+            if rw_ is None:
+                return weiszfeld_flat(
+                    agg_lib.group_means(z, cfg.num_groups),
+                    max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+                    axis_names=comm_axes,
+                )
             # Weighted group means + group-mass Weiszfeld: per-row math, so
             # the coordinate slices aggregate consistently across devices.
-            slice_agg = agg_lib.geomed_groups_flat(
-                z_local, num_groups=cfg.num_groups,
+            return agg_lib.geomed_groups_flat(
+                z, num_groups=cfg.num_groups,
                 max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
-                axis_names=comm_axes, row_weights=rw)
-    elif name == "centered_clip":
-        # Same psum trick as the distributed Weiszfeld: full-vector residual
-        # norms are restored by a psum of W floats over worker+model axes.
-        slice_agg = agg_lib.centered_clip_flat(
-            z_local, radius=cfg.clip_radius, axis_names=comm_axes,
-            row_weights=rw)
-    elif name == "krum":
-        # Pairwise-distance resharding: the (W, W) Gram partials of the
-        # coordinate slices psum to the full-vector pairwise distances, so
-        # the (replicated) selection index is exact; the winner's slices
-        # are reassembled by the common all_gather below.
-        if rw is None:
-            scores = agg_lib.krum_scores(
-                _partial_gram_sq_dists(z_local, comm_axes), cfg.num_byzantine)
-            slice_agg = z_local[jnp.argmin(scores)]
-        else:
+                axis_names=comm_axes, row_weights=rw_)
+        if name == "centered_clip":
+            # Same psum trick as the distributed Weiszfeld: full-vector
+            # residual norms are restored by a psum of W floats over
+            # worker+model axes.
+            return agg_lib.centered_clip_flat(
+                z, radius=cfg.clip_radius, axis_names=comm_axes,
+                row_weights=rw_)
+        if name == "krum":
+            # Pairwise-distance resharding: the (W, W) Gram partials of the
+            # coordinate slices psum to the full-vector pairwise distances,
+            # so the (replicated) selection index is exact; the winner's
+            # slices are reassembled by the common all_gather below.
+            if rw_ is None:
+                scores = agg_lib.krum_scores(
+                    _partial_gram_sq_dists(z, comm_axes), cfg.num_byzantine)
+                return z[jnp.argmin(scores)]
             # Weighted selection: the scores (hence argmin) are replicated
             # because the Gram psum restores global geometry and the
             # weights are replicated, so every device picks the same row.
-            slice_agg = agg_lib.krum_flat(
-                z_local, num_byzantine=cfg.num_byzantine,
-                axis_names=comm_axes, row_weights=rw)
-    elif name == "geomed_blockwise":
-        # Per-leaf norms survive the resharding because every coordinate
-        # knows its block id: segmented Weiszfeld psums a (W, num_leaves)
-        # matrix per iteration instead of W floats.
-        slice_agg = weiszfeld_blockwise_sharded(
-            z_local,
-            _local_leaf_ids(leaf_sizes, pad, w, worker_axes),
-            len(leaf_sizes) + 1,  # + dummy block for the padding coordinates
-            axis_names=comm_axes,
-            max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
-            row_weights=rw)
-    else:
+            return agg_lib.krum_flat(
+                z, num_byzantine=cfg.num_byzantine,
+                axis_names=comm_axes, row_weights=rw_)
+        if name == "geomed_blockwise":
+            # Per-leaf norms survive the resharding because every coordinate
+            # knows its block id: segmented Weiszfeld psums a
+            # (W, num_leaves) matrix per iteration instead of W floats.
+            return weiszfeld_blockwise_sharded(
+                z,
+                _local_leaf_ids(leaf_sizes, pad, w, worker_axes),
+                len(leaf_sizes) + 1,  # + dummy block for padding coordinates
+                axis_names=comm_axes,
+                max_iters=cfg.weiszfeld_iters, tol=cfg.weiszfeld_tol,
+                row_weights=rw_)
         raise ValueError(
             f"unknown aggregator {name!r} for comm='sharded'; "
             f"supported: {SHARDED_AGGREGATORS}")
+
+    if gmask is None:
+        slice_agg = run(z_local, rw)
+    elif rw is not None:
+        # Existing staleness weights: the mask folds multiplicatively, and
+        # valid rows keep their weight bitwise (rw * 1.0 == rw exactly).
+        slice_agg = run(guards_lib.sanitize_rows(z_local, gmask),
+                        rw * gmask)
+    else:
+        # No base weights: all-ones-weighted engines are NOT bitwise
+        # identical to the unweighted fast paths, so both are evaluated and
+        # the baseline bytes win whenever no row was quarantined (guards
+        # module docstring) -- redundant aggregation is the price of
+        # armed guards, never of guards=False.
+        out_w = run(guards_lib.sanitize_rows(z_local, gmask), gmask)
+        slice_agg = jnp.where(guards_lib.all_valid(gmask),
+                              run(z_local, None), out_w)
 
     # Re-assemble the full (padded) vector on every worker.
     full = compat.all_gather(slice_agg, worker_axes, axis=0,
@@ -1009,6 +1145,25 @@ def distributed_attack(
         # what actually remove it from the aggregation -- mask-select, the
         # worker axis is never sliced.
         byz = jax.tree_util.tree_map(jnp.zeros_like, honest_mean)
+    elif name == "nan":
+        byz = jax.tree_util.tree_map(
+            lambda m: jnp.full_like(m, jnp.nan), honest_mean)
+    elif name == "inf_overflow":
+        byz = jax.tree_util.tree_map(
+            lambda m: jnp.where(m < 0, -attack_lib.OVERFLOW_MAGNITUDE,
+                                attack_lib.OVERFLOW_MAGNITUDE
+                                ).astype(m.dtype),
+            honest_mean)
+    elif name == "bitflip":
+        # Hash input is the RELATIVE Byzantine index (wid, matching the
+        # replace-first layout).  Coordinate indices are LOCAL to this
+        # device's shard of each leaf -- deterministic and layout-stable
+        # for a fixed mesh, but not pinned against the single-host
+        # apply_attack coordinates (the sim/packed pins cover that form).
+        flipped = attack_lib.bitflip_rows(
+            honest_mean, wid[None].astype(jnp.int32),
+            prob=cfg.bitflip_prob, seed=cfg.bitflip_seed)
+        byz = jax.tree_util.tree_map(lambda z: z[0], flipped)
     else:
         raise ValueError(f"unknown attack {name!r}")
 

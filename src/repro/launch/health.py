@@ -1,0 +1,177 @@
+"""Host-side run-health monitor + rollback state machine (DESIGN.md Sec. 13).
+
+The in-graph layers (repro.core.guards) contain per-row faults and reject
+individual rounds without ever syncing the host; this module is the third
+containment layer: a tiny host-side state machine that watches the metric
+rows the :class:`repro.telemetry.RunLogger` flushes (``on_row`` callback,
+so it inherits the logger's batched device_get -- no extra per-step sync)
+and decides when the RUN is unhealthy enough to abandon the trajectory:
+
+- ``patience`` consecutive bad rounds (in-graph verdict rejected the round,
+  or the loss went non-finite, or the loss blew past ``blowup`` times the
+  best loss seen) arm ``rollback_pending``;
+- the train loop then restores the last known-good checkpoint
+  (:meth:`repro.checkpoint.CheckpointManager.restore_last_good`) and
+  re-descends with the same seeded key schedule -- deterministic, so a
+  rolled-back run continues bit-exactly like a fresh run resumed from that
+  checkpoint (tests/test_rollback.py);
+- every rollback climbs one rung of the ``degradation ladder``: a
+  user-configured list of RobustConfig overrides (e.g. raise the trim
+  fraction, switch the aggregator, tighten the guard gate) applied via
+  ``dataclasses.replace``, so repeated failures escalate the defense
+  instead of replaying the same losing round forever.
+
+Ladder syntax (CLI ``--degradation-ladder``): semicolon-separated rungs,
+each a comma-separated ``key=value`` group over RobustConfig fields::
+
+    trim=0.3;aggregator=trimmed_mean,trim=0.4;aggregator=geomed
+
+Values are coerced to the dataclass field's type.  Only aggregation-rule
+knobs belong on a ladder (aggregator / trim / guard_multiplier /
+reject_zmax / clip_radius / weiszfeld_iters ...): fields that change the
+TRAIN-STATE STRUCTURE (vr, message_dtype, num_clients, guards itself)
+would invalidate the checkpoint being restored, and ``escalate`` refuses
+them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+# Structure-changing RobustConfig fields a ladder rung may not touch: the
+# restored checkpoint was saved under the CURRENT state structure.
+_LADDER_FORBIDDEN = frozenset(
+    {"vr", "message_dtype", "num_clients", "guards", "comm", "packed",
+     "topology", "gossip", "schedule"})
+
+
+def parse_ladder(spec: str) -> list[dict[str, str]]:
+    """Parse the semicolon/comma ladder syntax into a list of override
+    dicts (values still strings; :func:`apply_rung` coerces)."""
+    rungs = []
+    for group in (spec or "").split(";"):
+        group = group.strip()
+        if not group:
+            continue
+        rung = {}
+        for kv in group.split(","):
+            if "=" not in kv:
+                raise ValueError(
+                    f"degradation ladder rung {group!r}: expected "
+                    f"key=value, got {kv!r}")
+            k, v = kv.split("=", 1)
+            rung[k.strip()] = v.strip()
+        rungs.append(rung)
+    return rungs
+
+
+def _coerce(value: str, like):
+    """Coerce ``value`` to the type of the current field value ``like``."""
+    if isinstance(like, bool):
+        return value.lower() in ("1", "true", "yes", "on")
+    if isinstance(like, int):
+        return int(value)
+    if isinstance(like, float):
+        return float(value)
+    return value
+
+
+def apply_rung(robust, rung: dict[str, str]):
+    """One ladder rung -> a new RobustConfig via ``dataclasses.replace``,
+    with string values coerced to each field's current type."""
+    fields = {f.name for f in dataclasses.fields(robust)}
+    overrides = {}
+    for k, v in rung.items():
+        if k not in fields:
+            raise ValueError(f"degradation ladder: RobustConfig has no "
+                             f"field {k!r}")
+        if k in _LADDER_FORBIDDEN:
+            raise ValueError(
+                f"degradation ladder: field {k!r} changes the train-state "
+                f"structure and cannot be escalated mid-run")
+        overrides[k] = _coerce(v, getattr(robust, k))
+    return dataclasses.replace(robust, **overrides)
+
+
+class RunHealth:
+    """Consecutive-bad-round counter + rollback/escalation bookkeeping.
+
+    Feed it metric rows via :meth:`observe` (wire it as the RunLogger's
+    ``on_row`` callback); poll ``rollback_pending`` in the train loop and
+    call :meth:`on_rollback` after restoring the checkpoint.
+    """
+
+    def __init__(self, *, patience: int = 5, blowup: float = 1e3,
+                 ladder: str = ""):
+        if patience < 1:
+            raise ValueError(f"patience must be >= 1, got {patience}")
+        self.patience = patience
+        self.blowup = blowup
+        self.ladder = parse_ladder(ladder)
+        self.rollbacks = 0
+        self.rollback_pending = False
+        self._consecutive_bad = 0
+        self._best_loss: Optional[float] = None
+
+    # -- observation ------------------------------------------------------
+
+    def observe(self, row: dict) -> None:
+        """One flushed metric row.  Marks the round bad when the in-graph
+        verdict rejected it, the loss is non-finite, or the loss exceeds
+        ``blowup`` x the best loss seen so far."""
+        bad = False
+        accepted = row.get("round_accepted")
+        if accepted is not None and float(accepted) < 0.5:
+            bad = True
+        loss = row.get("loss")
+        if loss is not None:
+            loss = float(loss)
+            if not math.isfinite(loss):
+                bad = True
+            elif self._best_loss is None:
+                self._best_loss = loss
+            elif loss > self.blowup * max(abs(self._best_loss), 1e-12):
+                bad = True
+            else:
+                self._best_loss = min(self._best_loss, loss)
+        self._consecutive_bad = self._consecutive_bad + 1 if bad else 0
+        if self._consecutive_bad >= self.patience:
+            self.rollback_pending = True
+
+    @property
+    def healthy(self) -> bool:
+        """No bad round observed since the last good one (as of the last
+        RunLogger flush) -- the gate for marking checkpoints good."""
+        return self._consecutive_bad == 0 and not self.rollback_pending
+
+    # -- recovery ---------------------------------------------------------
+
+    def on_rollback(self) -> None:
+        """The loop restored a checkpoint: reset the counter (a fresh
+        ``patience`` window must elapse before the next rollback) and
+        count the escalation."""
+        self.rollbacks += 1
+        self.rollback_pending = False
+        self._consecutive_bad = 0
+        self._best_loss = None
+
+    def dismiss(self) -> None:
+        """No rollback is available (no checkpoint dir / budget spent):
+        clear the pending flag and restart the patience window WITHOUT
+        counting a rollback or consuming a ladder rung."""
+        self.rollback_pending = False
+        self._consecutive_bad = 0
+
+    def escalate(self, robust):
+        """RobustConfig for the post-rollback re-descent: rung
+        ``rollbacks - 1`` of the ladder (call AFTER :meth:`on_rollback`),
+        or ``robust`` unchanged when the ladder is exhausted/empty."""
+        idx = self.rollbacks - 1
+        if idx < 0 or idx >= len(self.ladder):
+            return robust
+        return apply_rung(robust, self.ladder[idx])
+
+    def summary(self) -> dict:
+        return {"rollbacks": self.rollbacks,
+                "ladder_rungs_used": min(self.rollbacks, len(self.ladder))}

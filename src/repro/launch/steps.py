@@ -47,6 +47,7 @@ from repro import compat
 from repro import telemetry
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.core import attacks as attack_lib
+from repro.core import guards as guards_lib
 from repro.core import participation as participation_lib
 from repro.core.robust_step import RobustConfig, sharded_aggregate
 from repro.core import aggregators as agg_lib
@@ -225,7 +226,9 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
         var = telemetry.consensus_dist(msgs, hmask, max(w - b, 1))
 
         diag = None
-        if robust.comm == "gather" and (weighted or robust.diagnostics or (
+        quarantined = None
+        if robust.comm == "gather" and (weighted or robust.diagnostics or
+                                        robust.guards or (
                 robust.packed and (wire_fmt.quantized or
                                    robust.aggregator in PACKED_GATHER_RULES))):
             # Flat-packed hot path (DESIGN.md Sec. 8): one (W, D) buffer
@@ -250,8 +253,18 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
                 # sharded_aggregate's encode.
                 buf = spec.wire_roundtrip(buf)
             flat_fn = robust.flat_aggregator_fn(spec)
-            out = flat_fn(buf) if rw is None else flat_fn(
-                buf, row_weights=rw)
+            if robust.guards:
+                # Containment on the DEQUANTIZED wire (dequantize-then-
+                # guard, DESIGN.md Sec. 13); quarantined rows fold into the
+                # flat rule as zero row_weights.
+                gmask = guards_lib.guard_mask(
+                    buf, multiplier=robust.guard_multiplier, base_weights=rw)
+                out = guards_lib.guarded_flat_call(flat_fn, buf, gmask,
+                                                   row_weights=rw)
+                quarantined = jnp.sum(1.0 - gmask)
+            else:
+                out = flat_fn(buf) if rw is None else flat_fn(
+                    buf, row_weights=rw)
             if robust.diagnostics:
                 agg_vec, diag = out
             else:
@@ -279,23 +292,43 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
         updates, opt_state = optimizer.update(agg, state["opt"], params,
                                               state["step"])
         params = optim_lib.apply_updates(params, updates)
+        agg_norm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(agg)))
+        health = state.get("health")
+        health_metrics = {}
+        if robust.guards:
+            # Round-health verdict (DESIGN.md Sec. 13): a rejected round
+            # holds params/opt/VR/EF via select (donation-safe, no host
+            # sync); step/staleness/health always advance.
+            accept, health = guards_lib.round_verdict(
+                agg_norm, health, decay=robust.reject_ema,
+                zmax=robust.reject_zmax, warmup=robust.reject_warmup)
+            params, opt_state, vr_state, ef_state = guards_lib.select_tree(
+                accept, (params, opt_state, vr_state, ef_state),
+                (state["params"], state["opt"], state.get("vr"),
+                 state.get("ef")))
+            health_metrics = telemetry.health_metrics(health, accept)
         new_state = {"params": params, "opt": opt_state, "step": state["step"] + 1}
         if use_vr:
             new_state["vr"] = vr_state
         if use_ef:
             new_state["ef"] = ef_state
+        if robust.guards:
+            new_state["health"] = health
         if plan is not None:
             new_state["staleness"] = participation_lib.tick_staleness(
                 state["staleness"], cohort)
         metrics = {
             "loss": jnp.mean(losses),
             "honest_variance": var,
-            "agg_norm": jnp.sqrt(sum(
-                jnp.sum(jnp.square(g.astype(jnp.float32)))
-                for g in jax.tree_util.tree_leaves(agg))),
+            "agg_norm": agg_norm,
             **vr_metrics,
             **telemetry.staleness_metrics(slot_stal),
+            **health_metrics,
         }
+        if quarantined is not None:
+            metrics["quarantined_rows"] = quarantined
         if diag is not None:
             metrics.update(telemetry.diagnostics_metrics(diag))
         return new_state, metrics
@@ -314,6 +347,8 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
             # (num_clients, D) residual rows sharded over the worker axes,
             # like the per-client VR tables (DESIGN.md Sec. 12).
             sp["ef"] = P(wa_spec)
+        if robust.guards:
+            sp["health"] = P()   # (HEALTH_WIDTH,) f32, replicated
         if plan is not None:
             sp["staleness"] = P()   # (num_clients,) int32, replicated
         return sp
@@ -322,6 +357,9 @@ def make_train_step(model: Model, robust: RobustConfig, train: TrainConfig,
         ps = model.param_structs()
         st = {"params": ps, "opt": _opt_structs_like(train.optimizer, ps),
               "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        if robust.guards:
+            st["health"] = jax.ShapeDtypeStruct(
+                (guards_lib.HEALTH_WIDTH,), jnp.float32)
         if use_vr:
             # Per-client resident rows under partial participation.
             st["vr"] = reducer.state_structs(ps, num_clients,
@@ -551,12 +589,30 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
             updates, opt_state = optimizer.update(agg, state["opt"], params,
                                                   state["step"])
             params = optim_lib.apply_updates(params, updates)
+        agg_norm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(agg_move)) / w)
+        health = state.get("health")
+        health_metrics = {}
+        if robust.guards:
+            # Verdict on the per-step MOVEMENT norm (mode-independent
+            # scale); a rejected round holds every node's params/opt/VR/EF.
+            accept, health = guards_lib.round_verdict(
+                agg_norm, health, decay=robust.reject_ema,
+                zmax=robust.reject_zmax, warmup=robust.reject_warmup)
+            params, opt_state, vr_state, ef_state = guards_lib.select_tree(
+                accept, (params, opt_state, vr_state, ef_state),
+                (state["params"], state["opt"], state.get("vr"),
+                 state.get("ef")))
+            health_metrics = telemetry.health_metrics(health, accept)
         new_state = {"params": params, "opt": opt_state,
                      "step": state["step"] + 1}
         if use_vr:
             new_state["vr"] = vr_state
         if use_ef:
             new_state["ef"] = ef_state
+        if robust.guards:
+            new_state["health"] = health
         if plan is not None:
             new_state["staleness"] = participation_lib.tick_staleness(
                 state["staleness"], cohort)
@@ -566,11 +622,10 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
             "honest_variance": var,
             # Consensus drift of the honest nodes' parameter copies.
             "consensus_dist": telemetry.consensus_dist(params, honest, wh),
-            "agg_norm": jnp.sqrt(sum(
-                jnp.sum(jnp.square(g.astype(jnp.float32)))
-                for g in jax.tree_util.tree_leaves(agg_move)) / w),
+            "agg_norm": agg_norm,
             **vr_metrics,
             **telemetry.staleness_metrics(slot_stal),
+            **health_metrics,
         }
         if diag is not None:
             metrics.update(telemetry.diagnostics_metrics(diag))
@@ -585,6 +640,8 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
             sp["vr"] = reducer.state_specs(pspecs, wa_spec)
         if use_ef:
             sp["ef"] = P(wa_spec)
+        if robust.guards:
+            sp["health"] = P()   # (HEALTH_WIDTH,) f32, replicated
         if plan is not None:
             sp["staleness"] = P()   # (num_clients,) int32, replicated
         return sp
@@ -595,6 +652,9 @@ def make_decentralized_train_step(model: Model, robust: RobustConfig,
         nps = jax.tree_util.tree_map(node, ps)
         st = {"params": nps, "opt": _opt_structs_like(train.optimizer, nps),
               "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        if robust.guards:
+            st["health"] = jax.ShapeDtypeStruct(
+                (guards_lib.HEALTH_WIDTH,), jnp.float32)
         if use_vr:
             st["vr"] = reducer.state_structs(ps, num_clients,
                                              saga_num_samples)

@@ -15,6 +15,7 @@ be wrong.)
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -30,6 +31,8 @@ from repro.configs.base import ShapeConfig, TrainConfig
 from repro.core import packing
 from repro.core.robust_step import RobustConfig
 from repro.data.synthetic import token_stream
+from repro.core import guards as guards_lib
+from repro.launch import health as health_lib
 from repro.launch import hlo_analysis
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as shard_lib
@@ -132,6 +135,37 @@ def main() -> None:
                     help="restore the newest checkpoint in --checkpoint-dir "
                     "(full train state: params + opt + VR state + step) and "
                     "continue from there")
+    ap.add_argument("--guards", action="store_true",
+                    help="self-healing training (DESIGN.md Sec. 13): "
+                    "in-graph per-row fault containment (non-finite / "
+                    "magnitude-outlier messages get aggregation weight "
+                    "exactly 0) plus the round-health verdict that holds "
+                    "the train state on rejected rounds")
+    ap.add_argument("--guard-multiplier", type=float, default=10.0,
+                    help="magnitude gate: quarantine rows whose norm "
+                    "exceeds this multiple of the median honest norm")
+    ap.add_argument("--reject-ema", type=float, default=0.9,
+                    help="decay of the aggregate-norm EMA behind the "
+                    "round-health verdict")
+    ap.add_argument("--reject-zmax", type=float, default=6.0,
+                    help="reject a round when the aggregate norm's z-score "
+                    "vs the EMA exceeds this (<=0: non-finite-only gate)")
+    ap.add_argument("--rollback-patience", type=int, default=5,
+                    help="consecutive bad rounds (rejected / non-finite "
+                    "loss / loss blow-up) before rolling back to the last "
+                    "good checkpoint")
+    ap.add_argument("--loss-blowup", type=float, default=1e3,
+                    help="treat a round as bad when the loss exceeds this "
+                    "multiple of the best loss seen")
+    ap.add_argument("--max-rollbacks", type=int, default=3,
+                    help="stop restoring checkpoints after this many "
+                    "rollbacks (the run continues degraded instead of "
+                    "ping-ponging forever)")
+    ap.add_argument("--degradation-ladder", default="",
+                    help="escalation per rollback: semicolon-separated "
+                    "RobustConfig override groups, e.g. "
+                    "'trim=0.3;aggregator=trimmed_mean,trim=0.4' "
+                    "(repro.launch.health)")
     ap.add_argument("--diagnostics", action="store_true",
                     help="compute in-graph aggregation diagnostics "
                     "(per-worker distance / implicit weight / krum scores, "
@@ -180,7 +214,9 @@ def main() -> None:
         max_staleness=args.max_staleness,
         staleness_decay=args.staleness_decay,
         straggler_k=args.straggler_k,
-        diagnostics=args.diagnostics)
+        diagnostics=args.diagnostics,
+        guards=args.guards, guard_multiplier=args.guard_multiplier,
+        reject_ema=args.reject_ema, reject_zmax=args.reject_zmax)
     train = TrainConfig(optimizer=args.optimizer, lr=args.lr)
     from repro.core.robust_step import resolve_schedule
     sched = resolve_schedule(robust, w)
@@ -191,14 +227,22 @@ def main() -> None:
     if plan is not None:
         print(plan.describe())
     saga_samples = args.saga_samples if reducer.uses_sample_idx else 0
+    def build_step(rcfg):
+        """Step builder keyed on the (possibly ladder-escalated) robust
+        config; the state STRUCTURE must not change across rebuilds
+        (launch/health.py forbids structure-changing ladder fields)."""
+        if decentralized:
+            fn, _, _ = steps_lib.make_decentralized_train_step(
+                model, rcfg, train, mesh, sched,
+                saga_num_samples=saga_samples)
+        else:
+            fn, _, _ = steps_lib.make_train_step(
+                model, rcfg, train, mesh, saga_num_samples=saga_samples)
+        return steps_lib.compile_train_step(fn)
+
     if decentralized:
         # Schedule-level report: per-round spectral gaps + the joint gap.
         print(f"schedule: {sched.describe()}")
-        step_fn, sspecs, sstructs = steps_lib.make_decentralized_train_step(
-            model, robust, train, mesh, sched, saga_num_samples=saga_samples)
-    else:
-        step_fn, sspecs, sstructs = steps_lib.make_train_step(
-            model, robust, train, mesh, saga_num_samples=saga_samples)
 
     key = jax.random.PRNGKey(0)
     with compat.use_mesh(mesh):
@@ -224,6 +268,8 @@ def main() -> None:
         if plan is not None:
             state["staleness"] = participation_lib.init_staleness(
                 plan.num_clients)
+        if robust.guards:
+            state["health"] = guards_lib.init_health()
         wspec = robust.message_spec(params0, batch_ndim=0)
         if robust.wire_format().error_feedback:
             # Per-client error-feedback residual for 1-bit wire formats.
@@ -240,7 +286,7 @@ def main() -> None:
                 print(f"resumed full train state from step {step0}")
         # State donation lives in the step compiler (launch/steps.py):
         # params, opt moments and the VR state are all in arg 0.
-        jstep = steps_lib.compile_train_step(step_fn)
+        jstep = build_step(robust)
         log_dir = args.log_dir or None
         t0 = time.time()
 
@@ -254,8 +300,22 @@ def main() -> None:
                   f"agg_norm={row['agg_norm']:.4f}{extra} "
                   f"({wall/(step_i-start+1):.2f}s/step)")
 
+        # Run-health monitor (DESIGN.md Sec. 13): consumes every flushed
+        # metric row; guards runs flush in small batches so verdicts reach
+        # the host within a few steps of being issued in-graph.
+        monitor = health_lib.RunHealth(
+            patience=args.rollback_patience, blowup=args.loss_blowup,
+            ladder=args.degradation_ladder) if args.guards else None
+        last_row: dict = {}
+
+        def on_row(row):
+            last_row.update(row)
+            if monitor is not None:
+                monitor.observe(row)
+
         logger = telemetry.RunLogger(
             log_dir, log_every=args.log_every,
+            flush_every=4 if args.guards else 32, on_row=on_row,
             console=console, console_every=max(args.steps // 10, 1))
         if log_dir is not None:
             # AOT-lower the step once so meta.json records the compiled
@@ -287,7 +347,8 @@ def main() -> None:
         timer = telemetry.PhaseTimer()
         prof = None
         profile_until = 0
-        for i in range(start, args.steps):
+        i = start
+        while i < args.steps:
             if args.profile_steps and i == start + 1:
                 # Skip the compile step, then trace N steady-state steps.
                 prof = compat.profiler_trace(os.path.join(log_dir, "profile"))
@@ -306,14 +367,72 @@ def main() -> None:
                 logger.log_step(i, metrics, host=host)
                 if ckpt and args.checkpoint_every and (i + 1) % args.checkpoint_every == 0:
                     ckpt.save_train_state(i + 1, state)
+                    if monitor is None or monitor.healthy:
+                        # Healthy as of the last flush -> rollback anchor.
+                        ckpt.mark_good(i + 1)
             if prof is not None and i + 1 >= profile_until:
                 jax.block_until_ready(jax.tree_util.tree_leaves(state))
                 prof.__exit__(None, None, None)
                 prof = None
+            i += 1
+            if (monitor is not None and monitor.rollback_pending
+                    and ckpt is not None
+                    and monitor.rollbacks < args.max_rollbacks):
+                # Auto-rollback (DESIGN.md Sec. 13): drain the logger so the
+                # monitor has seen every issued verdict, restore the last
+                # good checkpoint, climb one ladder rung, and re-descend
+                # with the SAME seeded key schedule -- deterministic, so
+                # the continuation is bit-exact with a fresh resumed run
+                # (tests/test_rollback.py).
+                logger.flush()
+                gstep, state = ckpt.restore_last_good(state)
+                monitor.on_rollback()
+                if gstep is None:
+                    print("run unhealthy but no restorable checkpoint; "
+                          "continuing without rollback")
+                else:
+                    escalated = monitor.escalate(robust)
+                    if escalated != robust:
+                        robust = escalated
+                        jstep = build_step(robust)
+                        print(f"rollback #{monitor.rollbacks}: restored "
+                              f"step {gstep}, escalated to "
+                              f"aggregator={robust.aggregator} "
+                              f"trim={robust.trim} "
+                              f"guard_multiplier={robust.guard_multiplier}")
+                    else:
+                        print(f"rollback #{monitor.rollbacks}: restored "
+                              f"step {gstep} (ladder exhausted or empty)")
+                    i = gstep
+            elif monitor is not None and monitor.rollback_pending:
+                # No checkpointing or rollback budget spent: reset the
+                # counter so the warning does not fire every step.
+                monitor.dismiss()
+                print("run unhealthy; no rollback available "
+                      f"(checkpointing={'on' if ckpt else 'off'}, "
+                      f"rollbacks={monitor.rollbacks}/{args.max_rollbacks})")
         if prof is not None:
             jax.block_until_ready(jax.tree_util.tree_leaves(state))
             prof.__exit__(None, None, None)
         logger.close()
+        if log_dir is not None and args.guards:
+            # Fold the resilience outcome into meta.json so offline tooling
+            # (and the CI chaos job) can assert on it without parsing the
+            # whole metrics stream.
+            meta_path = os.path.join(log_dir, "meta.json")
+            try:
+                with open(meta_path) as f:
+                    meta = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                meta = {}
+            meta["resilience"] = {
+                "rejected_rounds": last_row.get("rejected_rounds", 0.0),
+                "final_loss": last_row.get("loss"),
+                **monitor.summary(),
+            }
+            with open(meta_path, "w") as f:
+                json.dump(meta, f, indent=2, sort_keys=True, default=str)
+                f.write("\n")
     print(f"done ({args.steps - start} steps, {time.time() - t0:.1f}s)")
 
 

@@ -19,8 +19,8 @@ aggregators build diagnostics structs), so nothing here may import
 from repro.telemetry.diagnostics import (AggDiagnostics, diagnostics_metrics,
                                          flat_diagnostics, masked_diagnostics,
                                          reduce_masked_diagnostics)
-from repro.telemetry.metrics import (consensus_dist, honest_variance,
-                                     staleness_metrics)
+from repro.telemetry.metrics import (consensus_dist, health_metrics,
+                                     honest_variance, staleness_metrics)
 from repro.telemetry.profiling import PhaseTimer
 from repro.telemetry.runlogger import RunLogger
 
@@ -31,6 +31,7 @@ __all__ = [
     "consensus_dist",
     "diagnostics_metrics",
     "flat_diagnostics",
+    "health_metrics",
     "honest_variance",
     "masked_diagnostics",
     "reduce_masked_diagnostics",

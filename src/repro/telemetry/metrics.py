@@ -55,6 +55,24 @@ def consensus_dist(params, honest_mask: jnp.ndarray,
     return cons / num_honest
 
 
+def health_metrics(health, accepted) -> dict:
+    """Round-health scalars from the guards verdict (DESIGN.md Sec. 13).
+
+    ``health``: the ``(4,)`` ``[ema, ema_sq, rejected, seen]`` vector
+    carried in the train state (``repro.core.guards``), or ``None`` when
+    guards are off -- returns ``{}`` so the metric keys only appear on
+    guarded runs (same conditional shape as ``staleness_metrics``).
+    ``accepted``: this round's scalar verdict (1.0 accept / 0.0 reject).
+    """
+    if health is None:
+        return {}
+    return {
+        "round_accepted": accepted.astype(jnp.float32),
+        "rejected_rounds": health[2],
+        "agg_norm_ema": health[0],
+    }
+
+
 def staleness_metrics(slot_staleness) -> dict:
     """``{"mean_staleness": ...}`` from the round's per-slot staleness
     counters, or ``{}`` under full participation (``None``) -- the one

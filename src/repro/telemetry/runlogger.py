@@ -18,6 +18,7 @@ batching drives the progress line, nothing is written to disk.
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
 from typing import Any, Callable, Optional
@@ -41,23 +42,37 @@ class RunLogger:
     many buffered rows trigger a batched ``device_get`` + write.
     ``console``: optional callback ``(step, row_dict) -> None`` invoked at
     flush time for the rows where ``console_every`` hits (the train loop's
-    progress printing, moved off the hot path).
+    progress printing, moved off the hot path).  ``on_row``: optional
+    callback ``(row_dict) -> None`` invoked for EVERY flushed row in step
+    order -- the run-health monitor (``launch/health.py``) hangs off this,
+    inheriting the batched device_get instead of adding its own syncs.
+
+    Crash safety: a final flush is registered with ``atexit`` at
+    construction (and unregistered on ``close``), so rows buffered when
+    the process dies mid-run -- an exception in the train loop, a
+    SystemExit -- still land in ``metrics.jsonl`` instead of evaporating
+    with the buffer (tests/test_telemetry.py pins this).
     """
 
     def __init__(self, log_dir: Optional[str] = None, *, log_every: int = 1,
                  flush_every: int = 32,
                  console: Optional[Callable[[int, dict], None]] = None,
-                 console_every: int = 0):
+                 console_every: int = 0,
+                 on_row: Optional[Callable[[dict], None]] = None):
         self.log_dir = log_dir
         self.log_every = max(int(log_every), 1)
         self.flush_every = max(int(flush_every), 1)
         self.console = console
         self.console_every = max(int(console_every), 0)
+        self.on_row = on_row
         self._buf: list[tuple[int, dict, dict]] = []
         self._file = None
         if log_dir is not None:
             os.makedirs(log_dir, exist_ok=True)
             self._file = open(os.path.join(log_dir, "metrics.jsonl"), "w")
+        # Flush-on-crash: close() unregisters; after close the buffer is
+        # empty and the handle None, so a leftover registration is a no-op.
+        atexit.register(self.close)
 
     # -- meta ---------------------------------------------------------------
 
@@ -99,6 +114,8 @@ class RunLogger:
             row.update({k: _jsonable(v) for k, v in host.items()})
             if self._file is not None and step % self.log_every == 0:
                 self._file.write(json.dumps(row) + "\n")
+            if self.on_row is not None:
+                self.on_row(row)
             if (self.console is not None and self.console_every
                     and step % self.console_every == 0):
                 self.console(step, row)
@@ -110,6 +127,7 @@ class RunLogger:
         if self._file is not None:
             self._file.close()
             self._file = None
+        atexit.unregister(self.close)
 
     def __enter__(self) -> "RunLogger":
         return self

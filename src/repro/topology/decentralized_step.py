@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro import telemetry
 from repro.core import attacks as attack_lib
+from repro.core import guards as guards_lib
 from repro.core import packing
 from repro.core.robust_step import (FederatedState, _flatten_concat,
                                     _local_leaf_ids)
@@ -154,6 +155,23 @@ def build_exchange(
         # weight exactly 0 on its mask COLUMN) remove it from each masked
         # aggregation without slicing the sender axis.
         byz = jax.tree_util.tree_map(jnp.zeros_like, mean)
+    elif name == "nan":
+        # Fault injection (DESIGN.md Sec. 13): every real coordinate of the
+        # Byzantine edges is NaN; packed padding stays 0 (the trajectory
+        # pin rationale of attacks._fault_fill).
+        byz = attack_lib._fault_fill(
+            lambda m: jnp.full_like(m, jnp.nan), mean, spec)
+    elif name == "inf_overflow":
+        byz = attack_lib._fault_fill(
+            lambda m: jnp.where(m < 0, -attack_lib.OVERFLOW_MAGNITUDE,
+                                attack_lib.OVERFLOW_MAGNITUDE
+                                ).astype(m.dtype), mean, spec)
+    elif name == "bitflip":
+        # Seeded coordinate corruption, hashed per SENDER: (R, S, ...)
+        # payloads built from each receiver's neighborhood mean.
+        byz = attack_lib.bitflip_edges(
+            mean, jnp.arange(mask.shape[1], dtype=jnp.int32),
+            prob=cfg.bitflip_prob, seed=cfg.bitflip_seed, spec=spec)
     elif name == "gaussian":
         if key is None:
             raise ValueError("gaussian attack needs a key")
@@ -342,8 +360,10 @@ def make_decentralized_step(
         if wire_fmt.error_feedback:
             d = cfg.message_spec(params, batch_ndim=0).padded_dim
             ef = jnp.zeros((num_clients, d), jnp.float32)
+        health = guards_lib.init_health() if cfg.guards else None
         return FederatedState(nodes, opt_state, vr_state,
-                              jnp.zeros((), jnp.int32), key, staleness, ef)
+                              jnp.zeros((), jnp.int32), key, staleness, ef,
+                              health)
 
     def round_inputs(state):
         """The round's (data, vr rows, honest staleness, cohort) -- the
@@ -448,13 +468,27 @@ def make_decentralized_step(
             lambda g: jnp.zeros((n,) + g.shape[1:], g.dtype).at[:wh].set(g),
             honest)
 
+        guard_info = {}
+
         def gossip_agg(wire):
             exchange = build_exchange(wire, attack_cfg, wmask, is_byz,
                                       k_attack)
+            gw = wmask
+            if cfg.guards:
+                # Per-edge containment (DESIGN.md Sec. 13): each receiver
+                # quarantines its non-finite / over-magnitude in-edges; the
+                # (R, S) validity mask folds into the neighbor mask (weight
+                # exactly 0, clean rounds keep wmask bitwise).
+                emask = guards_lib.pairwise_guard_mask(
+                    exchange, wmask, multiplier=cfg.guard_multiplier)
+                exchange = guards_lib.sanitize_rows(exchange, emask)
+                gw = wmask * emask
+                guard_info["quarantined_edges"] = jnp.sum(
+                    (wmask > 0) * (1.0 - emask))
             out = masked_aggregate(
-                cfg.aggregator, exchange, wmask, perleaf=True,
+                cfg.aggregator, exchange, gw, perleaf=True,
                 diagnostics=cfg.diagnostics,
-                **_agg_opts(cfg, mixing * wmask))
+                **_agg_opts(cfg, mixing * gw))
             return out if cfg.diagnostics else (out, None)
 
         if gossip == "params":
@@ -464,17 +498,34 @@ def make_decentralized_step(
                 msgs, state.opt_state, state.params, state.step)
             half = optim_lib.apply_updates(state.params, updates)
             params, diag = gossip_agg(half)
+            watch = params
         else:
             agg, diag = gossip_agg(msgs)
             updates, opt_state = optimizer.update(
                 agg, state.opt_state, state.params, state.step)
             params = optim_lib.apply_updates(state.params, updates)
+            watch = agg
+
+        health = state.health
+        if cfg.guards:
+            # Round verdict on the gossip output's global norm; a rejected
+            # round holds every node's params/opt/VR (same hold semantics
+            # as the master step).
+            accept, health = guards_lib.round_verdict(
+                guards_lib.tree_norm(watch), state.health,
+                decay=cfg.reject_ema, zmax=cfg.reject_zmax,
+                warmup=cfg.reject_warmup)
+            params, opt_state, vr_state = guards_lib.select_tree(
+                accept, (params, opt_state, vr_state),
+                (state.params, state.opt_state, state.vr))
+            guard_info.update(telemetry.health_metrics(health, accept))
 
         new_state = FederatedState(params, opt_state, vr_state,
-                                   state.step + 1, key, staleness, state.ef)
+                                   state.step + 1, key, staleness, state.ef,
+                                   health)
         metrics = {"honest_variance": var,
                    "consensus_dist": consensus(params), **vr_metrics,
-                   **telemetry.staleness_metrics(slot_stal)}
+                   **telemetry.staleness_metrics(slot_stal), **guard_info}
         if diag is not None:
             metrics.update(telemetry.diagnostics_metrics(
                 telemetry.reduce_masked_diagnostics(diag, wmask)))
@@ -533,13 +584,26 @@ def make_decentralized_step(
         # Byzantine node rows carry zeros until the attack replaces them.
         msgs = jnp.zeros((n,) + honest.shape[1:], honest.dtype).at[:wh].set(honest)
 
+        guard_info = {}
+
         def flat_gossip(wire_buf):
             exchange = build_exchange(wire_buf, attack_cfg, wmask, is_byz,
                                       k_attack, spec=spec)     # (N, N, D)
+            gw = wmask
+            if cfg.guards:
+                # Per-edge containment on the dequantized wire (same fold
+                # as the per-leaf step; guard AFTER the wire roundtrip so
+                # the mask judges what the rules consume).
+                emask = guards_lib.pairwise_guard_mask(
+                    exchange, wmask, multiplier=cfg.guard_multiplier)
+                exchange = guards_lib.sanitize_rows(exchange, emask)
+                gw = wmask * emask
+                guard_info["quarantined_edges"] = jnp.sum(
+                    (wmask > 0) * (1.0 - emask))
             out = masked_aggregate_flat(
-                cfg.aggregator, exchange, wmask, spec=spec,
+                cfg.aggregator, exchange, gw, spec=spec,
                 diagnostics=cfg.diagnostics,
-                **_agg_opts(cfg, mixing * wmask))              # (N, D) f32
+                **_agg_opts(cfg, mixing * gw))                 # (N, D) f32
             out, diag = out if cfg.diagnostics else (out, None)
             return spec.unpack(out, batch_ndim=1), diag
 
@@ -555,17 +619,32 @@ def make_decentralized_step(
             # safe (the old-XLA hazard only bites sharded worker axes).
             wire = wire.at[:wh].set(wire_transmit(wire[:wh]))
             params, diag = flat_gossip(wire)
+            watch = params
         else:
             agg, diag = flat_gossip(msgs)
             updates, opt_state = optimizer.update(
                 agg, state.opt_state, state.params, state.step)
             params = optim_lib.apply_updates(state.params, updates)
+            watch = agg
+
+        health = state.health
+        if cfg.guards:
+            # Round verdict + hold (same semantics as the per-leaf step).
+            accept, health = guards_lib.round_verdict(
+                guards_lib.tree_norm(watch), state.health,
+                decay=cfg.reject_ema, zmax=cfg.reject_zmax,
+                warmup=cfg.reject_warmup)
+            params, opt_state, vr_state, ef_state = guards_lib.select_tree(
+                accept, (params, opt_state, vr_state, ef_state),
+                (state.params, state.opt_state, state.vr, state.ef))
+            guard_info.update(telemetry.health_metrics(health, accept))
 
         new_state = FederatedState(params, opt_state, vr_state,
-                                   state.step + 1, key, staleness, ef_state)
+                                   state.step + 1, key, staleness, ef_state,
+                                   health)
         metrics = {"honest_variance": var,
                    "consensus_dist": consensus(params), **vr_metrics,
-                   **telemetry.staleness_metrics(slot_stal)}
+                   **telemetry.staleness_metrics(slot_stal), **guard_info}
         if diag is not None:
             metrics.update(telemetry.diagnostics_metrics(
                 telemetry.reduce_masked_diagnostics(diag, wmask)))
@@ -681,10 +760,20 @@ def decentralized_aggregate(
                                             tiled=False)
             exchange = build_exchange(stacked, attack_cfg, mask_row, is_byz,
                                       k, spec=spec)           # (1, S, D)
+            gm_row = mask_row
+            if getattr(cfg, "guards", False):
+                # Per-edge containment (DESIGN.md Sec. 13): this node's
+                # (1, S) validity mask -- coordinate partials psum over the
+                # MODEL axes (the gathered rows are model shards).
+                emask = guards_lib.pairwise_guard_mask(
+                    exchange, mask_row, multiplier=cfg.guard_multiplier,
+                    axis_names=model_axes)
+                exchange = guards_lib.sanitize_rows(exchange, emask)
+                gm_row = mask_row * emask
             agg = masked_aggregate_flat(
-                cfg.aggregator, exchange, mask_row, spec=spec,
+                cfg.aggregator, exchange, gm_row, spec=spec,
                 diagnostics=diag_on,
-                **_agg_opts(cfg, mix_row * mask_row,
+                **_agg_opts(cfg, mix_row * gm_row,
                             axis_names=model_axes, sync_axes=worker_axes))
             if diag_on:
                 agg, diag = agg
@@ -698,10 +787,17 @@ def decentralized_aggregate(
             lambda g: compat.all_gather(g, worker_axes, axis=0, tiled=False),
             grads)
         exchange = build_exchange(stacked, attack_cfg, mask_row, is_byz, k)
+        gm_row = mask_row
+        if getattr(cfg, "guards", False):
+            emask = guards_lib.pairwise_guard_mask(
+                exchange, mask_row, multiplier=cfg.guard_multiplier,
+                axis_names=model_axes)
+            exchange = guards_lib.sanitize_rows(exchange, emask)
+            gm_row = mask_row * emask
         agg = masked_aggregate(
-            cfg.aggregator, exchange, mask_row, perleaf=True,
+            cfg.aggregator, exchange, gm_row, perleaf=True,
             diagnostics=diag_on,
-            **_agg_opts(cfg, mix_row * mask_row,
+            **_agg_opts(cfg, mix_row * gm_row,
                         axis_names=model_axes, sync_axes=worker_axes))
         if diag_on:
             agg, diag = agg
@@ -743,11 +839,21 @@ def decentralized_aggregate(
     k = jax.random.fold_in(key, wid) if key is not None else None
     exchange = build_exchange(z_local, attack_cfg, mask_all,
                               is_byz, k)                      # (S, S, chunk)
+    gm_all = mask_all
+    if getattr(cfg, "guards", False):
+        # All receivers' (S, S) validity mask at once: the slice-local
+        # partial stats psum over worker+model axes, so every device holds
+        # the same replicated mask and the per-receiver folds agree.
+        emask = guards_lib.pairwise_guard_mask(
+            exchange, mask_all, multiplier=cfg.guard_multiplier,
+            axis_names=comm_axes)
+        exchange = guards_lib.sanitize_rows(exchange, emask)
+        gm_all = mask_all * emask
     diag = None
     if cfg.aggregator == "geomed_blockwise":
         seg = _local_leaf_ids(leaf_sizes, pad, w, worker_axes)
         agg = masked_weiszfeld_segments(
-            exchange, mask_all, seg, len(leaf_sizes) + 1,
+            exchange, gm_all, seg, len(leaf_sizes) + 1,
             axis_names=comm_axes, max_iters=cfg.weiszfeld_iters,
             tol=cfg.weiszfeld_tol)
         if diag_on:
@@ -755,17 +861,18 @@ def decentralized_aggregate(
             # aggregate (the per-block loop exposes no iteration info;
             # the neutral residual/iters defaults apply).
             diag = telemetry.masked_diagnostics(
-                exchange, agg, mask_all, axis_names=comm_axes)
+                exchange, agg, gm_all, axis_names=comm_axes)
     elif diag_on:
         out = masked_aggregate_flat(
-            cfg.aggregator, exchange, mask_all, diagnostics=True,
-            **_agg_opts(cfg, mixing_all * mask_all,
+            cfg.aggregator, exchange, gm_all, diagnostics=True,
+            **_agg_opts(cfg, mixing_all * gm_all,
                         axis_names=comm_axes))
         agg, diag = out
     elif _use_topology_kernel(use_topology_kernel) and (
             cfg.aggregator == "trimmed_mean") and row_weights is None:
         # (The fused kernel reduces by 0/1 mask counts, so fractional
-        # staleness weights route to the jnp masked engine instead.)
+        # staleness weights route to the jnp masked engine instead; the
+        # guard mask stays 0/1, so guarded rounds keep the kernel.)
         # PR-3 leftover closed: the fused Pallas masked-neighborhood
         # reduction runs the coordinate-separable trimmed mean on the
         # (R, S, chunk) exchange slab in ONE HBM sweep -- no sort, no mask
@@ -773,11 +880,11 @@ def decentralized_aggregate(
         # coordinate-separable), so it drops straight into shard_map.
         from repro.kernels import ops as kernel_ops
         agg = kernel_ops.masked_neighbor_reduce(
-            exchange, mask_all, trim=cfg.trim)
+            exchange, gm_all, trim=cfg.trim)
     else:
         agg = masked_aggregate_flat(
-            cfg.aggregator, exchange, mask_all,
-            **_agg_opts(cfg, mixing_all * mask_all,
+            cfg.aggregator, exchange, gm_all,
+            **_agg_opts(cfg, mixing_all * gm_all,
                         axis_names=comm_axes))
     agg = agg.astype(jnp.float32)                             # (R, chunk)
     mine = compat.all_to_all(agg, worker_axes, split_axis=0,

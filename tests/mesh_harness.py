@@ -6,6 +6,12 @@ XLA_FLAGS=--xla_force_host_platform_device_count=<devices> while the main
 pytest process keeps its default single device.  Inline test programs should
 go through ``repro.compat`` (make_mesh / use_mesh / shard_map) so they run on
 every supported jax version.
+
+Launches are retried with bounded exponential backoff: a loaded CI box can
+transiently kill a subprocess spawn or starve it past the per-attempt
+timeout, and one flaky launch should not fail the suite.  The final
+failure's assertion message carries every attempt's outcome plus the last
+child's stderr tail, so the real error lands in the pytest report.
 """
 from __future__ import annotations
 
@@ -13,20 +19,45 @@ import os
 import subprocess
 import sys
 import textwrap
+import time
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def run_py(code: str, devices: int = 8, timeout: int = 420,
-           extra_env: dict | None = None) -> str:
+           extra_env: dict | None = None, attempts: int = 3,
+           backoff: float = 2.0) -> str:
     """Run ``code`` (dedented) in a subprocess with ``devices`` forced host
-    devices and PYTHONPATH=src; assert exit 0 and return stdout."""
+    devices and PYTHONPATH=src; assert exit 0 and return stdout.
+
+    Retries up to ``attempts`` times on non-zero exit or per-attempt
+    timeout, sleeping ``backoff``, ``2*backoff``, ... between attempts."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     if extra_env:
         env.update(extra_env)
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, timeout=timeout, env=env)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
-    return out.stdout
+    program = textwrap.dedent(code)
+    outcomes: list[str] = []
+    stderr_tail = ""
+    for attempt in range(1, max(int(attempts), 1) + 1):
+        try:
+            out = subprocess.run([sys.executable, "-c", program],
+                                 capture_output=True, text=True,
+                                 timeout=timeout, env=env)
+        except subprocess.TimeoutExpired as e:
+            outcomes.append(f"attempt {attempt}: timeout after {timeout}s")
+            err = e.stderr
+            if isinstance(err, bytes):
+                err = err.decode(errors="replace")
+            stderr_tail = (err or "")[-3000:]
+        else:
+            if out.returncode == 0:
+                return out.stdout
+            outcomes.append(f"attempt {attempt}: exit {out.returncode}")
+            stderr_tail = out.stderr[-3000:]
+        if attempt < attempts:
+            time.sleep(backoff * (2 ** (attempt - 1)))
+    raise AssertionError(
+        f"subprocess failed after {len(outcomes)} attempt(s) "
+        f"({'; '.join(outcomes)})\nstderr tail:\n{stderr_tail}")

@@ -1,0 +1,276 @@
+"""Property suite for the fault-containment guards (DESIGN.md Sec. 13).
+
+Bit-identity contract pinned here (the Sec. 13 fine print):
+
+- ``guards=False`` is the pre-PR code path, byte-identical by construction
+  (no guard code runs) -- the packed-vs-perleaf pins in test_packing.py
+  already cover it.
+- With guards ON and a clean (all-valid) round, the ENGINE-level call is
+  bit-identical to the raw engine under jit for every registry aggregator
+  (``guarded_flat_call`` selects the RAW double-compute output, with
+  optimization barriers keeping XLA from multi-output-fusing the two
+  reductions).
+- STEP-level guards-on/off bit-identity is pinned EAGERLY: under jit the
+  guards-off graph can fuse the message producers into its reduction with
+  FMA contraction, which no differently-shaped graph can reproduce (~1e-9
+  on mean); eager execution removes the fusion variable and pins the
+  mathematical claim -- same messages, same aggregate, same trajectory.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregators as agg_lib
+from repro.core import guards, packing
+from repro.core.robust_step import RobustConfig, make_federated_step
+from repro.data import ijcnn1_like, logreg_loss, partition
+from repro.optim import get_optimizer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(name, **kw):
+    kw.setdefault("weiszfeld_iters", 16)
+    kw.setdefault("num_groups", 3)
+    kw.setdefault("num_byzantine", kw.pop("byz", 2))
+    return RobustConfig(aggregator=name, **kw)
+
+
+def _flat_fn(name, spec, **kw):
+    return _cfg(name, **kw).flat_aggregator_fn(spec)
+
+
+@pytest.fixture(scope="module")
+def buf_spec():
+    tree = {"a": jax.random.normal(KEY, (8, 22)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (8, 3, 5))}
+    spec = packing.pack_spec(tree)
+    return spec.pack(tree), spec
+
+
+@pytest.fixture(scope="module")
+def logreg():
+    data = ijcnn1_like(jax.random.PRNGKey(0), n=600)
+    wd = partition({"a": data.x, "b": data.y}, 8, seed=1)
+    return logreg_loss(0.01), {"a": data.x, "b": data.y}, wd
+
+
+# ---------------------------------------------------------------------------
+# Engine-level bit-identity under jit (clean rounds).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", agg_lib.AGGREGATOR_NAMES)
+def test_engine_guarded_call_bitwise_identical_under_jit(name, buf_spec):
+    buf, spec = buf_spec
+    flat_fn = _flat_fn(name, spec)
+    mask = guards.guard_mask(buf)
+    np.testing.assert_array_equal(np.asarray(mask), 1.0)  # honest data
+    raw = jax.jit(flat_fn)(buf)
+    grd = jax.jit(lambda b, m: guards.guarded_flat_call(flat_fn, b, m))(
+        buf, mask)
+    np.testing.assert_array_equal(np.asarray(raw), np.asarray(grd), err_msg=name)
+
+
+@pytest.mark.parametrize("name", agg_lib.AGGREGATOR_NAMES)
+def test_engine_guarded_call_bitwise_identical_weighted(name, buf_spec):
+    buf, spec = buf_spec
+    flat_fn = _flat_fn(name, spec)
+    rw = jnp.array([1.0, 0.5, 2.0, 1.0, 0.0, 1.0, 1.5, 1.0], jnp.float32)
+    mask = guards.guard_mask(buf, base_weights=rw)
+    raw = jax.jit(lambda b: flat_fn(b, row_weights=rw))(buf)
+    grd = jax.jit(lambda b, m: guards.guarded_flat_call(
+        flat_fn, b, m, row_weights=rw))(buf, mask)
+    np.testing.assert_array_equal(np.asarray(raw), np.asarray(grd), err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Step-level bit-identity, eager (every registry aggregator).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", agg_lib.AGGREGATOR_NAMES)
+def test_step_guards_onoff_bitwise_identical_eager(name, logreg):
+    loss, _, wd = logreg
+    outs = {}
+    for on in (False, True):
+        cfg = _cfg(name, vr="saga", attack="none", byz=0, guards=on)
+        init_fn, step_fn = make_federated_step(loss, wd, cfg,
+                                               get_optimizer("sgd", 0.05))
+        st = init_fn({"w": jnp.zeros((22,), jnp.float32)},
+                     jax.random.PRNGKey(3))
+        with jax.disable_jit():
+            for _ in range(2):
+                st, m = step_fn(st)
+        outs[on] = st
+        if on:
+            assert float(m["quarantined_rows"]) == 0.0
+            assert float(m["round_accepted"]) == 1.0
+    np.testing.assert_array_equal(np.asarray(outs[False].params["w"]),
+                                  np.asarray(outs[True].params["w"]),
+                                  err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# The guard mask itself.
+# ---------------------------------------------------------------------------
+
+def test_nonfinite_row_gets_weight_exactly_zero(buf_spec):
+    buf, _ = buf_spec
+    for poison in (jnp.nan, jnp.inf, -jnp.inf):
+        bad = buf.at[3, 7].set(poison)   # ONE poisoned coordinate
+        mask = np.asarray(guards.guard_mask(bad))
+        assert mask[3] == 0.0
+        expect = np.ones(8); expect[3] = 0.0
+        np.testing.assert_array_equal(mask, expect)
+
+
+def test_magnitude_gate_quarantines_overflow_row(buf_spec):
+    buf, _ = buf_spec
+    bad = buf.at[5].set(1e30)
+    mask = np.asarray(guards.guard_mask(bad, multiplier=10.0))
+    assert mask[5] == 0.0 and mask.sum() == 7.0
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_magnitude_gate_spares_honest_rows(seed):
+    """Seeded honest-only data: the x10 gate never quarantines anything --
+    and even a x3 gate stays within the Byzantine budget (< W/2)."""
+    z = jax.random.normal(jax.random.PRNGKey(seed), (10, 33))
+    assert float(jnp.sum(1.0 - guards.guard_mask(z, multiplier=10.0))) == 0.0
+    q3 = float(jnp.sum(1.0 - guards.guard_mask(z, multiplier=3.0)))
+    assert q3 < 5.0, q3
+
+
+def test_zero_weight_rows_excluded_from_median(buf_spec):
+    """base_weights=0 rows (dropped cohort slots) neither poison the median
+    norm nor count as quarantined by the guard."""
+    buf, _ = buf_spec
+    rw = jnp.ones((8,), jnp.float32).at[2].set(0.0)
+    bad = buf.at[2].set(jnp.nan)   # dead slot carries garbage
+    mask = np.asarray(guards.guard_mask(bad, base_weights=rw))
+    np.testing.assert_array_equal(mask, np.ones(8) - np.eye(8)[2])
+
+
+def test_sanitize_rows_zeroes_only_masked_rows(buf_spec):
+    buf, _ = buf_spec
+    bad = buf.at[1].set(jnp.inf)
+    mask = guards.guard_mask(bad)
+    clean = np.asarray(guards.sanitize_rows(bad, mask))
+    np.testing.assert_array_equal(clean[1], 0.0)
+    np.testing.assert_array_equal(clean[0], np.asarray(buf)[0])
+    assert np.isfinite(clean).all()
+
+
+def test_pairwise_guard_mask_is_per_receiver():
+    """The decentralized gate medians over each receiver's own neighborhood:
+    a poisoned SENDER is quarantined on exactly its live edges."""
+    ex = jax.random.normal(KEY, (6, 6, 9))
+    wmask = jnp.ones((6, 6)) - jnp.eye(6)
+    bad = ex.at[:, 4].set(jnp.nan)          # sender 4 poisons every edge
+    emask = np.asarray(guards.pairwise_guard_mask(bad, wmask))
+    np.testing.assert_array_equal(emask[:, 4] * np.asarray(wmask)[:, 4], 0.0)
+    keep = np.ones((6, 6)); keep[:, 4] = 0.0
+    np.testing.assert_array_equal(emask * np.asarray(wmask),
+                                  keep * np.asarray(wmask))
+
+
+# ---------------------------------------------------------------------------
+# Round-health verdict.
+# ---------------------------------------------------------------------------
+
+def test_round_verdict_warmup_accepts_then_spike_rejected():
+    health = guards.init_health()
+    for _ in range(8):   # warmup: everything finite is accepted
+        accept, health = guards.round_verdict(jnp.float32(1.0), health,
+                                              warmup=8)
+        assert bool(accept)
+    accept, health = guards.round_verdict(jnp.float32(100.0), health,
+                                          warmup=8)
+    assert not bool(accept)
+    assert float(health[2]) == 1.0          # rejected counter
+    assert float(health[0]) == 1.0          # EMA held on the rejected round
+    accept, health = guards.round_verdict(jnp.float32(1.04), health, warmup=8)
+    assert bool(accept)
+    # The EMA advances on the ACCEPTED round (0.9 * 1.0 + 0.1 * 1.04).
+    np.testing.assert_allclose(float(health[0]), 1.004, rtol=1e-5)
+
+
+def test_round_verdict_nonfinite_always_rejected():
+    health = guards.init_health()
+    for norm in (jnp.float32(jnp.nan), jnp.float32(jnp.inf)):
+        accept, health = guards.round_verdict(norm, health, warmup=8)
+        assert not bool(accept)   # even during warmup
+    assert float(health[2]) == 2.0
+
+
+def test_round_verdict_zmax_nonpositive_is_finite_only_gate():
+    health = guards.init_health()
+    for _ in range(10):
+        accept, health = guards.round_verdict(jnp.float32(1.0), health,
+                                              zmax=0.0, warmup=2)
+        assert bool(accept)
+    accept, _ = guards.round_verdict(jnp.float32(1e6), health, zmax=0.0,
+                                     warmup=2)
+    assert bool(accept)
+
+
+def test_step_level_reject_holds_train_state(logreg):
+    """A rejected round advances step/key/health but holds params, opt
+    moments and the SAGA table bit-exactly (the in-graph select)."""
+    loss, _, wd = logreg
+    cfg = _cfg("geomed", vr="saga", attack="none", byz=0, guards=True,
+               reject_warmup=2)
+    init_fn, step_fn = make_federated_step(loss, wd, cfg,
+                                           get_optimizer("momentum", 0.05))
+    jstep = jax.jit(step_fn)
+    st = init_fn({"w": jnp.zeros((22,), jnp.float32)}, jax.random.PRNGKey(3))
+    for _ in range(3):
+        st, _ = jstep(st)
+    # Re-seed the health EMA to a microscopic norm: the next (honest)
+    # aggregate is a guaranteed z-score outlier.
+    poisoned = st._replace(health=jnp.array([1e-8, 1e-16, 0.0, 10.0],
+                                            jnp.float32))
+    nxt, m = jstep(poisoned)
+    assert float(m["round_accepted"]) == 0.0
+    assert float(m["rejected_rounds"]) == 1.0
+    assert int(nxt.step) == int(poisoned.step) + 1
+    np.testing.assert_array_equal(np.asarray(nxt.params["w"]),
+                                  np.asarray(poisoned.params["w"]))
+    for a, b in zip(jax.tree_util.tree_leaves(nxt.opt_state),
+                    jax.tree_util.tree_leaves(poisoned.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(nxt.vr),
+                    jax.tree_util.tree_leaves(poisoned.vr)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Containment end-to-end (sim master, both engines).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("attack", ["nan", "inf_overflow", "bitflip"])
+@pytest.mark.parametrize("packed", [True, False])
+def test_fault_attacks_contained_on_sim_master(logreg, attack, packed):
+    """byz < W/2 fault rows with guards on: the run stays finite and lands
+    within 2x the attack-free floor; the nan attack with guards OFF
+    destroys the run (non-finite loss)."""
+    loss, batch, wd = logreg
+    def train(cfg, steps=150):
+        init_fn, step_fn = make_federated_step(loss, wd, cfg,
+                                               get_optimizer("sgd", 0.05))
+        st = init_fn({"w": jnp.zeros((22,), jnp.float32)},
+                     jax.random.PRNGKey(3))
+        jstep = jax.jit(step_fn)
+        for _ in range(steps):
+            st, _ = jstep(st)
+        return float(loss(st.params, batch))
+    floor = train(_cfg("geomed", vr="saga", attack="none", byz=0,
+                       packed=packed))
+    guarded = train(_cfg("geomed", vr="saga", attack=attack, byz=3,
+                         packed=packed, guards=True, bitflip_prob=0.5))
+    assert np.isfinite(guarded)
+    assert guarded <= 2.0 * floor + 1e-3, (attack, guarded, floor)
+    if attack == "nan":
+        bare = train(_cfg("geomed", vr="saga", attack="nan", byz=3,
+                          packed=packed), steps=5)
+        assert not np.isfinite(bare)

@@ -217,6 +217,44 @@ def test_runlogger_console_only_mode(tmp_path):
     assert not os.listdir(tmp_path)
 
 
+def test_runlogger_on_row_sees_every_flushed_row_in_order(tmp_path):
+    rows = []
+    with telemetry.RunLogger(str(tmp_path), log_every=2, flush_every=2,
+                             on_row=rows.append) as lg:
+        for i in range(6):
+            lg.log_step(i, {"loss": jnp.float32(i), "vec": jnp.arange(2.0)})
+    assert [r["step"] for r in rows] == [0, 2, 4]
+    # Rows arrive already materialized (the batched device_get happened):
+    # plain python scalars/lists, safe for a host-side health monitor.
+    assert rows[1]["loss"] == 2.0 and rows[1]["vec"] == [0.0, 1.0]
+
+
+def test_runlogger_atexit_flushes_buffered_rows_on_crash(tmp_path):
+    """A run that dies mid-loop (uncaught exception -> interpreter exit)
+    without ever reaching close() must still land its buffered rows in
+    metrics.jsonl via the atexit hook registered at construction."""
+    import subprocess
+    import sys
+    import textwrap
+    d = os.path.join(tmp_path, "run")
+    code = textwrap.dedent(f"""
+        from repro.telemetry import RunLogger
+        lg = RunLogger({str(d)!r}, flush_every=100)
+        for i in range(3):
+            lg.log_step(i, {{"loss": float(i)}})
+        raise SystemExit(3)   # crash before close(); buffer still pending
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 3, out.stderr
+    rows = [json.loads(l) for l in open(os.path.join(d, "metrics.jsonl"))]
+    assert [r["step"] for r in rows] == [0, 1, 2]
+    assert rows[2]["loss"] == 2.0
+
+
 def test_phase_timer_accumulates_and_drains():
     t = telemetry.PhaseTimer()
     with t.phase("data"):

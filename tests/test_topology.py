@@ -14,7 +14,7 @@ import pytest
 
 from repro.core import RobustConfig, make_federated_step
 from repro.core import aggregators as agg_lib
-from repro.core.attacks import ATTACK_NAMES, AttackConfig
+from repro.core.attacks import ATTACK_NAMES, FAULT_ATTACKS, AttackConfig
 from repro.data import ijcnn1_like, logreg_loss, partition
 from repro.optim import get_optimizer
 from repro.topology import (
@@ -181,11 +181,14 @@ def test_per_edge_attacks_touch_only_byzantine_senders(attack):
     is_byz = jnp.arange(8) >= 6
     msgs = {"g": jax.random.normal(KEY, (8, 5)),
             "h": jax.random.normal(jax.random.PRNGKey(2), (8, 2, 2))}
-    cfg = AttackConfig(name=attack, num_byzantine=2)
+    # bitflip's default per-coordinate probability is sparse by design;
+    # raise it so the few byz coordinates here are guaranteed to flip.
+    cfg = AttackConfig(name=attack, num_byzantine=2, bitflip_prob=0.9)
     ex = build_exchange(msgs, cfg, mask, is_byz, jax.random.PRNGKey(7))
     for k, z in msgs.items():
         e = np.asarray(ex[k])
-        assert np.isfinite(e).all(), (attack, k)
+        if attack not in FAULT_ATTACKS:
+            assert np.isfinite(e).all(), (attack, k)
         # Honest sender columns are the broadcast original message.
         np.testing.assert_array_equal(
             e[:, :6], np.broadcast_to(np.asarray(z)[None, :6], e[:, :6].shape))

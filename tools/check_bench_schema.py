@@ -47,6 +47,25 @@ SCHEMAS = {
                      ("path", "grid"): {"num_samples", "num_clients",
                                         "final_honest_loss"}},
     },
+    "BENCH_step/v5": {
+        "top": {"schema", "jax_version", "platform", "device_count",
+                "sim_workers", "gate", "rows"},
+        "nested": {"gate": {"speedup_cells", "speedup_floor",
+                            "noise_margin", "keyed_by"}},
+        "row": {"path", "aggregator", "packed", "num_workers",
+                "num_byzantine", "vr", "attack", "message_dtype",
+                "vr_state_bytes", "leaves", "coords", "steps", "reps",
+                "wall_us_mean", "wall_us_min"},
+        # v5 adds the fault-containment grid (path="fault"): guards on/off
+        # cells that record whether the honest loss stayed finite, and the
+        # loss value only when it did (a NaN would be unrepresentable in
+        # JSON and fail the numeric check).
+        "row_when": {("path", "sim"): {"num_samples", "num_clients"},
+                     ("path", "grid"): {"num_samples", "num_clients",
+                                        "final_honest_loss"},
+                     ("path", "fault"): {"num_samples", "num_clients",
+                                         "guards", "loss_finite"}},
+    },
     "BENCH_comm_modes/v1": {
         "top": {"schema", "jax_version", "platform", "device_count",
                 "coords_requested", "weiszfeld_iters", "rows"},
